@@ -1,0 +1,51 @@
+//! Failover availability (simulated): reproduce the paper's Figure 7
+//! story interactively — pick a consistency mode and watch the
+//! availability timeline around a leader crash.
+//!
+//! ```bash
+//! cargo run --release --example failover_availability -- leaseguard
+//! cargo run --release --example failover_availability -- loglease
+//! ```
+
+use leaseguard::cluster::Cluster;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::figures::{fig7, Scale};
+use leaseguard::linearizability;
+use leaseguard::report::timeline_chart;
+
+fn main() -> anyhow::Result<()> {
+    let mode: ConsistencyMode = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "leaseguard".into())
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let p = fig7::params_for(&Params::default(), mode, Scale(1.0));
+    println!(
+        "mode={mode}  ET={}ms  Δ={}ms  crash at {}ms",
+        p.election_timeout_us / 1000,
+        p.lease_duration_us / 1000,
+        p.crash_leader_at_us / 1000
+    );
+    let rep = Cluster::new(p.clone()).run();
+    println!(
+        "{}",
+        timeline_chart(
+            &["reads/s", "writes/s"],
+            &[rep.series.ok_rate_per_sec(true), rep.series.ok_rate_per_sec(false)],
+            p.bucket_us as f64 / 1000.0,
+        )
+    );
+    println!(
+        "elections={}  limbo region on new leader={} entries",
+        rep.elections, rep.limbo_len
+    );
+    let during_wait = rep.series.window_totals(true, 1_000_000, 1_500_000);
+    println!(
+        "reads while new leader awaits old lease: {}/{} ok",
+        during_wait.ok,
+        during_wait.ok + during_wait.failed
+    );
+    linearizability::assert_linearizable(&rep.history);
+    println!("linearizability: OK");
+    Ok(())
+}

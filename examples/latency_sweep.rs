@@ -1,0 +1,17 @@
+//! Latency vs network latency (simulated Figure 6): how does each
+//! consistency mechanism's read/write latency respond as one-way
+//! latency grows from LAN to WAN?
+//!
+//! ```bash
+//! cargo run --release --example latency_sweep
+//! ```
+
+use leaseguard::config::Params;
+use leaseguard::figures::{fig6, Scale};
+
+fn main() {
+    std::fs::create_dir_all("results").ok();
+    let report = fig6::run(&Params::default(), Scale(0.5), "results");
+    println!("{report}");
+    println!("CSV written to results/fig6.csv");
+}

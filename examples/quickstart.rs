@@ -1,0 +1,109 @@
+//! Quickstart: the end-to-end driver (DESIGN.md §End-to-end validation).
+//!
+//! Spins up a real 3-node LeaseGuard cluster over TCP (loopback), loads
+//! the AOT-compiled XLA read-admission artifact, runs an open-loop
+//! read/write workload, crashes the leader mid-run, and verifies:
+//!
+//! 1. the new leader serves inherited-lease reads while waiting for the
+//!    old lease to expire (the paper's headline availability claim);
+//! 2. the full client history is linearizable (§6.2 checker);
+//! 3. latency/throughput are reported like the paper's evaluation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use leaseguard::client::run_open_loop;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::figures::realcluster::RealCluster;
+use leaseguard::linearizability;
+use leaseguard::report::{fmt_us, timeline_chart};
+use leaseguard::runtime::EngineHandle;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parameters: the paper's Q2 scenario, gently scaled for a laptop.
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.election_timeout_us = 500_000; // ET = 500ms
+    p.lease_duration_us = 1_000_000; // Δ = 2·ET, exposing the window
+    p.interarrival_us = 500.0; // ~2000 ops/s open loop
+    p.write_fraction = 1.0 / 3.0;
+    p.value_bytes = 1024;
+    p.zipf_a = 0.5;
+    p.duration_us = 3_000_000;
+    p.use_xla_admission = true;
+
+    // 2. XLA admission engine (Layer 1/2, AOT — `make artifacts`).
+    let engine = match EngineHandle::spawn(std::path::Path::new("artifacts")) {
+        Ok(e) => {
+            println!("XLA read-admission engine loaded (batched limbo checks on the leader)");
+            Some(e)
+        }
+        Err(e) => {
+            println!("engine unavailable ({e}); falling back to scalar admission");
+            None
+        }
+    };
+
+    // 3. Real cluster on loopback TCP.
+    let mut cluster = RealCluster::spawn(&p, Duration::ZERO, engine)?;
+    let leader = cluster
+        .wait_for_leader(Duration::from_secs(10))
+        .ok_or_else(|| anyhow::anyhow!("no leader elected"))?;
+    println!("3-node cluster up; node {leader} leads; starting open-loop workload");
+
+    // 4. Open-loop client + mid-run leader crash.
+    let addrs = cluster.addrs.clone();
+    let applies = cluster.applies.clone();
+    let pc = p.clone();
+    let client = std::thread::spawn(move || run_open_loop(&addrs, &pc, Some(applies)));
+    std::thread::sleep(Duration::from_millis(500));
+    println!(">>> crashing the leader (node {leader})");
+    cluster.kill(leader);
+    let rep = client.join().expect("client")?;
+    cluster.shutdown();
+
+    // 5. Report.
+    println!(
+        "\n{}",
+        timeline_chart(
+            &["reads/s", "writes/s"],
+            &[rep.series.ok_rate_per_sec(true), rep.series.ok_rate_per_sec(false)],
+            p.bucket_us as f64 / 1000.0,
+        )
+    );
+    println!(
+        "reads : p50={} p90={} p99={} ok={}",
+        fmt_us(rep.read_latency.p50()),
+        fmt_us(rep.read_latency.p90()),
+        fmt_us(rep.read_latency.p99()),
+        rep.read_latency.count(),
+    );
+    println!(
+        "writes: p50={} p90={} p99={} ok={}",
+        fmt_us(rep.write_latency.p50()),
+        fmt_us(rep.write_latency.p90()),
+        fmt_us(rep.write_latency.p99()),
+        rep.write_latency.count(),
+    );
+    let wait_window = rep.series.window_totals(true, 1_000_000, 1_500_000);
+    println!(
+        "reads during [election, old-lease-expiry): {} ok / {} attempted",
+        wait_window.ok,
+        wait_window.ok + wait_window.failed
+    );
+
+    // 6. Linearizability (§6.2).
+    let viol = linearizability::check(&rep.history);
+    if viol.is_empty() {
+        println!("linearizability: OK over {} operations", rep.history.entries.len());
+        Ok(())
+    } else {
+        for v in viol.iter().take(5) {
+            eprintln!("violation: op {} key {}: {}", v.op, v.key, v.detail);
+        }
+        anyhow::bail!("{} linearizability violations", viol.len());
+    }
+}

@@ -1,0 +1,18 @@
+//! Skew vs read admission (Figure 8): how workload skewness limits the
+//! inherited-lease reads a new leader can serve while awaiting a lease,
+//! judged both by the scalar path and the AOT-compiled XLA engine.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example skew_readmission
+//! ```
+
+use leaseguard::config::Params;
+use leaseguard::figures::{fig8, Scale};
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("results").ok();
+    let report = fig8::run(&Params::default(), Scale(1.0), "results")?;
+    println!("{report}");
+    println!("CSV written to results/fig8.csv");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""AOT bridge: lower the Layer-2 model to HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Writes one artifact per (B, K) shape point plus a manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACT_SHAPES, read_admission
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shape(b: int, k: int) -> str:
+    q = jax.ShapeDtypeStruct((b,), jnp.int32)
+    l = jax.ShapeDtypeStruct((k,), jnp.int32)
+    s = jax.ShapeDtypeStruct((4,), jnp.int32)
+    return to_hlo_text(jax.jit(read_admission).lower(q, l, s))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"model": "read_admission", "abi": "v1", "artifacts": []}
+    for b, k in ARTIFACT_SHAPES:
+        name = f"read_admission_b{b}_k{k}.hlo.txt"
+        path = os.path.join(args.out, name)
+        text = lower_shape(b, k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"file": name, "b": b, "k": k})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

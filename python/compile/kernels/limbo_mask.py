@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: tiled limbo-region conflict mask.
+
+Computes, for a batch of B query-key hashes and K limbo-entry key hashes,
+``mask[b] = any_k(query[b] == limbo[k] and limbo[k] != PAD_SENTINEL)``.
+
+Tiling (the TPU mapping of the paper's ``unordered_set`` check, see
+DESIGN.md §Hardware-Adaptation): the grid is (B/BB, K/BK) with the K axis
+innermost.  Each program instance loads a (BB,) query block and a (BK,)
+limbo block into VMEM, broadcast-compares them on the VPU, and ORs the
+row-reduction into the (BB,) output block, which stays resident in VMEM
+across the K-axis iterations (output BlockSpec ignores the K grid index).
+This is the canonical accumulate-over-inner-grid-axis Pallas pattern —
+the HBM↔VMEM schedule a CUDA version would express with threadblocks.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in DESIGN.md
+§Perf-estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAD_SENTINEL
+
+# Default block sizes. 128 matches the TPU lane width; the VMEM footprint
+# per instance is BB*4 + BK*4 + BB*4 bytes ≈ 1.5 KiB at the defaults.
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _conflict_kernel(q_ref, l_ref, o_ref):
+    """One (BB, BK) tile: o[b] |= any(q[b] == l[k], valid k)."""
+    j = pl.program_id(1)
+    q = q_ref[...]  # (BB,)
+    l = l_ref[...]  # (BK,)
+    valid = l != jnp.int32(PAD_SENTINEL)
+    hit = jnp.any((q[:, None] == l[None, :]) & valid[None, :], axis=1)
+    hit = hit.astype(jnp.int32)
+
+    # First K-tile initializes the accumulator, later tiles OR into it.
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = hit
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] | hit
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k"))
+def limbo_conflict(
+    query_hashes: jnp.ndarray,
+    limbo_hashes: jnp.ndarray,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """Pallas conflict mask. Shapes must be multiples of the block sizes
+    (the Rust caller pads with PAD_SENTINEL / a reserved no-match hash).
+
+    Returns int32[B] of 0/1 (bool is kept out of the kernel ABI so the
+    Rust side reads a plain int32 buffer).
+    """
+    b, k = query_hashes.shape[0], limbo_hashes.shape[0]
+    if b % block_b or k % block_k:
+        raise ValueError(f"shapes ({b},{k}) must be multiples of blocks ({block_b},{block_k})")
+    grid = (b // block_b, k // block_k)
+    return pl.pallas_call(
+        _conflict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(query_hashes.astype(jnp.int32), limbo_hashes.astype(jnp.int32))

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must produce bit-identical (integer/bool) results against the functions
+here, across the shape/dtype sweep in ``python/tests/test_kernel.py``.
+
+The semantics mirror LeaseGuard's read-admission rule (paper §3.3 / §7.1):
+a read of key ``k`` on a new leader that holds an *inherited* lease is
+admitted iff no entry in the limbo region touches ``k``.  Keys are
+represented by 32-bit hashes (the Rust coordinator hashes key strings and
+folds; collisions only ever *reject* a read, never wrongly admit one —
+see rust/src/runtime/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel hash used to pad the limbo-hash vector up to the compiled K.
+# The Rust side reserves this value (it remaps any real key hashing to the
+# sentinel onto a fixed substitute), so padding slots can never match a
+# query.
+PAD_SENTINEL = -2147483648  # i32::MIN
+
+
+def limbo_conflict_ref(query_hashes: jnp.ndarray, limbo_hashes: jnp.ndarray) -> jnp.ndarray:
+    """Reference conflict mask.
+
+    Args:
+      query_hashes: int32[B] — hashes of keys the queued reads touch.
+      limbo_hashes: int32[K] — hashes of keys written in the limbo region,
+        padded with PAD_SENTINEL.
+
+    Returns:
+      bool[B] — True where the read conflicts with the limbo region
+      (i.e. must be rejected while awaiting a lease).
+    """
+    q = query_hashes.reshape(-1, 1)
+    l = limbo_hashes.reshape(1, -1)
+    valid = l != jnp.int32(PAD_SENTINEL)
+    return jnp.any((q == l) & valid, axis=1)
+
+
+def read_admission_ref(
+    query_hashes: jnp.ndarray,
+    limbo_hashes: jnp.ndarray,
+    commit_age_us: jnp.ndarray,
+    delta_us: jnp.ndarray,
+    has_own_term_commit: jnp.ndarray,
+) -> jnp.ndarray:
+    """Reference for the full Layer-2 admission decision (paper Fig 2,
+    ClientRead lines 17-26).
+
+    A read is admitted iff:
+      * the newest committed entry is < delta old (lease valid), AND
+      * either the leader has committed in its own term (no limbo region)
+        or the read does not conflict with the limbo region.
+
+    Args:
+      query_hashes: int32[B].
+      limbo_hashes: int32[K] (PAD_SENTINEL-padded; ignored when
+        ``has_own_term_commit``).
+      commit_age_us: int32[] — age of the newest committed entry in
+        microseconds, computed on the Rust side from interval clocks
+        (conservatively: now.latest - entry.earliest).
+      delta_us: int32[] — lease duration.
+      has_own_term_commit: int32[] (0/1) — newest committed entry is in
+        the leader's own term.
+
+    Returns:
+      bool[B] — True where the read may be served locally.
+    """
+    lease_valid = commit_age_us < delta_us
+    conflict = limbo_conflict_ref(query_hashes, limbo_hashes)
+    no_limbo_block = jnp.logical_or(has_own_term_commit != 0, jnp.logical_not(conflict))
+    return jnp.logical_and(lease_valid, no_limbo_block)

@@ -1,0 +1,51 @@
+"""Layer-2 JAX model: LeaseGuard batched read admission.
+
+This is the vectorized form of the paper's ``ClientRead`` gate (Fig 2,
+lines 17-26) that a new leader evaluates over the whole queue of pending
+reads after an election: lease-age check AND limbo-region conflict check
+(the conflict check is the Layer-1 Pallas kernel).
+
+The function is lowered once, at build time, by ``aot.py`` to
+``artifacts/read_admission_b{B}_k{K}.hlo.txt`` and executed from the Rust
+coordinator's hot path via PJRT.  Python never runs at request time.
+
+ABI (all int32, fixed shapes per artifact):
+  inputs : query_hashes[B], limbo_hashes[K] (PAD_SENTINEL-padded),
+           scalars[4] = [commit_age_us, delta_us, has_own_term_commit,
+                         reserved]
+  output : (admit[B],) int32 0/1 — return_tuple=True, unwrap with
+           to_tuple1() on the Rust side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.limbo_mask import limbo_conflict
+
+# Shape points compiled into artifacts. (B, K) — B pending reads judged
+# against K limbo-region writes. The Rust runtime picks the smallest
+# artifact that fits and pads.
+ARTIFACT_SHAPES = ((256, 128), (1024, 256))
+
+
+def read_admission(query_hashes, limbo_hashes, scalars):
+    """Batched admission decision. See module docstring for the ABI.
+
+    scalars[0] = commit_age_us  — conservative age (now.latest -
+                  entry.earliest) of the newest committed entry.
+    scalars[1] = delta_us       — lease duration Δ.
+    scalars[2] = has_own_term_commit (0/1) — when 1 the limbo region is
+                  empty (leader committed in its own term) and conflicts
+                  are ignored.
+    scalars[3] = reserved (0).
+    """
+    commit_age_us = scalars[0]
+    delta_us = scalars[1]
+    has_own_term_commit = scalars[2]
+
+    lease_valid = commit_age_us < delta_us
+    conflict = limbo_conflict(query_hashes, limbo_hashes)
+    no_limbo_block = jnp.logical_or(has_own_term_commit != 0, conflict == 0)
+    admit = jnp.logical_and(lease_valid, no_limbo_block)
+    return (admit.astype(jnp.int32),)

@@ -1,0 +1,93 @@
+"""Layer-1 correctness: Pallas limbo-conflict kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes, and adversarial hash values
+(duplicates, sentinel collisions, full-range int32) and asserts exact
+equality against ref.py — the CORE correctness signal for the kernel.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.limbo_mask import limbo_conflict
+from compile.kernels.ref import PAD_SENTINEL, limbo_conflict_ref
+
+# Any int32 except the reserved sentinel (the Rust side never emits it).
+real_hash = st.integers(min_value=-(2**31) + 1, max_value=2**31 - 1)
+
+
+def run_both(q, l, block_b=128, block_k=128):
+    q = np.asarray(q, dtype=np.int32)
+    l = np.asarray(l, dtype=np.int32)
+    got = np.asarray(limbo_conflict(q, l, block_b=block_b, block_k=block_k))
+    want = np.asarray(limbo_conflict_ref(q, l)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+    return got
+
+
+class TestBasics:
+    def test_no_conflict(self):
+        q = np.arange(128, dtype=np.int32)
+        l = np.arange(1000, 1000 + 128, dtype=np.int32)
+        got = run_both(q, l)
+        assert got.sum() == 0
+
+    def test_all_conflict(self):
+        q = np.full(128, 42, dtype=np.int32)
+        l = np.full(128, 42, dtype=np.int32)
+        got = run_both(q, l)
+        assert got.sum() == 128
+
+    def test_single_hit_per_tile_boundary(self):
+        # Hit located in the last limbo slot of the second K tile.
+        q = np.arange(128, dtype=np.int32)
+        l = np.full(256, PAD_SENTINEL + 1, dtype=np.int32)
+        l[255] = 1077
+        q[3] = 1077
+        got = run_both(q, l, block_k=128)
+        assert got[3] == 1 and got.sum() == 1
+
+    def test_sentinel_padding_never_matches(self):
+        # Even a query equal to the sentinel must not match padding.
+        q = np.full(128, PAD_SENTINEL, dtype=np.int32)
+        l = np.full(128, PAD_SENTINEL, dtype=np.int32)
+        got = np.asarray(limbo_conflict(q, l))
+        assert got.sum() == 0
+
+    def test_multi_b_tiles(self):
+        q = np.arange(512, dtype=np.int32)
+        l = np.array([5, 200, 300, 511] + [PAD_SENTINEL] * 124, dtype=np.int32)
+        got = run_both(q, l)
+        assert sorted(np.nonzero(got)[0].tolist()) == [5, 200, 300, 511]
+
+    def test_rejects_unaligned(self):
+        with pytest.raises(ValueError):
+            limbo_conflict(np.zeros(100, np.int32), np.zeros(128, np.int32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    nk=st.integers(1, 3),
+    block_b=st.sampled_from([8, 32, 128]),
+    block_k=st.sampled_from([8, 64, 128]),
+    data=st.data(),
+)
+def test_matches_ref_random(nb, nk, block_b, block_k, data):
+    b, k = nb * block_b, nk * block_k
+    # Small alphabet to force collisions between q and l frequently.
+    alphabet = data.draw(st.lists(real_hash, min_size=1, max_size=8, unique=True))
+    q = data.draw(st.lists(st.sampled_from(alphabet), min_size=b, max_size=b))
+    npad = data.draw(st.integers(0, k))
+    l_real = data.draw(st.lists(st.sampled_from(alphabet) | real_hash, min_size=k - npad, max_size=k - npad))
+    l = l_real + [PAD_SENTINEL] * npad
+    run_both(q, l, block_b=block_b, block_k=block_k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_matches_ref_full_range(data):
+    # Full-range int32 values, default blocks.
+    q = data.draw(st.lists(real_hash, min_size=128, max_size=128))
+    l = data.draw(st.lists(real_hash, min_size=128, max_size=128))
+    run_both(q, l)

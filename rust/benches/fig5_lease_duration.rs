@@ -1,0 +1,27 @@
+//! Bench harness for paper Figure 5 (criterion is unavailable offline;
+//! this is a harness=false bench target). Regenerates the figure at a
+//! reduced scale by default; run the binary/CLI form
+//! (`leaseguard figure 5`) for paper-sized runs.
+
+use leaseguard::config::Params;
+use leaseguard::figures::{run_figure, Scale};
+
+fn main() {
+    let scale = std::env::var("LEASEGUARD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.4f64);
+    let t0 = std::time::Instant::now();
+    let params = Params::default();
+    std::fs::create_dir_all("results").ok();
+    match run_figure(5, &params, Scale(scale), "results") {
+        Ok(report) => {
+            println!("{report}");
+            println!("bench fig5 wall time: {:.1}s (scale {scale})", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => {
+            eprintln!("bench fig5 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

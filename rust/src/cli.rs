@@ -1,0 +1,155 @@
+//! Minimal CLI argument parser (no clap offline): subcommand + repeated
+//! `--key value` / `--key=value` flags + positionals.
+//!
+//! All `--param key=value` flags funnel into [`crate::config::Params`],
+//! so every protocol and workload knob is reachable from the launcher:
+//!
+//! ```text
+//! leaseguard sim --param consistency=quorum --param seed=7
+//! leaseguard figure 7 --out results/
+//! leaseguard serve --node 0 --listen 127.0.0.1:7100 --peers 127.0.0.1:7101,127.0.0.1:7102
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    /// flag -> values (repeatable flags keep all values, in order).
+    pub flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                let (k, v) = if let Some((k, v)) = flag.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else {
+                    // Value is the next token unless it's another flag or
+                    // missing — then treat as boolean true.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            (flag.to_string(), it.next().unwrap())
+                        }
+                        _ => (flag.to_string(), "true".to_string()),
+                    }
+                };
+                out.flags.entry(k).or_default().push(v);
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Last value of a flag (last occurrence wins, like most CLIs).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.flags.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("bad value for --{key}: '{v}' ({e})")),
+        }
+    }
+
+    /// Apply `--config FILE` then all `--param k=v` flags to `params`.
+    pub fn apply_params(&self, params: &mut crate::config::Params) -> Result<(), String> {
+        if let Some(path) = self.get("config") {
+            let body = std::fs::read_to_string(path)
+                .map_err(|e| format!("cannot read config {path}: {e}"))?;
+            params.apply_file(&body)?;
+        }
+        for kv in self.get_all("param") {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--param wants key=value, got '{kv}'"))?;
+            params.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("figure 7 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positionals, vec!["7", "extra"]);
+    }
+
+    #[test]
+    fn flags_equals_and_space() {
+        let a = parse("sim --seed=9 --out results");
+        assert_eq!(a.get("seed"), Some("9"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("sim --verbose --seed 3");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("seed"), Some("3"));
+    }
+
+    #[test]
+    fn repeatable_params() {
+        let a = parse("sim --param a=1 --param b=2");
+        assert_eq!(a.get_all("param"), &["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn apply_params_roundtrip() {
+        let a = parse("sim --param consistency=quorum --param seed=42");
+        let mut p = crate::config::Params::default();
+        a.apply_params(&mut p).unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.consistency, crate::config::ConsistencyMode::Quorum);
+    }
+
+    #[test]
+    fn bad_param_reported() {
+        let a = parse("sim --param nonsense");
+        let mut p = crate::config::Params::default();
+        assert!(a.apply_params(&mut p).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = parse("sim --seed 1 --seed 2");
+        assert_eq!(a.get("seed"), Some("2"));
+    }
+}

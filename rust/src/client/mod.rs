@@ -1,0 +1,287 @@
+//! Open-loop async client for the real-mode cluster (the paper's
+//! enhanced LogCabin client, §7.1: "the client's offered load always
+//! matched our intended intensity, no matter whether the servers
+//! experienced high latency or hit a throughput ceiling").
+//!
+//! One writer thread issues requests exactly on schedule; one reader
+//! thread per server connection completes them. Leader discovery mirrors
+//! the simulator's client: believed leader, else round-robin probing;
+//! any reply other than NotLeader pins the belief.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::clock::real::RealClock;
+use crate::config::Params;
+use crate::history::{History, HistoryEntry, OpKind};
+use crate::metrics::{Histogram, TimeSeries};
+use crate::prob::Rng;
+use crate::raft::{FailReason, OpResult};
+use crate::server::server::SharedApplies;
+use crate::server::transport::{read_frame, write_frame};
+use crate::server::wire::{self, ClientReq, Frame};
+use crate::workload::{OpSpec, Workload};
+use crate::Micros;
+
+/// Result of one open-loop client run (mirrors the simulator's report).
+#[derive(Debug)]
+pub struct ClientReport {
+    pub t0: Micros,
+    pub series: TimeSeries,
+    pub read_latency: Histogram,
+    pub write_latency: Histogram,
+    pub history: History,
+    pub sent: u64,
+    pub completed: u64,
+}
+
+struct Pending {
+    key: u32,
+    write_value: Option<u64>,
+    start_ts: Micros,
+    target: usize,
+}
+
+struct Shared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    results: Mutex<Vec<(u64, OpResult, Micros, Micros)>>, // op, result, exec, end
+    believed_leader: AtomicUsize, // usize::MAX = unknown
+    /// Consecutive failures against the believed leader (give up after
+    /// a bound — a deposed leader can answer NoLease indefinitely).
+    fail_streak: AtomicUsize,
+    done: AtomicBool,
+}
+
+/// Run an open-loop workload against `addrs` for `params.duration_us`.
+/// `applies` is the in-process apply log for linearizability checking
+/// (None when servers run out of process).
+pub fn run_open_loop(
+    addrs: &[String],
+    params: &Params,
+    applies: Option<SharedApplies>,
+) -> std::io::Result<ClientReport> {
+    let shared = Arc::new(Shared {
+        pending: Mutex::new(HashMap::new()),
+        results: Mutex::new(Vec::new()),
+        believed_leader: AtomicUsize::new(usize::MAX),
+        fail_streak: AtomicUsize::new(0),
+        done: AtomicBool::new(false),
+    });
+
+    // One connection per server; reader thread each.
+    let mut writers: Vec<Option<TcpStream>> = Vec::new();
+    let mut readers = Vec::new();
+    for addr in addrs {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                let mut r = s.try_clone()?;
+                let sh = shared.clone();
+                readers.push(std::thread::spawn(move || {
+                    while let Ok(Some(body)) = read_frame(&mut r) {
+                        let Ok(Frame::ClientResp(resp)) = wire::decode(&body) else { break };
+                        let end = RealClock::monotonic_us();
+                        // Live leader discovery: NotLeader un-pins the
+                        // belief; any other reply pins the target.
+                        let tgt =
+                            sh.pending.lock().unwrap().get(&resp.op).map(|p| p.target);
+                        if let Some(t) = tgt {
+                            match &resp.result {
+                                OpResult::Failed(FailReason::NotLeader)
+                                | OpResult::Failed(FailReason::Timeout) => {
+                                    let _ = sh.believed_leader.compare_exchange(
+                                        t,
+                                        usize::MAX,
+                                        Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                                OpResult::Failed(_) => {
+                                    // The target led but couldn't serve;
+                                    // give up after a persistent streak.
+                                    if sh.fail_streak.fetch_add(1, Ordering::Relaxed) >= 50 {
+                                        sh.fail_streak.store(0, Ordering::Relaxed);
+                                        let _ = sh.believed_leader.compare_exchange(
+                                            t,
+                                            usize::MAX,
+                                            Ordering::Relaxed,
+                                            Ordering::Relaxed,
+                                        );
+                                    }
+                                }
+                                _ => {
+                                    sh.fail_streak.store(0, Ordering::Relaxed);
+                                    sh.believed_leader.store(t, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        sh.results.lock().unwrap().push((resp.op, resp.result, resp.exec_us, end));
+                        if sh.done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                }));
+                writers.push(Some(s));
+            }
+            Err(_) => writers.push(None),
+        }
+    }
+
+    let t0 = RealClock::monotonic_us();
+    let mut rng = Rng::new(params.seed ^ 0xC11E17);
+    let mut workload = Workload::from_params(params, &mut rng);
+    let schedule: Vec<OpSpec> = workload.schedule(params.duration_us);
+    let n_servers = addrs.len();
+    let mut probe = 0usize;
+    let mut sent: u64 = 0;
+    let mut op_id: u64 = 0;
+
+    for spec in &schedule {
+        // Open loop: issue exactly at t0 + spec.at.
+        let due = t0 + spec.at;
+        loop {
+            let now = RealClock::monotonic_us();
+            if now >= due {
+                break;
+            }
+            let gap = due - now;
+            if gap > 200 {
+                std::thread::sleep(Duration::from_micros((gap - 100) as u64));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        op_id += 1;
+        let op = op_id;
+        let target = {
+            let b = shared.believed_leader.load(Ordering::Relaxed);
+            if b < n_servers {
+                b
+            } else {
+                probe = (probe + 1) % n_servers;
+                probe
+            }
+        };
+        let start = RealClock::monotonic_us();
+        shared.pending.lock().unwrap().insert(
+            op,
+            Pending { key: spec.key, write_value: spec.write_value, start_ts: start, target },
+        );
+        let req = Frame::ClientReq(ClientReq {
+            op,
+            key: spec.key,
+            write_value: spec.write_value,
+            payload: vec![0xA5; spec.payload_bytes as usize],
+        });
+        let ok = match &mut writers[target] {
+            Some(w) => write_frame(w, &wire::encode(&req)).is_ok(),
+            None => false,
+        };
+        if !ok {
+            // Server unreachable (crashed): fast-fail the op, probe on.
+            writers[target] = None;
+            shared.believed_leader.store(usize::MAX, Ordering::Relaxed);
+            let end = RealClock::monotonic_us();
+            shared
+                .results
+                .lock()
+                .unwrap()
+                .push((op, OpResult::Failed(FailReason::Timeout), end, end));
+        } else {
+            sent += 1;
+        }
+    }
+
+    // Grace period for stragglers, then collect.
+    std::thread::sleep(Duration::from_millis(300));
+    shared.done.store(true, Ordering::Relaxed);
+    for w in writers.iter_mut() {
+        if let Some(s) = w {
+            let _ = s.flush();
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    // Build the report.
+    let mut series = TimeSeries::new(params.bucket_us, params.duration_us);
+    let mut read_latency = Histogram::new();
+    let mut write_latency = Histogram::new();
+    let mut history = History::new();
+    if let Some(a) = &applies {
+        for &(k, v, t) in a.lock().unwrap().iter() {
+            history.applies.record(k, v, t);
+        }
+    }
+    let results = std::mem::take(&mut *shared.results.lock().unwrap());
+    let mut completed = 0u64;
+    let mut pending = shared.pending.lock().unwrap();
+    // Belief updates happened implicitly through probing during the run;
+    // here we only assemble metrics/history.
+    for (op, result, exec, end) in results {
+        let Some(p) = pending.remove(&op) else { continue };
+        completed += 1;
+        let is_read = p.write_value.is_none();
+        let success = result.is_ok();
+        series.record(is_read, (end - t0).max(0), success);
+        if success {
+            let lat = end - p.start_ts;
+            if is_read {
+                read_latency.record(lat);
+            } else {
+                write_latency.record(lat);
+            }
+        }
+        let (kind, exec_ts) = match (&result, p.write_value) {
+            (OpResult::ReadOk(v), _) => (OpKind::Read { result: v.clone() }, Some(exec)),
+            (_, Some(v)) => (OpKind::Append { value: v }, None),
+            (_, None) => (OpKind::Read { result: Vec::new() }, None),
+        };
+        history.entries.push(HistoryEntry {
+            op,
+            key: p.key,
+            kind,
+            start_ts: p.start_ts,
+            end_ts: end,
+            execution_ts: exec_ts,
+            success,
+            fail: match result {
+                OpResult::Failed(r) => Some(r),
+                _ => None,
+            },
+        });
+    }
+    // Unanswered ops: timeouts (ambiguous writes).
+    let now = RealClock::monotonic_us();
+    for (op, p) in pending.drain() {
+        let is_read = p.write_value.is_none();
+        series.record(is_read, (now - t0).max(0), false);
+        history.entries.push(HistoryEntry {
+            op,
+            key: p.key,
+            kind: match p.write_value {
+                Some(v) => OpKind::Append { value: v },
+                None => OpKind::Read { result: Vec::new() },
+            },
+            start_ts: p.start_ts,
+            end_ts: now,
+            execution_ts: None,
+            success: false,
+            fail: Some(FailReason::Timeout),
+        });
+    }
+    drop(pending);
+
+    Ok(ClientReport {
+        t0,
+        series,
+        read_latency,
+        write_latency,
+        history,
+        sent,
+        completed,
+    })
+}

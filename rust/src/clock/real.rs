@@ -1,0 +1,95 @@
+//! Real-mode bounded-uncertainty clock: the host monotonic clock wrapped
+//! with a configured error bound.
+//!
+//! Stands in for AWS TimeSync + the clock-bound daemon in the paper's
+//! EC2 testbed (§7.1: intervals < 100µs wide, error < 50µs). In our
+//! single-host reproduction all server processes/threads share one
+//! monotonic clock, so a *zero* bound would be trivially correct; we
+//! still apply the configured bound so the protocol exercises the same
+//! interval arithmetic as on a multi-host deployment, and so tests can
+//! widen the bound to stress the conservative gates.
+
+use std::time::Instant;
+
+use super::{Clock, TimeInterval};
+use crate::Micros;
+
+/// Process-wide epoch so that all RealClocks share a timeline.
+fn epoch() -> Instant {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+#[derive(Debug, Clone)]
+pub struct RealClock {
+    /// Reported half-width, µs (paper testbed: <50).
+    pub error_bound_us: Micros,
+    /// Extra fixed skew applied to this clock's readings (test hook to
+    /// emulate inter-host offsets; must stay within error_bound for the
+    /// clock to be "correct").
+    pub skew_us: Micros,
+}
+
+impl RealClock {
+    pub fn new(error_bound_us: Micros) -> Self {
+        // Touch the epoch early so concurrent first-readers agree.
+        let _ = epoch();
+        RealClock { error_bound_us, skew_us: 0 }
+    }
+
+    pub fn with_skew(error_bound_us: Micros, skew_us: Micros) -> Self {
+        assert!(
+            skew_us.abs() <= error_bound_us,
+            "skew outside bound would make the clock incorrect"
+        );
+        let _ = epoch();
+        RealClock { error_bound_us, skew_us }
+    }
+
+    /// Monotonic µs since the process epoch.
+    pub fn monotonic_us() -> Micros {
+        epoch().elapsed().as_micros() as Micros
+    }
+}
+
+impl Clock for RealClock {
+    fn interval_now(&mut self) -> TimeInterval {
+        let t = Self::monotonic_us() + self.skew_us;
+        TimeInterval::new(t - self.error_bound_us, t + self.error_bound_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intervals_advance_and_contain_truth() {
+        let mut c = RealClock::new(50);
+        let a = c.interval_now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = c.interval_now();
+        assert!(b.earliest > a.earliest);
+        let now = RealClock::monotonic_us();
+        assert!(b.earliest <= now && now - 5_000 <= b.latest);
+        assert_eq!(a.uncertainty(), 50);
+    }
+
+    #[test]
+    fn skewed_clocks_still_overlap_truth() {
+        let mut a = RealClock::with_skew(100, 80);
+        let mut b = RealClock::with_skew(100, -80);
+        let ia = a.interval_now();
+        let ib = b.interval_now();
+        let now = RealClock::monotonic_us();
+        assert!(ia.earliest <= now && ib.earliest <= now);
+        assert!(ia.latest + 1000 >= now && ib.latest + 1000 >= now);
+    }
+
+    #[test]
+    #[should_panic]
+    fn skew_beyond_bound_rejected() {
+        let _ = RealClock::with_skew(50, 100);
+    }
+}

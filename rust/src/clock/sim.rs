@@ -1,0 +1,163 @@
+//! Simulated bounded-uncertainty clock (the simulator's model of AWS
+//! TimeSync / TrueTime, §2.2). Each node owns one, seeded independently.
+//!
+//! Model: the node's local oscillator runs at a fixed rate `1 + drift`
+//! relative to true time with a phase offset; the clock-bound daemon
+//! reports an interval centred near the (noisy) local reading whose
+//! half-width is the configured `max_error`. Correct mode *constructs*
+//! the interval to contain the true time (as a correct daemon
+//! guarantees); `broken` mode deliberately excludes it, reproducing the
+//! §4.3 failure ("Inherited lease reads require correct clock bounds!")
+//! which the linearizability checker must then catch.
+
+use super::{Clock, TimeInterval};
+use crate::prob::Rng;
+use crate::Micros;
+
+#[derive(Debug, Clone)]
+pub struct SimClockConfig {
+    /// Maximum clock-bound error (half-width), µs. Paper testbed: <50µs.
+    pub max_error_us: Micros,
+    /// Oscillator drift rate, e.g. 1e-5 = 10 ppm.
+    pub drift: f64,
+    /// If true, intervals deliberately exclude the true time (§4.3).
+    pub broken: bool,
+}
+
+impl Default for SimClockConfig {
+    fn default() -> Self {
+        SimClockConfig { max_error_us: 50, drift: 1e-5, broken: false }
+    }
+}
+
+/// A per-node simulated clock. Unlike [`super::real::RealClock`] it has
+/// no time source of its own: the simulator passes the true virtual time
+/// to [`SimClock::at`]. (`Clock::interval_now` is not implemented for
+/// it; simulation code always knows `true_now`.)
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    cfg: SimClockConfig,
+    offset_us: f64,
+    rng: Rng,
+    /// Monotonicity floor: intervals never regress (TrueTime guarantee).
+    last: Option<TimeInterval>,
+}
+
+impl SimClock {
+    pub fn new(cfg: SimClockConfig, rng: &mut Rng) -> Self {
+        let offset_us = if cfg.max_error_us > 0 {
+            rng.range_i64(-cfg.max_error_us / 2, cfg.max_error_us / 2) as f64
+        } else {
+            0.0
+        };
+        SimClock { cfg, offset_us, rng: rng.fork(), last: None }
+    }
+
+    /// A perfect clock (zero error, zero drift) — §4.2 analysis mode.
+    pub fn perfect() -> Self {
+        SimClock {
+            cfg: SimClockConfig { max_error_us: 0, drift: 0.0, broken: false },
+            offset_us: 0.0,
+            rng: Rng::new(0),
+            last: None,
+        }
+    }
+
+    /// Read the clock at true (virtual) time `true_now`.
+    pub fn at(&mut self, true_now: Micros) -> TimeInterval {
+        let iv = self.raw_at(true_now);
+        // Enforce monotonic non-regression, as TrueTime does.
+        let iv = match self.last {
+            Some(prev) => TimeInterval::new(iv.earliest.max(prev.earliest), iv.latest.max(prev.latest)),
+            None => iv,
+        };
+        self.last = Some(iv);
+        iv
+    }
+
+    fn raw_at(&mut self, true_now: Micros) -> TimeInterval {
+        let e = self.cfg.max_error_us;
+        if e == 0 && !self.cfg.broken {
+            return TimeInterval::exact(true_now);
+        }
+        // Local (drifting, offset) reading.
+        let local = true_now as f64 * (1.0 + self.cfg.drift) + self.offset_us;
+        // The daemon's reported error always covers |local - true| in
+        // correct mode; we sample the reported half-width in
+        // [|local-true|, max_error].
+        let skew = (local - true_now as f64).abs().min(e as f64);
+        if self.cfg.broken {
+            // Report an interval that confidently excludes the true
+            // time, wrong by 2-4x max_error. The direction is a stable
+            // per-node coin flip (decided by the node's offset sign):
+            // a backward-lying node under-estimates entry ages and keeps
+            // serving reads past its lease — the §4.3 violation.
+            let sign = if self.offset_us >= 0.0 { 1.0 } else { -1.0 };
+            let lie = sign * e as f64 * (2.0 + 2.0 * self.rng.f64());
+            let center = true_now as f64 + lie;
+            let half = (e / 4).max(1) as f64;
+            return TimeInterval::new((center - half) as Micros, (center + half) as Micros);
+        }
+        let half = skew + self.rng.f64() * (e as f64 - skew).max(0.0);
+        let half = half.max(1.0);
+        TimeInterval::new((local - half).floor() as Micros, (local + half).ceil() as Micros)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correct_mode_contains_true_time() {
+        let mut rng = Rng::new(99);
+        for node in 0..20 {
+            let mut c = SimClock::new(
+                SimClockConfig { max_error_us: 50, drift: 1e-5, broken: false },
+                &mut Rng::new(node),
+            );
+            let _ = &mut rng;
+            for t in (0..1_000_000).step_by(37_123) {
+                let iv = c.at(t);
+                assert!(
+                    iv.earliest <= t && t <= iv.latest,
+                    "node {node} t {t} outside {iv:?}"
+                );
+                assert!(iv.uncertainty() <= 60, "uncertainty too large: {iv:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn broken_mode_excludes_true_time() {
+        let mut c = SimClock::new(
+            SimClockConfig { max_error_us: 50, drift: 0.0, broken: true },
+            &mut Rng::new(4),
+        );
+        let mut excluded = 0;
+        for t in (1000..100_000).step_by(997) {
+            let iv = c.at(t);
+            if t < iv.earliest || t > iv.latest {
+                excluded += 1;
+            }
+        }
+        assert!(excluded > 50, "broken clock should usually exclude truth");
+    }
+
+    #[test]
+    fn monotone_nonregression() {
+        let mut c = SimClock::new(SimClockConfig::default(), &mut Rng::new(5));
+        let mut prev = c.at(0);
+        for t in (0..500_000).step_by(11_003) {
+            let iv = c.at(t);
+            assert!(iv.earliest >= prev.earliest && iv.latest >= prev.latest);
+            prev = iv;
+        }
+    }
+
+    #[test]
+    fn perfect_clock_is_exact() {
+        let mut c = SimClock::perfect();
+        assert_eq!(c.at(12345), TimeInterval::exact(12345));
+    }
+}

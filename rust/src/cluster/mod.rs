@@ -1,0 +1,514 @@
+//! The simulated replica set harness: drives [`crate::raft::Node`]s over
+//! the deterministic event loop and simulated network, runs the
+//! open-loop workload, records the client history, and produces the
+//! paper's metrics (the `run_with_params.py` of §6.1).
+//!
+//! Experiment shape (matching §6.5): bootstrap until a first leader has
+//! committed its term-start no-op (that instant is the experiment's
+//! *origin* `t0`), then run the workload; optionally crash the leader at
+//! `t0 + crash_leader_at_us` (and restart it later); finally drain, fail
+//! leftover operations as timeouts, and return a [`RunReport`].
+
+use std::collections::HashMap;
+
+use crate::clock::sim::{SimClock, SimClockConfig};
+use crate::clock::TimeInterval;
+use crate::config::Params;
+use crate::history::{History, HistoryEntry, OpKind};
+use crate::metrics::{Histogram, TimeSeries};
+use crate::prob::Rng;
+use crate::raft::{FailReason, Message, Node, NodeConfig, OpId, OpResult, Output, Role, TimerKind};
+use crate::sim::network::{Delivery, NetConfig};
+use crate::sim::{EventQueue, SimNetwork};
+use crate::workload::{OpSpec, Workload};
+use crate::{Micros, NodeId};
+
+/// Events in a simulated run.
+#[derive(Debug)]
+enum Event {
+    Deliver { to: NodeId, msg: Message },
+    Timer { node: NodeId, kind: TimerKind },
+    ClientOp(OpSpec),
+    OpTimeout(OpId),
+    CrashLeader,
+    PartitionLeader,
+    Heal,
+    Restart(NodeId),
+    End,
+}
+
+/// An operation in flight from the client's perspective.
+#[derive(Debug)]
+struct PendingOp {
+    key: u32,
+    write_value: Option<u64>,
+    start_ts: Micros,
+}
+
+/// Everything a figure driver needs from one run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Origin: true time the first leader committed its no-op; all
+    /// series/timestamps below are relative to it.
+    pub t0: Micros,
+    pub series: TimeSeries,
+    pub read_latency: Histogram,
+    pub write_latency: Histogram,
+    pub history: History,
+    pub elections: u64,
+    pub events_processed: u64,
+    pub node_stats: Vec<crate::raft::node::NodeStats>,
+    /// Limbo-region length observed on the post-crash leader (paper
+    /// Fig 9 reports 37).
+    pub limbo_len: u64,
+}
+
+pub struct Cluster {
+    params: Params,
+    queue: EventQueue<Event>,
+    nodes: Vec<Node>,
+    clocks: Vec<SimClock>,
+    net: SimNetwork,
+    rng: Rng,
+
+    // client state
+    believed_leader: Option<NodeId>,
+    client_rng: Rng,
+    probe_next: NodeId,
+    /// Consecutive failed ops against the believed leader; clients give
+    /// up on a target that persistently fails (e.g. a deposed leader
+    /// answering NoLease forever after a partition).
+    fail_streak: u32,
+    pending: HashMap<OpId, PendingOp>,
+    last_target_for: HashMap<OpId, NodeId>,
+    next_op_id: OpId,
+
+    // recording
+    t0: Micros,
+    series: TimeSeries,
+    read_latency: Histogram,
+    write_latency: Histogram,
+    history: History,
+    elections: u64,
+    limbo_len: u64,
+    crashed: Option<NodeId>,
+}
+
+impl Cluster {
+    pub fn new(params: Params) -> Self {
+        params.validate().expect("invalid params");
+        let mut rng = Rng::new(params.seed);
+        let n = params.nodes;
+        let net_cfg = NetConfig {
+            one_way_mean_us: params.net_mean_us,
+            one_way_variance_us2: params.net_variance_us2,
+            min_delay_us: params.net_min_delay_us,
+            loss: params.net_loss,
+        };
+        let net = SimNetwork::new(n, net_cfg, &mut rng);
+        let clock_cfg = SimClockConfig {
+            max_error_us: params.clock_error_us,
+            drift: params.clock_drift,
+            broken: params.clock_broken,
+        };
+        let client_rng = rng.fork();
+        let mut queue = EventQueue::new();
+        let mut nodes = Vec::with_capacity(n);
+        let mut clocks = Vec::with_capacity(n);
+        for id in 0..n {
+            let mut clock = SimClock::new(clock_cfg.clone(), &mut rng);
+            let now = clock.at(0);
+            let (node, outs) = Node::new(NodeConfig::from_params(id, &params), params.seed, now);
+            nodes.push(node);
+            clocks.push(clock);
+            for o in outs {
+                if let Output::SetTimer { kind, after } = o {
+                    queue.schedule_in(after, Event::Timer { node: id, kind });
+                }
+            }
+        }
+        Cluster {
+            series: TimeSeries::new(params.bucket_us, params.duration_us),
+            params,
+            queue,
+            nodes,
+            clocks,
+            net,
+            rng,
+            believed_leader: None,
+            client_rng,
+            probe_next: 0,
+            fail_streak: 0,
+            pending: HashMap::new(),
+            last_target_for: HashMap::new(),
+            next_op_id: 1,
+            t0: 0,
+            read_latency: Histogram::new(),
+            write_latency: Histogram::new(),
+            history: History::new(),
+            elections: 0,
+            limbo_len: 0,
+            crashed: None,
+        }
+    }
+
+    /// Run the full experiment and return the report.
+    pub fn run(mut self) -> RunReport {
+        // ---- phase 1: bootstrap to the first committed no-op ----
+        let deadline = 60_000_000; // sanity bound
+        while !self.stable_leader_exists() {
+            let Some((_, ev)) = self.queue.pop() else { panic!("bootstrap starved") };
+            self.handle(ev);
+            assert!(self.queue.now() < deadline, "no leader within 60s of sim time");
+        }
+        self.t0 = self.queue.now();
+
+        // ---- phase 2: schedule workload + fault schedule + end ----
+        let mut workload = Workload::from_params(&self.params, &mut self.rng);
+        let ops = workload.schedule(self.params.duration_us);
+        for op in ops {
+            self.queue.schedule(self.t0 + op.at, Event::ClientOp(op));
+        }
+        if self.params.crash_leader_at_us > 0 {
+            self.queue
+                .schedule(self.t0 + self.params.crash_leader_at_us, Event::CrashLeader);
+        }
+        if self.params.partition_leader_at_us > 0 {
+            self.queue
+                .schedule(self.t0 + self.params.partition_leader_at_us, Event::PartitionLeader);
+            if self.params.heal_after_us > 0 {
+                self.queue.schedule(
+                    self.t0 + self.params.partition_leader_at_us + self.params.heal_after_us,
+                    Event::Heal,
+                );
+            }
+        }
+        self.queue.schedule(self.t0 + self.params.duration_us, Event::End);
+
+        // ---- phase 3: run ----
+        let end_at = self.t0 + self.params.duration_us;
+        while let Some((t, ev)) = self.queue.pop() {
+            if matches!(ev, Event::End) || t > end_at + 1 {
+                break;
+            }
+            self.handle(ev);
+        }
+
+        // Drain: remaining in-flight ops are client timeouts.
+        let now = self.queue.now();
+        let pending: Vec<OpId> = self.pending.keys().copied().collect();
+        for op in pending {
+            self.finish_op(op, OpResult::Failed(FailReason::Timeout), now);
+        }
+
+        RunReport {
+            t0: self.t0,
+            series: self.series,
+            read_latency: self.read_latency,
+            write_latency: self.write_latency,
+            history: self.history,
+            elections: self.elections,
+            events_processed: self.queue.processed(),
+            node_stats: self.nodes.iter().map(|n| n.stats).collect(),
+            limbo_len: self.limbo_len,
+        }
+    }
+
+    fn stable_leader_exists(&self) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| n.role() == Role::Leader && n.commit_index() >= 1)
+    }
+
+    fn now_interval(&mut self, node: NodeId) -> TimeInterval {
+        let t = self.queue.now();
+        self.clocks[node].at(t)
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Deliver { to, msg } => {
+                if !self.net.is_up(to) {
+                    return;
+                }
+                let now = self.now_interval(to);
+                let outs = self.nodes[to].on_message(now, msg);
+                self.process_outputs(to, outs);
+            }
+            Event::Timer { node, kind } => {
+                if !self.net.is_up(node) {
+                    return;
+                }
+                let now = self.now_interval(node);
+                let outs = self.nodes[node].on_timer(now, kind);
+                self.process_outputs(node, outs);
+            }
+            Event::ClientOp(spec) => self.start_client_op(spec),
+            Event::OpTimeout(op) => {
+                if self.pending.contains_key(&op) {
+                    let now = self.queue.now();
+                    self.finish_op(op, OpResult::Failed(FailReason::Timeout), now);
+                }
+            }
+            Event::CrashLeader => self.crash_leader(),
+            Event::PartitionLeader => {
+                // Isolate the active leader from its peers; clients can
+                // still reach it (the §1 deposed-leader scenario).
+                let victim = self
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, n)| n.role() == Role::Leader && self.net.is_up(*i))
+                    .max_by_key(|(_, n)| n.term())
+                    .map(|(i, _)| i);
+                if let Some(v) = victim {
+                    self.net.partition(&[v]);
+                }
+            }
+            Event::Heal => self.net.heal(),
+            Event::Restart(node) => {
+                self.net.restart(node);
+                let now = self.now_interval(node);
+                let outs = self.nodes[node].restart(now);
+                self.process_outputs(node, outs);
+            }
+            Event::End => {}
+        }
+    }
+
+    fn process_outputs(&mut self, from: NodeId, outs: Vec<Output>) {
+        let now = self.queue.now();
+        for o in outs {
+            match o {
+                Output::Send { to, msg } => match self.net.send(from, to) {
+                    Delivery::After(d) => self.queue.schedule(now + d, Event::Deliver { to, msg }),
+                    Delivery::Dropped => {}
+                },
+                Output::SetTimer { kind, after } => {
+                    self.queue.schedule(now + after, Event::Timer { node: from, kind });
+                }
+                Output::Reply { op, result } => self.finish_op(op, result, now),
+                Output::Applied { key, value } => self.history.applies.record(key, value, now),
+                Output::ElectedLeader { .. } => {
+                    self.elections += 1;
+                    // Record the new leader's limbo-region size once a
+                    // post-crash election happens (Fig 9's "37 entries").
+                    if let Some(l) = self.nodes[from].lease_state() {
+                        self.limbo_len = self.limbo_len.max(l.limbo_len());
+                    }
+                }
+                Output::SteppedDown => {}
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ client
+
+    fn start_client_op(&mut self, spec: OpSpec) {
+        let now = self.queue.now();
+        let op = self.next_op_id;
+        self.next_op_id += 1;
+        // Pick a target: believed leader, else probe round-robin. With
+        // probability `client_stray_prob` the op goes to a random node
+        // instead — modelling the paper's fleet of concurrent clients,
+        // some of which still address a deposed leader.
+        let stray = self.params.client_stray_prob > 0.0
+            && self.client_rng.chance(self.params.client_stray_prob);
+        let target = if stray {
+            self.client_rng.below(self.params.nodes as u64) as usize
+        } else {
+            match self.believed_leader {
+                Some(l) => l,
+                None => {
+                    let t = self.probe_next % self.params.nodes;
+                    self.probe_next = (self.probe_next + 1) % self.params.nodes;
+                    t
+                }
+            }
+        };
+        self.pending.insert(
+            op,
+            PendingOp { key: spec.key, write_value: spec.write_value, start_ts: now },
+        );
+        self.queue
+            .schedule(now + self.params.op_timeout_us, Event::OpTimeout(op));
+        if !self.net.is_up(target) {
+            // Connection refused / broken pipe: fast failure, try
+            // another node next time.
+            self.believed_leader = None;
+            let fail_at = now + 1000;
+            let op_copy = op;
+            self.queue.schedule(fail_at, Event::OpTimeout(op_copy));
+            return;
+        }
+        let nowi = self.now_interval(target);
+        let outs = match spec.write_value {
+            Some(v) => {
+                self.nodes[target].client_write(nowi, op, spec.key, v, spec.payload_bytes)
+            }
+            None => self.nodes[target].client_read(nowi, op, spec.key),
+        };
+        // Leader-discovery belief update happens in finish_op (replies
+        // other than NotLeader imply the target led).
+        self.last_target_for.insert(op, target);
+        self.process_outputs(target, outs);
+    }
+
+    fn finish_op(&mut self, op: OpId, result: OpResult, now: Micros) {
+        let Some(p) = self.pending.remove(&op) else { return };
+        let target = self.last_target_for.remove(&op);
+        let is_read = p.write_value.is_none();
+        let success = result.is_ok();
+        // Client leader discovery: pin on success; unpin on NotLeader /
+        // unreachability; leave unchanged on NoLease-style failures (the
+        // node led, it just couldn't serve yet).
+        match &result {
+            OpResult::Failed(FailReason::NotLeader) => {
+                if self.believed_leader == target {
+                    self.believed_leader = None;
+                }
+            }
+            OpResult::Failed(FailReason::Timeout) => {
+                if self.believed_leader == target || target.is_none() {
+                    self.believed_leader = None;
+                }
+            }
+            OpResult::Failed(_) => {
+                // NoLease / LimboConflict / gate failures: the target
+                // led, so stay — but not forever (a partitioned deposed
+                // leader answers NoLease indefinitely).
+                if self.believed_leader.is_some() && self.believed_leader == target {
+                    self.fail_streak += 1;
+                    if self.fail_streak >= 20 {
+                        self.believed_leader = None;
+                        self.fail_streak = 0;
+                    }
+                }
+            }
+            _ => {
+                if let Some(t) = target {
+                    self.believed_leader = Some(t);
+                    self.fail_streak = 0;
+                }
+            }
+        }
+        // Metrics (relative to t0; bootstrap ops land in bucket 0).
+        let rel = (now - self.t0).max(0);
+        self.series.record(is_read, rel, success);
+        if success {
+            let lat = now - p.start_ts;
+            if is_read {
+                self.read_latency.record(lat);
+            } else {
+                self.write_latency.record(lat);
+            }
+        }
+        // History.
+        let (kind, exec) = match (&result, p.write_value) {
+            (OpResult::ReadOk(v), _) => (OpKind::Read { result: v.clone() }, Some(now)),
+            (_, Some(v)) => (OpKind::Append { value: v }, None),
+            (_, None) => (OpKind::Read { result: Vec::new() }, None),
+        };
+        let fail = match result {
+            OpResult::Failed(r) => Some(r),
+            _ => None,
+        };
+        self.history.entries.push(HistoryEntry {
+            op,
+            key: p.key,
+            kind,
+            start_ts: p.start_ts,
+            end_ts: now,
+            execution_ts: exec,
+            success,
+            fail,
+        });
+    }
+
+    // ------------------------------------------------------------ faults
+
+    fn crash_leader(&mut self) {
+        // Crash the highest-term live leader (the active one).
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| n.role() == Role::Leader && self.net.is_up(*i))
+            .max_by_key(|(_, n)| n.term())
+            .map(|(i, _)| i);
+        let Some(v) = victim else { return };
+        self.net.crash(v);
+        self.crashed = Some(v);
+        if self.params.restart_after_us > 0 {
+            self.queue
+                .schedule_in(self.params.restart_after_us, Event::Restart(v));
+        }
+    }
+
+    /// Test hook: partition a set of nodes away from the rest.
+    pub fn inject_partition(&mut self, minority: &[NodeId]) {
+        self.net.partition(minority);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ConsistencyMode;
+    use crate::linearizability;
+
+    fn base_params(mode: ConsistencyMode, seed: u64) -> Params {
+        let mut p = Params::default();
+        p.consistency = mode;
+        p.seed = seed;
+        p.duration_us = 1_500_000;
+        p.interarrival_us = 1000.0;
+        p
+    }
+
+    #[test]
+    fn steady_state_all_modes_linearizable_but_inconsistent() {
+        for mode in ConsistencyMode::ALL {
+            let rep = Cluster::new(base_params(mode, 42)).run();
+            let ok_reads = rep.series.window_totals(true, 0, i64::MAX).ok;
+            let ok_writes = rep.series.window_totals(false, 0, i64::MAX).ok;
+            assert!(ok_reads > 100, "{mode}: only {ok_reads} reads ok");
+            assert!(ok_writes > 50, "{mode}: only {ok_writes} writes ok");
+            // No elections, no crash: every mode is linearizable here.
+            linearizability::assert_linearizable(&rep.history);
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 7)).run();
+        let b = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 7)).run();
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.history.entries.len(), b.history.entries.len());
+        assert_eq!(a.t0, b.t0);
+    }
+
+    #[test]
+    fn crash_failover_leaseguard_linearizable() {
+        let mut p = base_params(ConsistencyMode::LeaseGuard, 11);
+        p.duration_us = 2_500_000;
+        p.crash_leader_at_us = 500_000;
+        p.interarrival_us = 500.0;
+        let rep = Cluster::new(p).run();
+        assert!(rep.elections >= 2, "expected failover election");
+        linearizability::assert_linearizable(&rep.history);
+        // Reads succeed during the interregnum-to-lease window thanks to
+        // inherited leases: some reads between election and lease expiry.
+        let post = rep.series.window_totals(true, 1_000_000, 1_500_000);
+        assert!(post.ok > 0, "inherited lease reads should succeed: {post:?}");
+    }
+
+    #[test]
+    fn crash_failover_quorum_linearizable() {
+        let mut p = base_params(ConsistencyMode::Quorum, 13);
+        p.duration_us = 2_500_000;
+        p.crash_leader_at_us = 500_000;
+        let rep = Cluster::new(p).run();
+        linearizability::assert_linearizable(&rep.history);
+    }
+}

@@ -1,0 +1,398 @@
+//! The parameter system — the paper's `params.py` (§6.1): every aspect of
+//! the protocol and the simulation is controlled from one struct that can
+//! be loaded from a config file and overridden from the CLI.
+//!
+//! File format: one `key = value` per line, `#` comments. No external
+//! crates are available offline, so parsing is hand-rolled; typed access
+//! goes through [`Params::set`], which validates keys and values so typos
+//! fail loudly instead of silently using defaults.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+use crate::Micros;
+
+/// Which mechanism guarantees (or doesn't) read consistency — the six
+/// configurations evaluated in the paper (Figs 7, 9, 10, 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConsistencyMode {
+    /// No mechanism: local reads, may violate linearizability during
+    /// elections ("inconsistent" in the figures).
+    Inconsistent,
+    /// Raft's default: a quorum round per read (§1, LogCabin default).
+    Quorum,
+    /// Ongaro §6.4.1 leases as implemented for comparison (§7.1):
+    /// heartbeat-acquired lease + vote withholding, Δ = ET.
+    OngaroLease,
+    /// LeaseGuard log-based lease, no optimizations ("log-based lease").
+    LogLease,
+    /// + deferred-commit writes (§3.2) ("defer commit").
+    DeferCommit,
+    /// + inherited-lease reads (§3.3) — full LeaseGuard.
+    LeaseGuard,
+}
+
+impl ConsistencyMode {
+    pub const ALL: [ConsistencyMode; 6] = [
+        ConsistencyMode::Inconsistent,
+        ConsistencyMode::Quorum,
+        ConsistencyMode::OngaroLease,
+        ConsistencyMode::LogLease,
+        ConsistencyMode::DeferCommit,
+        ConsistencyMode::LeaseGuard,
+    ];
+
+    /// Does this mode gate commits/reads on log-based leases?
+    pub fn uses_log_lease(self) -> bool {
+        matches!(
+            self,
+            ConsistencyMode::LogLease | ConsistencyMode::DeferCommit | ConsistencyMode::LeaseGuard
+        )
+    }
+
+    /// Deferred-commit writes enabled?
+    pub fn defers_commit(self) -> bool {
+        matches!(self, ConsistencyMode::DeferCommit | ConsistencyMode::LeaseGuard)
+    }
+
+    /// Inherited-lease reads enabled?
+    pub fn inherited_reads(self) -> bool {
+        matches!(self, ConsistencyMode::LeaseGuard)
+    }
+}
+
+impl fmt::Display for ConsistencyMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ConsistencyMode::Inconsistent => "inconsistent",
+            ConsistencyMode::Quorum => "quorum",
+            ConsistencyMode::OngaroLease => "ongaro",
+            ConsistencyMode::LogLease => "loglease",
+            ConsistencyMode::DeferCommit => "defercommit",
+            ConsistencyMode::LeaseGuard => "leaseguard",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for ConsistencyMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "inconsistent" | "none" => Ok(ConsistencyMode::Inconsistent),
+            "quorum" => Ok(ConsistencyMode::Quorum),
+            "ongaro" | "ongarolease" => Ok(ConsistencyMode::OngaroLease),
+            "loglease" | "log-lease" | "lease" => Ok(ConsistencyMode::LogLease),
+            "defercommit" | "defer-commit" | "defer" => Ok(ConsistencyMode::DeferCommit),
+            "leaseguard" | "lease-guard" | "full" => Ok(ConsistencyMode::LeaseGuard),
+            other => Err(format!(
+                "unknown consistency mode '{other}' (want one of: inconsistent, quorum, \
+                 ongaro, loglease, defercommit, leaseguard)"
+            )),
+        }
+    }
+}
+
+/// All protocol + simulation + workload parameters.
+#[derive(Debug, Clone)]
+pub struct Params {
+    // ---- replica set / protocol ----
+    pub nodes: usize,
+    pub consistency: ConsistencyMode,
+    /// Election timeout ET, µs (paper: 500 ms in sims; 12-300 ms in [42];
+    /// production 1-10 s).
+    pub election_timeout_us: Micros,
+    /// Randomized extra election timeout spread, µs (Raft §5.2).
+    pub election_jitter_us: Micros,
+    /// Lease duration Δ, µs. §5.2: Δ = ET usually optimal; availability
+    /// experiments use Δ = 2·ET = 1 s to expose the transition window.
+    pub lease_duration_us: Micros,
+    /// Leader heartbeat interval, µs.
+    pub heartbeat_us: Micros,
+    /// Proactively renew the lease with a no-op when the newest entry is
+    /// older than this fraction of Δ (§5.1). 0 disables.
+    pub lease_renew_fraction: f64,
+    /// Max entries per AppendEntries message.
+    pub max_entries_per_append: usize,
+
+    // ---- clocks ----
+    pub clock_error_us: Micros,
+    pub clock_drift: f64,
+    /// §4.3 failure injection: clock bounds deliberately wrong.
+    pub clock_broken: bool,
+
+    // ---- network (simulation) ----
+    pub net_mean_us: f64,
+    pub net_variance_us2: f64,
+    pub net_min_delay_us: Micros,
+    pub net_loss: f64,
+
+    // ---- workload ----
+    /// Open-loop: one operation starts every `interarrival_us` on average.
+    pub interarrival_us: f64,
+    /// Poisson (true) vs fixed-rate (false) arrivals.
+    pub poisson_arrivals: bool,
+    pub write_fraction: f64,
+    pub num_keys: usize,
+    pub zipf_a: f64,
+    pub value_bytes: usize,
+    /// Total simulated/real duration of the experiment, µs.
+    pub duration_us: Micros,
+    /// Client-observed operation timeout, µs (fail-fast bound).
+    pub op_timeout_us: Micros,
+
+    // ---- fault schedule ----
+    /// Crash the leader at this time (0 = never), µs.
+    pub crash_leader_at_us: Micros,
+    /// Restart the crashed node this long after the crash (0 = never).
+    pub restart_after_us: Micros,
+    /// Partition the leader from its peers (but not from clients) at
+    /// this time (0 = never) — the §1 deposed-leader scenario.
+    pub partition_leader_at_us: Micros,
+    /// Heal the partition this long after it forms (0 = never).
+    pub heal_after_us: Micros,
+    /// Probability a client op goes to a random node instead of the
+    /// believed leader — models the paper's many concurrent clients,
+    /// some of which still talk to a deposed leader.
+    pub client_stray_prob: f64,
+
+    // ---- engine / misc ----
+    pub seed: u64,
+    /// Use the XLA batched read-admission engine (Layer 1/2) when the
+    /// leader filters queued reads against the limbo region.
+    pub use_xla_admission: bool,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+    /// Throughput bucket width for availability timelines, µs.
+    pub bucket_us: Micros,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            nodes: 3,
+            consistency: ConsistencyMode::LeaseGuard,
+            election_timeout_us: 500_000,
+            election_jitter_us: 150_000,
+            lease_duration_us: 1_000_000,
+            heartbeat_us: 75_000,
+            lease_renew_fraction: 0.5,
+            max_entries_per_append: 1024,
+            clock_error_us: 50,
+            clock_drift: 1e-5,
+            clock_broken: false,
+            net_mean_us: 191.0,
+            net_variance_us2: 391.0,
+            net_min_delay_us: 20,
+            net_loss: 0.0,
+            interarrival_us: 300.0,
+            poisson_arrivals: true,
+            write_fraction: 1.0 / 3.0,
+            num_keys: 1000,
+            zipf_a: 0.0,
+            value_bytes: 1024,
+            duration_us: 3_000_000,
+            op_timeout_us: 10_000_000,
+            crash_leader_at_us: 0,
+            restart_after_us: 0,
+            partition_leader_at_us: 0,
+            heal_after_us: 0,
+            client_stray_prob: 0.0,
+            seed: 1,
+            use_xla_admission: false,
+            artifacts_dir: "artifacts".to_string(),
+            bucket_us: 50_000,
+        }
+    }
+}
+
+impl Params {
+    /// Set one parameter by name. Returns an error naming valid keys on
+    /// any mismatch.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: FromStr>(k: &str, v: &str) -> Result<T, String>
+        where
+            T::Err: fmt::Display,
+        {
+            v.parse().map_err(|e| format!("bad value for {k}: '{v}' ({e})"))
+        }
+        match key {
+            "nodes" => self.nodes = p(key, value)?,
+            "consistency" => self.consistency = p(key, value)?,
+            "election_timeout_us" => self.election_timeout_us = p(key, value)?,
+            "election_jitter_us" => self.election_jitter_us = p(key, value)?,
+            "lease_duration_us" => self.lease_duration_us = p(key, value)?,
+            "heartbeat_us" => self.heartbeat_us = p(key, value)?,
+            "lease_renew_fraction" => self.lease_renew_fraction = p(key, value)?,
+            "max_entries_per_append" => self.max_entries_per_append = p(key, value)?,
+            "clock_error_us" => self.clock_error_us = p(key, value)?,
+            "clock_drift" => self.clock_drift = p(key, value)?,
+            "clock_broken" => self.clock_broken = p(key, value)?,
+            "net_mean_us" => self.net_mean_us = p(key, value)?,
+            "net_variance_us2" => self.net_variance_us2 = p(key, value)?,
+            "net_min_delay_us" => self.net_min_delay_us = p(key, value)?,
+            "net_loss" => self.net_loss = p(key, value)?,
+            "interarrival_us" => self.interarrival_us = p(key, value)?,
+            "poisson_arrivals" => self.poisson_arrivals = p(key, value)?,
+            "write_fraction" => self.write_fraction = p(key, value)?,
+            "num_keys" => self.num_keys = p(key, value)?,
+            "zipf_a" => self.zipf_a = p(key, value)?,
+            "value_bytes" => self.value_bytes = p(key, value)?,
+            "duration_us" => self.duration_us = p(key, value)?,
+            "op_timeout_us" => self.op_timeout_us = p(key, value)?,
+            "crash_leader_at_us" => self.crash_leader_at_us = p(key, value)?,
+            "restart_after_us" => self.restart_after_us = p(key, value)?,
+            "partition_leader_at_us" => self.partition_leader_at_us = p(key, value)?,
+            "heal_after_us" => self.heal_after_us = p(key, value)?,
+            "client_stray_prob" => self.client_stray_prob = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            "use_xla_admission" => self.use_xla_admission = p(key, value)?,
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "bucket_us" => self.bucket_us = p(key, value)?,
+            other => return Err(format!("unknown parameter '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file body (`key = value` lines, `#` comments).
+    pub fn apply_file(&mut self, body: &str) -> Result<(), String> {
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value, got '{raw}'", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check cross-parameter invariants before a run.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes < 1 || self.nodes % 2 == 0 {
+            return Err(format!("nodes must be odd and >= 1, got {}", self.nodes));
+        }
+        if !(0.0..=1.0).contains(&self.write_fraction) {
+            return Err("write_fraction must be in [0,1]".into());
+        }
+        if self.num_keys == 0 {
+            return Err("num_keys must be > 0".into());
+        }
+        if self.election_timeout_us <= 0 || self.lease_duration_us <= 0 {
+            return Err("timeouts must be positive".into());
+        }
+        if self.heartbeat_us >= self.election_timeout_us {
+            return Err("heartbeat_us must be < election_timeout_us".into());
+        }
+        Ok(())
+    }
+
+    /// Dump as sorted key=value lines (for EXPERIMENTS.md provenance).
+    pub fn dump(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("nodes", self.nodes.to_string());
+        m.insert("consistency", self.consistency.to_string());
+        m.insert("election_timeout_us", self.election_timeout_us.to_string());
+        m.insert("election_jitter_us", self.election_jitter_us.to_string());
+        m.insert("lease_duration_us", self.lease_duration_us.to_string());
+        m.insert("heartbeat_us", self.heartbeat_us.to_string());
+        m.insert("lease_renew_fraction", self.lease_renew_fraction.to_string());
+        m.insert("clock_error_us", self.clock_error_us.to_string());
+        m.insert("clock_drift", self.clock_drift.to_string());
+        m.insert("clock_broken", self.clock_broken.to_string());
+        m.insert("net_mean_us", self.net_mean_us.to_string());
+        m.insert("net_variance_us2", self.net_variance_us2.to_string());
+        m.insert("net_loss", self.net_loss.to_string());
+        m.insert("interarrival_us", self.interarrival_us.to_string());
+        m.insert("poisson_arrivals", self.poisson_arrivals.to_string());
+        m.insert("write_fraction", self.write_fraction.to_string());
+        m.insert("num_keys", self.num_keys.to_string());
+        m.insert("zipf_a", self.zipf_a.to_string());
+        m.insert("value_bytes", self.value_bytes.to_string());
+        m.insert("duration_us", self.duration_us.to_string());
+        m.insert("crash_leader_at_us", self.crash_leader_at_us.to_string());
+        m.insert("seed", self.seed.to_string());
+        m.insert("use_xla_admission", self.use_xla_admission.to_string());
+        m.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Params::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_roundtrip() {
+        let mut p = Params::default();
+        p.set("consistency", "quorum").unwrap();
+        p.set("lease_duration_us", "2000000").unwrap();
+        p.set("zipf_a", "0.5").unwrap();
+        assert_eq!(p.consistency, ConsistencyMode::Quorum);
+        assert_eq!(p.lease_duration_us, 2_000_000);
+        assert!((p.zipf_a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut p = Params::default();
+        assert!(p.set("no_such_param", "1").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected_with_context() {
+        let mut p = Params::default();
+        let err = p.set("nodes", "three").unwrap_err();
+        assert!(err.contains("nodes"), "{err}");
+    }
+
+    #[test]
+    fn file_parsing_with_comments() {
+        let mut p = Params::default();
+        p.apply_file(
+            "# availability experiment\nconsistency = leaseguard\n\nelection_timeout_us = 500000 # ET\n",
+        )
+        .unwrap();
+        assert_eq!(p.consistency, ConsistencyMode::LeaseGuard);
+        assert_eq!(p.election_timeout_us, 500_000);
+    }
+
+    #[test]
+    fn file_errors_name_line() {
+        let mut p = Params::default();
+        let err = p.apply_file("consistency = leaseguard\ngarbage line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_even_nodes() {
+        let mut p = Params::default();
+        p.nodes = 4;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn mode_flags_match_paper_matrix() {
+        use ConsistencyMode::*;
+        assert!(!Inconsistent.uses_log_lease() && !Quorum.uses_log_lease());
+        assert!(LogLease.uses_log_lease() && !LogLease.defers_commit());
+        assert!(DeferCommit.defers_commit() && !DeferCommit.inherited_reads());
+        assert!(LeaseGuard.defers_commit() && LeaseGuard.inherited_reads());
+    }
+
+    #[test]
+    fn mode_parse_all_names() {
+        for m in ConsistencyMode::ALL {
+            let s = m.to_string();
+            assert_eq!(s.parse::<ConsistencyMode>().unwrap(), m);
+        }
+    }
+}

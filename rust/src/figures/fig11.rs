@@ -1,0 +1,106 @@
+//! Figure 11 (Q4, real cluster): scalability — achieved throughput and
+//! p90 latency as offered load rises, for each consistency mechanism
+//! and write ratio (§7.4).
+//!
+//! Paper: 5,000 → 60,000 ops/s, stopping once latency exceeds 100 ms;
+//! write ratios 5% and 33%; 1 KiB values, uniform keys. Expected shape:
+//! quorum hits its ceiling roughly 10× below LeaseGuard; LeaseGuard ≈
+//! Ongaro ≈ inconsistent. Offered loads are scaled by `Scale` for this
+//! single-host testbed.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::client::run_open_loop;
+use crate::config::{ConsistencyMode, Params};
+use crate::report::{fmt_us, Table};
+
+use super::realcluster::RealCluster;
+use super::Scale;
+
+pub fn run(base: &Params, scale: Scale, out_dir: &str) -> Result<String> {
+    let modes = [
+        ConsistencyMode::Inconsistent,
+        ConsistencyMode::Quorum,
+        ConsistencyMode::OngaroLease,
+        ConsistencyMode::LeaseGuard,
+    ];
+    let offered: Vec<f64> = [2_000.0, 5_000.0, 10_000.0, 20_000.0, 40_000.0]
+        .iter()
+        .map(|x| x * scale.0.max(0.05))
+        .collect();
+    let write_ratios = [0.05f64, 1.0 / 3.0];
+    let mut table = Table::new([
+        "write_ratio",
+        "mode",
+        "offered_ops_s",
+        "achieved_ops_s",
+        "read_p90",
+        "write_p90",
+    ]);
+    let mut csv = Table::new([
+        "write_ratio",
+        "mode",
+        "offered_ops_s",
+        "achieved_ops_s",
+        "read_p90_us",
+        "write_p90_us",
+    ]);
+    for &wr in &write_ratios {
+        for mode in modes {
+            let mut saturated = false;
+            for &load in &offered {
+                if saturated {
+                    break;
+                }
+                let mut p = base.clone();
+                p.consistency = mode;
+                p.interarrival_us = 1_000_000.0 / load;
+                p.write_fraction = wr;
+                p.value_bytes = 1024;
+                p.duration_us = 1_500_000;
+                p.lease_duration_us = 2_000_000;
+                p.heartbeat_us = 150_000;
+                p.election_timeout_us = 800_000;
+                p.crash_leader_at_us = 0;
+                let cluster = RealCluster::spawn(&p, Duration::ZERO, None)?;
+                cluster
+                    .wait_for_leader(Duration::from_secs(10))
+                    .ok_or_else(|| anyhow::anyhow!("no leader"))?;
+                let rep = run_open_loop(&cluster.addrs, &p, None)?;
+                cluster.shutdown();
+                let dur_s = p.duration_us as f64 / 1e6;
+                let achieved =
+                    (rep.read_latency.count() + rep.write_latency.count()) as f64 / dur_s;
+                let p90 = rep.read_latency.p90().max(rep.write_latency.p90());
+                if p90 > 100_000 {
+                    saturated = true; // paper's stop rule: latency > 100 ms
+                }
+                table.row([
+                    format!("{wr:.2}"),
+                    mode.to_string(),
+                    format!("{load:.0}"),
+                    format!("{achieved:.0}"),
+                    fmt_us(rep.read_latency.p90()),
+                    fmt_us(rep.write_latency.p90()),
+                ]);
+                csv.row([
+                    format!("{wr}"),
+                    mode.to_string(),
+                    format!("{load:.0}"),
+                    format!("{achieved:.0}"),
+                    rep.read_latency.p90().to_string(),
+                    rep.write_latency.p90().to_string(),
+                ]);
+            }
+        }
+    }
+    let _ = csv.write_csv(std::path::Path::new(out_dir).join("fig11.csv").as_path());
+    Ok(format!(
+        "Figure 11 — scalability (real TCP cluster; offered load scaled ×{:.2})\n\
+         expected shape: quorum ceiling ≪ others; LeaseGuard ≈ inconsistent\n{}",
+        scale.0,
+        table.render()
+    ))
+}

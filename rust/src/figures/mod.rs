@@ -1,0 +1,51 @@
+//! One driver per paper figure (the per-experiment index in DESIGN.md).
+//!
+//! Each driver is callable from the CLI (`leaseguard figure N`), from
+//! the benches (`cargo bench --bench figN_*`), and from the examples.
+//! Drivers print the paper-shaped table/series and write CSVs to
+//! `results/` so they can be replotted.
+//!
+//! | driver | paper figure | testbed |
+//! |---|---|---|
+//! | [`fig5`]  | lease duration vs availability | simulator |
+//! | [`fig6`]  | latency vs network latency     | simulator |
+//! | [`fig7`]  | availability timeline          | simulator |
+//! | [`fig8`]  | skew vs read admission         | node + XLA engine |
+//! | [`fig9`]  | availability timeline          | real TCP cluster |
+//! | [`fig10`] | latency vs injected delay      | real TCP cluster |
+//! | [`fig11`] | scalability                    | real TCP cluster |
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod realcluster;
+
+use crate::config::Params;
+
+/// Scale knob for bench/CI runs: 1.0 = paper-sized, smaller = faster.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn dur(&self, us: i64) -> i64 {
+        ((us as f64) * self.0) as i64
+    }
+}
+
+/// Dispatch by figure number. Returns the rendered report text.
+pub fn run_figure(n: u32, params: &Params, scale: Scale, out_dir: &str) -> anyhow::Result<String> {
+    match n {
+        5 => Ok(fig5::run(params, scale, out_dir)),
+        6 => Ok(fig6::run(params, scale, out_dir)),
+        7 => Ok(fig7::run(params, scale, out_dir)),
+        8 => fig8::run(params, scale, out_dir),
+        9 => fig9::run(params, scale, out_dir),
+        10 => fig10::run(params, scale, out_dir),
+        11 => fig11::run(params, scale, out_dir),
+        _ => anyhow::bail!("no figure {n}; the paper's evaluation figures are 5-11"),
+    }
+}

@@ -1,0 +1,140 @@
+//! Client-operation histories (paper §6.2's `ClientLogEntry`).
+//!
+//! The simulator and the real client both record one [`HistoryEntry`]
+//! per operation, plus the *apply log*: the true time each Put took
+//! effect on the replica set (first application anywhere — i.e. on the
+//! committing leader). Omniscient execution timestamps are what let the
+//! checker avoid the NP-complete general case (§6.2).
+
+use std::collections::HashMap;
+
+use crate::raft::types::{FailReason, OpId};
+use crate::Micros;
+
+/// What the client asked for and what it got back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// `write(key, value)` — append `value` to the key's list.
+    Append { value: u64 },
+    /// `read(key)` — `result` is the observed list (successful reads).
+    Read { result: Vec<u64> },
+}
+
+/// One operation as the client saw it (§6.2 field-for-field, with
+/// `execution_ts` coming from the apply log rather than being trusted).
+#[derive(Debug, Clone)]
+pub struct HistoryEntry {
+    pub op: OpId,
+    pub key: u32,
+    pub kind: OpKind,
+    /// True time the client invoked the operation.
+    pub start_ts: Micros,
+    /// True time the client received the reply.
+    pub end_ts: Micros,
+    /// For successful reads: true time the read executed on a server.
+    pub execution_ts: Option<Micros>,
+    pub success: bool,
+    /// Failure classification (None when success).
+    pub fail: Option<FailReason>,
+}
+
+/// The apply log: for each (key, value), when and in what order the Put
+/// first took effect anywhere in the replica set.
+#[derive(Debug, Clone, Default)]
+pub struct ApplyLog {
+    /// (key, value) -> (true time, global apply sequence number).
+    first_applied: HashMap<(u32, u64), (Micros, u64)>,
+    seq: u64,
+}
+
+impl ApplyLog {
+    pub fn new() -> Self {
+        ApplyLog::default()
+    }
+
+    /// Record an application event (idempotent: only the first sighting
+    /// counts — that is the committing leader's apply).
+    pub fn record(&mut self, key: u32, value: u64, at: Micros) {
+        self.seq += 1;
+        self.first_applied.entry((key, value)).or_insert((at, self.seq));
+    }
+
+    pub fn applied_at(&self, key: u32, value: u64) -> Option<Micros> {
+        self.first_applied.get(&(key, value)).map(|&(t, _)| t)
+    }
+
+    /// Per-key apply sequence, ordered by (time, apply order) — the
+    /// ground-truth list every linearizable read must observe a prefix
+    /// of. O(total applies); use [`Self::sequences`] when more than one
+    /// key is needed.
+    pub fn sequence_for(&self, key: u32) -> Vec<(Micros, u64, u64)> {
+        let mut v: Vec<(Micros, u64, u64)> = self
+            .first_applied
+            .iter()
+            .filter(|((k, _), _)| *k == key)
+            .map(|(&(_, value), &(t, s))| (t, s, value))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// All per-key apply sequences in one pass (the checker's input —
+    /// per-key rescanning was the top profile entry in large runs, see
+    /// EXPERIMENTS.md §Perf iteration 6).
+    pub fn sequences(&self) -> HashMap<u32, Vec<(Micros, u64, u64)>> {
+        let mut out: HashMap<u32, Vec<(Micros, u64, u64)>> = HashMap::new();
+        for (&(key, value), &(t, s)) in &self.first_applied {
+            out.entry(key).or_default().push((t, s, value));
+        }
+        for v in out.values_mut() {
+            v.sort_unstable();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.first_applied.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.first_applied.is_empty()
+    }
+}
+
+/// A whole run: per-op entries + the apply log.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub entries: Vec<HistoryEntry>,
+    pub applies: ApplyLog,
+}
+
+impl History {
+    pub fn new() -> Self {
+        History::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_apply_wins() {
+        let mut a = ApplyLog::new();
+        a.record(1, 10, 100);
+        a.record(1, 10, 200); // follower applying later: ignored
+        assert_eq!(a.applied_at(1, 10), Some(100));
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn sequence_ordered_by_time_then_order() {
+        let mut a = ApplyLog::new();
+        a.record(1, 10, 100);
+        a.record(1, 11, 100); // same instant, applied after 10
+        a.record(1, 12, 50);
+        a.record(2, 99, 10); // other key
+        let seq: Vec<u64> = a.sequence_for(1).into_iter().map(|(_, _, v)| v).collect();
+        assert_eq!(seq, vec![12, 10, 11]);
+    }
+}

@@ -1,0 +1,42 @@
+//! The replicated state machine: an append-only-list key-value store
+//! (paper §6.1 — "write(key, value) permits a client to append value to
+//! the append-only list associated with key, and read(key) returns the
+//! values appended to this list, in order. We use append-only lists
+//! because they are ideal for checking ... linearizability").
+//!
+//! Raft's layer separation is preserved (paper §7.1): the consensus layer
+//! knows nothing about keys; the state machine knows nothing about terms
+//! or indexes. The one LeaseGuard-motivated addition is
+//! [`Store::set_limbo_region`], the paper's
+//! `StateMachine::setLimboRegion(vector<Entry>)`: while a new leader
+//! waits for a lease, the store can reject reads of keys touched by
+//! limbo entries in O(1) — or in batch via the XLA admission engine
+//! ([`crate::runtime`]).
+
+pub mod store;
+
+pub use store::Store;
+
+/// A state-machine command carried in a log entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// No-op: written by a new leader at term start and for lease
+    /// renewal (§5.1). Touches no keys.
+    Noop,
+    /// Planned-handover lease relinquishment (§5.1).
+    EndLease,
+    /// Append `value` to the list at `key`. `payload_bytes` models the
+    /// client payload size (the real server transfers that many bytes;
+    /// the store keeps the token only).
+    Put { key: u32, value: u64, payload_bytes: u32 },
+}
+
+impl Command {
+    /// The key this command touches, if any (limbo-region bookkeeping).
+    pub fn key(&self) -> Option<u32> {
+        match self {
+            Command::Put { key, .. } => Some(*key),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Append-only-list store + limbo-region read gate (paper §6.1, §7.1).
+
+use std::collections::{HashMap, HashSet};
+
+use super::Command;
+
+/// Result of asking the store to execute a read while a limbo region is
+/// installed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// The key is unaffected by the limbo region; values returned.
+    Values(Vec<u64>),
+    /// §3.3: "key affected by limbo region" — caller must reject.
+    LimboConflict,
+}
+
+/// The key-value state machine. Values are opaque u64 tokens (the real
+/// server transfers full payloads on the wire but the store retains
+/// tokens; see `kv::Command::Put`).
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    data: HashMap<u32, Vec<u64>>,
+    applied: u64,
+    /// Keys written by limbo-region entries (paper §7.1's
+    /// `unordered_set<string>`); empty = no limbo restriction.
+    limbo_keys: HashSet<u32>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Store::default()
+    }
+
+    /// Apply one committed command (called in log order).
+    pub fn apply(&mut self, cmd: &Command) {
+        self.applied += 1;
+        if let Command::Put { key, value, .. } = cmd {
+            self.data.entry(*key).or_default().push(*value);
+        }
+    }
+
+    /// Unrestricted read (no limbo check) — used when the leader has
+    /// committed in its own term, and by the linearizability oracle.
+    pub fn read(&self, key: u32) -> Vec<u64> {
+        self.data.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Read through the limbo gate (§3.3): reject if `key` is affected.
+    pub fn read_gated(&self, key: u32) -> ReadOutcome {
+        if self.limbo_keys.contains(&key) {
+            ReadOutcome::LimboConflict
+        } else {
+            ReadOutcome::Values(self.read(key))
+        }
+    }
+
+    /// Install the limbo region: the paper's
+    /// `StateMachine::setLimboRegion(vector<Entry>)` — pass the commands
+    /// of entries in `(commitIndex, lastIndexAtElection]`. An empty slice
+    /// clears the restriction (lease acquired).
+    pub fn set_limbo_region<'a, I: IntoIterator<Item = &'a Command>>(&mut self, cmds: I) {
+        self.limbo_keys.clear();
+        for c in cmds {
+            if let Some(k) = c.key() {
+                self.limbo_keys.insert(k);
+            }
+        }
+    }
+
+    pub fn limbo_key_count(&self) -> usize {
+        self.limbo_keys.len()
+    }
+
+    /// Limbo keys as a slice-able iterator (fed to the XLA admission
+    /// engine as hashes).
+    pub fn limbo_keys(&self) -> impl Iterator<Item = u32> + '_ {
+        self.limbo_keys.iter().copied()
+    }
+
+    pub fn has_limbo_region(&self) -> bool {
+        !self.limbo_keys.is_empty()
+    }
+
+    /// Number of commands applied (= lastApplied when driven by a node).
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Reset to empty (crash recovery: volatile state machine is rebuilt
+    /// by re-applying the log as entries re-commit).
+    pub fn reset(&mut self) {
+        self.data.clear();
+        self.applied = 0;
+        self.limbo_keys.clear();
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn put(key: u32, value: u64) -> Command {
+        Command::Put { key, value, payload_bytes: 0 }
+    }
+
+    #[test]
+    fn append_only_lists_in_order() {
+        let mut s = Store::new();
+        s.apply(&put(1, 10));
+        s.apply(&put(1, 11));
+        s.apply(&put(2, 20));
+        assert_eq!(s.read(1), vec![10, 11]);
+        assert_eq!(s.read(2), vec![20]);
+        assert_eq!(s.read(3), Vec::<u64>::new());
+        assert_eq!(s.applied(), 3);
+    }
+
+    #[test]
+    fn noop_touches_nothing() {
+        let mut s = Store::new();
+        s.apply(&Command::Noop);
+        s.apply(&Command::EndLease);
+        assert_eq!(s.key_count(), 0);
+        assert_eq!(s.applied(), 2);
+    }
+
+    #[test]
+    fn limbo_gate_blocks_only_affected_keys() {
+        let mut s = Store::new();
+        s.apply(&put(1, 10));
+        s.apply(&put(2, 20));
+        s.set_limbo_region([put(2, 99), Command::Noop].iter());
+        assert_eq!(s.read_gated(1), ReadOutcome::Values(vec![10]));
+        assert_eq!(s.read_gated(2), ReadOutcome::LimboConflict);
+        // Unknown keys unaffected by limbo read fine.
+        assert_eq!(s.read_gated(7), ReadOutcome::Values(vec![]));
+        assert_eq!(s.limbo_key_count(), 1);
+    }
+
+    #[test]
+    fn clearing_limbo_restores_reads() {
+        let mut s = Store::new();
+        s.set_limbo_region([put(5, 1)].iter());
+        assert!(s.has_limbo_region());
+        s.set_limbo_region([].iter());
+        assert!(!s.has_limbo_region());
+        assert_eq!(s.read_gated(5), ReadOutcome::Values(vec![]));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut s = Store::new();
+        s.apply(&put(1, 1));
+        s.set_limbo_region([put(1, 2)].iter());
+        s.reset();
+        assert_eq!(s.applied(), 0);
+        assert_eq!(s.read(1), Vec::<u64>::new());
+        assert!(!s.has_limbo_region());
+    }
+}

@@ -1,0 +1,291 @@
+//! LeaseGuard: the log is the lease (paper §3).
+//!
+//! Per-leadership state, created when a node wins an election and
+//! dropped when it steps down:
+//!
+//! * **Commit gate** (Fig 2 lines 34-38): the leader of term *t* must
+//!   not advance its commitIndex while any entry with term < *t* in its
+//!   log is possibly < Δ old — the deposed leader may still hold a lease
+//!   and be serving reads. We cache the maximum `written_at.latest` over
+//!   prior-term entries at election ([`crate::raft::Log::
+//!   max_prior_term_latest`], the paper's `lastEntryInPreviousTermIndex`
+//!   constant-time optimization), so the per-commit check is O(1).
+//! * **Limbo region** (§3.3): entries in `(commitIndex_at_election,
+//!   last_index_at_election]` whose commitment status is unknown to the
+//!   new leader. Inherited-lease reads are admitted only for keys
+//!   untouched by the region; it disappears on the first own-term
+//!   commit.
+
+use crate::clock::TimeInterval;
+use crate::raft::log::Log;
+use crate::raft::types::{Index, Term};
+use crate::Micros;
+
+/// Verdict of the local-read gate (Fig 2 ClientRead lines 18-25).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadGate {
+    /// Lease valid and newest committed entry is in the leader's own
+    /// term: serve any key.
+    Serve,
+    /// Lease valid but inherited from a prior term: serve only keys
+    /// unaffected by the limbo region (§3.3).
+    ServeUnlessLimbo,
+    /// No valid lease (newest committed entry may be > Δ old, or nothing
+    /// committed at all).
+    NoLease,
+}
+
+/// Lease diagnostics used by metrics and the XLA admission engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseStatus {
+    /// Conservative age (max possible) of the newest committed entry, µs.
+    pub commit_age_us: Micros,
+    /// Newest committed entry's term equals the current term.
+    pub own_term_commit: bool,
+    /// Lease (inherited or own) currently valid.
+    pub valid: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct LeaseGuardState {
+    /// Lease duration Δ, µs (cluster-wide constant).
+    pub delta_us: Micros,
+    /// max over prior-term entries of `written_at.latest`, fixed at
+    /// election. `None` = no prior-term entries (fresh cluster).
+    max_prior_latest: Option<Micros>,
+    /// Last log index at election — upper bound of the limbo region.
+    pub limbo_hi: Index,
+    /// commitIndex at election — lower bound (exclusive).
+    pub limbo_lo: Index,
+    /// Set once the leader commits an entry in its own term.
+    own_term_committed: bool,
+}
+
+impl LeaseGuardState {
+    /// Build at election time from the new leader's log (paper §3.3 /
+    /// Fig 3). A §5.1 planned handover — the outgoing leader's final
+    /// act is committing an end-lease entry — opens the commit gate
+    /// immediately: the prior leader has promised to serve no further
+    /// reads, so there is no lease to wait out.
+    pub fn at_election(log: &Log, term: Term, commit_index: Index, delta_us: Micros) -> Self {
+        let relinquished = matches!(
+            log.last_prior_term_entry(term),
+            Some(e) if e.command == crate::kv::Command::EndLease
+        );
+        LeaseGuardState {
+            delta_us,
+            max_prior_latest: if relinquished { None } else { log.max_prior_term_latest(term) },
+            limbo_hi: log.last_index(),
+            limbo_lo: commit_index,
+            own_term_committed: false,
+        }
+    }
+
+    /// Fig 2 lines 34-38: may the leader advance its commitIndex now?
+    /// True when every prior-term entry is *definitely* more than Δ old.
+    #[inline]
+    pub fn commit_gate_open(&self, now: TimeInterval) -> bool {
+        match self.max_prior_latest {
+            None => true,
+            Some(latest) => latest + self.delta_us < now.earliest,
+        }
+    }
+
+    /// µs until the gate opens, from the local clock's perspective
+    /// (for scheduling a re-check; 0 = open now).
+    pub fn gate_retry_after(&self, now: TimeInterval) -> Micros {
+        match self.max_prior_latest {
+            None => 0,
+            Some(latest) => (latest + self.delta_us + 1 - now.earliest).max(0),
+        }
+    }
+
+    /// Record that an own-term entry committed: the lease is now the
+    /// leader's own and the limbo region disappears (§3.3).
+    pub fn on_own_term_commit(&mut self) {
+        self.own_term_committed = true;
+    }
+
+    pub fn own_term_committed(&self) -> bool {
+        self.own_term_committed
+    }
+
+    /// The limbo region `(limbo_lo, limbo_hi]`, empty once an own-term
+    /// entry commits or if nothing was outstanding at election.
+    pub fn limbo_range(&self) -> Option<(Index, Index)> {
+        if self.own_term_committed || self.limbo_hi <= self.limbo_lo {
+            None
+        } else {
+            Some((self.limbo_lo, self.limbo_hi))
+        }
+    }
+
+    /// Number of entries in the limbo region (paper Fig 9: "a
+    /// significant limbo region of 37 possibly-committed log entries").
+    pub fn limbo_len(&self) -> u64 {
+        self.limbo_range().map(|(lo, hi)| hi - lo).unwrap_or(0)
+    }
+
+    /// The read gate (Fig 2 ClientRead): `inherited` selects whether the
+    /// §3.3 optimization is enabled (full LeaseGuard) or prior-term
+    /// leases block all reads (LogLease / DeferCommit modes).
+    pub fn read_gate(
+        &self,
+        log: &Log,
+        current_term: Term,
+        commit_index: Index,
+        now: TimeInterval,
+        inherited: bool,
+    ) -> ReadGate {
+        let Some(newest) = log.get(commit_index) else {
+            return ReadGate::NoLease; // nothing ever committed
+        };
+        // Conservative validity: stop serving as soon as the entry
+        // *might* be more than Δ old (§4.3).
+        if newest.written_at.possibly_older_than(self.delta_us, now) {
+            return ReadGate::NoLease;
+        }
+        if newest.term == current_term {
+            ReadGate::Serve
+        } else if inherited {
+            ReadGate::ServeUnlessLimbo
+        } else {
+            ReadGate::NoLease
+        }
+    }
+
+    /// Diagnostics + engine inputs.
+    pub fn status(
+        &self,
+        log: &Log,
+        current_term: Term,
+        commit_index: Index,
+        now: TimeInterval,
+    ) -> LeaseStatus {
+        match log.get(commit_index) {
+            None => LeaseStatus { commit_age_us: Micros::MAX, own_term_commit: false, valid: false },
+            Some(e) => {
+                let age = e.written_at.max_age(now).max(0);
+                LeaseStatus {
+                    commit_age_us: age,
+                    own_term_commit: e.term == current_term,
+                    valid: age <= self.delta_us,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::Command;
+    use crate::raft::log::Entry;
+
+    fn entry(term: Term, t: Micros, key: Option<u32>) -> Entry {
+        let command = match key {
+            Some(k) => Command::Put { key: k, value: 1, payload_bytes: 0 },
+            None => Command::Noop,
+        };
+        Entry { term, command, written_at: TimeInterval::exact(t) }
+    }
+
+    fn now(t: Micros) -> TimeInterval {
+        TimeInterval::exact(t)
+    }
+
+    const DELTA: Micros = 1_000_000;
+
+    fn log_two_terms() -> Log {
+        // Term-1 leader wrote through t=500k; new leader elected term 2.
+        let mut log = Log::new();
+        log.append(entry(1, 100_000, Some(1)));
+        log.append(entry(1, 400_000, Some(2)));
+        log.append(entry(1, 500_000, Some(3)));
+        log
+    }
+
+    #[test]
+    fn commit_gate_blocks_until_prior_lease_expires() {
+        let log = log_two_terms();
+        let st = LeaseGuardState::at_election(&log, 2, 1, DELTA);
+        // Prior-term newest latest = 500k; gate opens after 1.5s.
+        assert!(!st.commit_gate_open(now(1_400_000)));
+        assert!(!st.commit_gate_open(now(1_500_000))); // strict
+        assert!(st.commit_gate_open(now(1_500_001)));
+        assert_eq!(st.gate_retry_after(now(1_400_000)), 100_001);
+        assert_eq!(st.gate_retry_after(now(2_000_000)), 0);
+    }
+
+    #[test]
+    fn gate_open_with_no_prior_entries() {
+        let log = Log::new();
+        let st = LeaseGuardState::at_election(&log, 1, 0, DELTA);
+        assert!(st.commit_gate_open(now(0)));
+        assert_eq!(st.limbo_len(), 0);
+    }
+
+    #[test]
+    fn limbo_region_bounds() {
+        let log = log_two_terms();
+        // commitIndex at election = 1 → limbo = (1, 3].
+        let st = LeaseGuardState::at_election(&log, 2, 1, DELTA);
+        assert_eq!(st.limbo_range(), Some((1, 3)));
+        assert_eq!(st.limbo_len(), 2);
+        let mut st2 = st.clone();
+        st2.on_own_term_commit();
+        assert_eq!(st2.limbo_range(), None);
+    }
+
+    #[test]
+    fn read_gate_inherited_vs_not() {
+        let log = log_two_terms();
+        let st = LeaseGuardState::at_election(&log, 2, 3, DELTA);
+        // Newest committed entry (idx 3, term 1, t=500k) still < Δ old.
+        let t = now(900_000);
+        assert_eq!(st.read_gate(&log, 2, 3, t, true), ReadGate::ServeUnlessLimbo);
+        assert_eq!(st.read_gate(&log, 2, 3, t, false), ReadGate::NoLease);
+        // After expiry, no lease either way.
+        let late = now(1_600_001);
+        assert_eq!(st.read_gate(&log, 2, 3, late, true), ReadGate::NoLease);
+    }
+
+    #[test]
+    fn read_gate_own_term() {
+        let mut log = log_two_terms();
+        log.append(entry(2, 600_000, None));
+        let mut st = LeaseGuardState::at_election(&log, 2, 3, DELTA);
+        st.on_own_term_commit();
+        // commitIndex advanced to 4 (own-term noop).
+        assert_eq!(st.read_gate(&log, 2, 4, now(700_000), false), ReadGate::Serve);
+    }
+
+    #[test]
+    fn read_gate_nothing_committed() {
+        let log = log_two_terms();
+        let st = LeaseGuardState::at_election(&log, 2, 0, DELTA);
+        assert_eq!(st.read_gate(&log, 2, 0, now(0), true), ReadGate::NoLease);
+    }
+
+    #[test]
+    fn read_gate_conservative_under_uncertainty() {
+        let log = log_two_terms(); // newest committed written at 500k exact
+        let st = LeaseGuardState::at_election(&log, 2, 3, DELTA);
+        // now could be as late as 1_500_100 → entry might be > Δ old.
+        let uncertain = TimeInterval::new(1_400_000, 1_500_100);
+        assert_eq!(st.read_gate(&log, 2, 3, uncertain, true), ReadGate::NoLease);
+        // With the same midpoint but tight bounds, the lease is valid.
+        let tight = TimeInterval::new(1_449_000, 1_451_000);
+        assert_eq!(st.read_gate(&log, 2, 3, tight, true), ReadGate::ServeUnlessLimbo);
+    }
+
+    #[test]
+    fn status_reports_age() {
+        let log = log_two_terms();
+        let st = LeaseGuardState::at_election(&log, 2, 3, DELTA);
+        let s = st.status(&log, 2, 3, now(800_000));
+        assert_eq!(s.commit_age_us, 300_000);
+        assert!(!s.own_term_commit);
+        assert!(s.valid);
+    }
+}

@@ -1,0 +1,19 @@
+//! Lease protocols (paper §3, §5, §7.1).
+//!
+//! * [`leaseguard`] — LeaseGuard proper: "the log is the lease". Tracks
+//!   the deposed leader's lease deadline (commit gate, Fig 2 lines
+//!   34-38) and the limbo region for inherited-lease reads (§3.3).
+//! * [`ongaro`] — the comparison protocol from Ongaro's dissertation
+//!   §6.4.1 as the paper reconstructs it (§7.1): heartbeat-acquired
+//!   majority lease + follower vote withholding.
+//!
+//! Which protocol (if any) a node runs is selected by
+//! [`crate::config::ConsistencyMode`]; the node consults these types at
+//! exactly the three points the paper modifies Raft: read admission,
+//! write acknowledgment, and commitIndex advancement.
+
+pub mod leaseguard;
+pub mod ongaro;
+
+pub use leaseguard::{LeaseStatus, LeaseGuardState, ReadGate};
+pub use ongaro::OngaroState;

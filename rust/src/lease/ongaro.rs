@@ -1,0 +1,167 @@
+//! The "Ongaro lease" comparison protocol (paper §7.1), reconstructed
+//! from Ongaro's dissertation §6.4.1: "the leader tracks the start time
+//! of each AppendEntries message it sends to any follower. If the
+//! follower replies, the leader updates a local variable s_i ... If a
+//! majority of s_i values are less than ET old, then the leader has a
+//! lease." The leader's own s_i is the current time.
+//!
+//! The protocol additionally relies on followers withholding votes while
+//! they have heard from a leader recently; the node enforces that in
+//! Ongaro mode only (LeaseGuard leaves elections untouched, §3).
+//!
+//! Times here are local scalar µs (the node's `now.earliest`): Ongaro
+//! leases measure *durations on one node*, so interval uncertainty is
+//! not involved (the paper notes Ongaro shortens the lease slightly for
+//! clock drift and that their implementation, like ours, omits it).
+
+use std::collections::BTreeMap;
+
+use crate::{Micros, NodeId};
+
+#[derive(Debug, Clone)]
+pub struct OngaroState {
+    /// s_i: start time of the last *successful* AppendEntries per peer.
+    s: Vec<Micros>,
+    /// Outstanding sends per peer: seq -> send start time.
+    sent: Vec<BTreeMap<u64, Micros>>,
+    me: NodeId,
+}
+
+impl OngaroState {
+    pub fn new(n: usize, me: NodeId) -> Self {
+        OngaroState { s: vec![Micros::MIN; n], sent: vec![BTreeMap::new(); n], me }
+    }
+
+    /// Record that an AppendEntries round `seq` was sent to `peer` now.
+    pub fn record_send(&mut self, peer: NodeId, seq: u64, now_us: Micros) {
+        let m = &mut self.sent[peer];
+        m.insert(seq, now_us);
+        // Bound memory under loss: drop rounds no reply will ever matter
+        // for (anything older than the 1024 most recent).
+        if m.len() > 1024 {
+            let cutoff = *m.keys().nth(m.len() - 1024).unwrap();
+            *m = m.split_off(&cutoff);
+        }
+    }
+
+    /// Record a successful reply from `peer` for round `seq`.
+    pub fn record_ack(&mut self, peer: NodeId, seq: u64) {
+        if let Some(sent_at) = self.sent[peer].remove(&seq) {
+            self.s[peer] = self.s[peer].max(sent_at);
+        }
+        // Prune older outstanding rounds: a later ack implies liveness,
+        // but NOT receipt of earlier sends — however their s_i would be
+        // smaller than this one's, so they can never improve the lease.
+        let keep = self.sent[peer].split_off(&(seq + 1));
+        self.sent[peer] = keep;
+    }
+
+    /// Does the leader hold a lease at `now_us`? True iff a majority of
+    /// s_i (counting itself as `now_us`) are younger than `window_us`.
+    pub fn has_lease(&self, now_us: Micros, window_us: Micros) -> bool {
+        let n = self.s.len();
+        let majority = n / 2 + 1;
+        let mut fresh = 0usize;
+        for (i, &si) in self.s.iter().enumerate() {
+            let effective = if i == self.me { now_us } else { si };
+            if effective > Micros::MIN && now_us - effective < window_us {
+                fresh += 1;
+            }
+        }
+        fresh >= majority
+    }
+
+    /// µs until the current lease lapses with no further acks (metrics).
+    pub fn remaining(&self, now_us: Micros, window_us: Micros) -> Micros {
+        let n = self.s.len();
+        let majority = n / 2 + 1;
+        let mut ages: Vec<Micros> = (0..n)
+            .map(|i| if i == self.me { now_us } else { self.s[i] })
+            .collect();
+        ages.sort_unstable_by(|a, b| b.cmp(a)); // newest first
+        if majority > ages.len() {
+            return 0;
+        }
+        let pivot = ages[majority - 1];
+        if pivot == Micros::MIN {
+            return 0;
+        }
+        (pivot + window_us - now_us).max(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: Micros = 1_000_000;
+
+    #[test]
+    fn no_lease_before_any_ack() {
+        let o = OngaroState::new(3, 0);
+        assert!(!o.has_lease(0, W));
+    }
+
+    #[test]
+    fn majority_ack_grants_lease() {
+        let mut o = OngaroState::new(3, 0);
+        o.record_send(1, 7, 100);
+        o.record_send(2, 7, 100);
+        o.record_ack(1, 7);
+        // self + peer1 = majority of 3.
+        assert!(o.has_lease(500, W));
+        // Lease measured from the SEND time, not the ack time.
+        assert!(o.has_lease(100 + W - 1, W));
+        assert!(!o.has_lease(100 + W, W));
+    }
+
+    #[test]
+    fn ack_without_send_ignored() {
+        let mut o = OngaroState::new(3, 0);
+        o.record_ack(1, 99);
+        assert!(!o.has_lease(0, W));
+    }
+
+    #[test]
+    fn later_rounds_extend() {
+        let mut o = OngaroState::new(3, 0);
+        o.record_send(1, 1, 100);
+        o.record_ack(1, 1);
+        o.record_send(1, 2, 500_000);
+        o.record_ack(1, 2);
+        assert!(o.has_lease(500_000 + W - 1, W));
+    }
+
+    #[test]
+    fn stale_ack_cannot_regress() {
+        let mut o = OngaroState::new(3, 0);
+        o.record_send(1, 1, 100);
+        o.record_send(1, 2, 200);
+        o.record_ack(1, 2);
+        // Round 1's ack arrives late; s_1 stays at 200.
+        o.record_ack(1, 1);
+        assert!(!o.has_lease(200 + W, W));
+        assert!(o.has_lease(200 + W - 1, W));
+    }
+
+    #[test]
+    fn five_node_majority() {
+        let mut o = OngaroState::new(5, 0);
+        o.record_send(1, 1, 0);
+        o.record_ack(1, 1);
+        // self + 1 peer = 2 < 3: no lease.
+        assert!(!o.has_lease(10, W));
+        o.record_send(2, 2, 5);
+        o.record_ack(2, 2);
+        assert!(o.has_lease(10, W));
+    }
+
+    #[test]
+    fn remaining_tracks_pivot() {
+        let mut o = OngaroState::new(3, 0);
+        o.record_send(1, 1, 100);
+        o.record_ack(1, 1);
+        assert_eq!(o.remaining(500, W), 100 + W - 500);
+        assert_eq!(o.remaining(100 + W + 5, W), 0);
+    }
+}

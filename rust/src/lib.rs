@@ -1,0 +1,69 @@
+//! # LeaseGuard — Raft leader leases done right (reproduction)
+//!
+//! A from-scratch reproduction of *"LeaseGuard: Raft Leases Done Right"*
+//! (Davis, Demirbas, Deng; MongoDB Research, 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — a complete Raft implementation with the
+//!   LeaseGuard lease protocol and every consistency mechanism the paper
+//!   evaluates (quorum checks, Ongaro leases, unoptimized log leases,
+//!   deferred-commit writes, inherited-lease reads, and no consistency),
+//!   a deterministic discrete-event simulator, a threaded TCP server
+//!   ("LogCabin-equivalent" testbed), an omniscient linearizability
+//!   checker, and one experiment driver per paper figure.
+//! * **Layer 2/1 (python/, build-time only)** — the batched
+//!   read-admission model (lease-age + limbo-conflict) with a Pallas
+//!   conflict-mask kernel, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from [`runtime`] via the PJRT CPU client. Python never
+//!   runs on the request path.
+//!
+//! Entry points: the `leaseguard` binary (`rust/src/main.rs`), the
+//! `examples/`, and the per-figure benches in `rust/benches/`.
+//!
+//! Module map (see `DESIGN.md` for the full system inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`prob`] | seeded PRNG + the paper's probability distributions |
+//! | [`clock`] | bounded-uncertainty clocks (§2.2, §4.3) |
+//! | [`sim`] | deterministic event loop + simulated network (§6.1) |
+//! | [`raft`] | the Raft substrate (log, elections, replication) |
+//! | [`lease`] | LeaseGuard + Ongaro leases + consistency modes (§3, §7.1) |
+//! | [`kv`] | append-only-list KV state machine (§6.1) |
+//! | [`workload`] | open-loop workload generators (§6.3-§6.6) |
+//! | [`history`], [`linearizability`] | client histories + checker (§6.2) |
+//! | [`metrics`], [`report`] | histograms, time series, figure rendering |
+//! | [`runtime`] | PJRT artifact loading + batched read admission |
+//! | [`server`], [`client`] | real-mode TCP cluster + open-loop client (§7) |
+//! | [`cluster`] | in-process simulated replica set harness |
+//! | [`figures`] | one driver per paper figure (Figs 5-11) |
+//! | [`config`], [`cli`] | params system + hand-rolled CLI |
+//! | [`testkit`] | mini property-testing framework (proptest substitute) |
+
+pub mod cli;
+pub mod clock;
+pub mod cluster;
+pub mod config;
+pub mod figures;
+pub mod history;
+pub mod kv;
+pub mod lease;
+pub mod linearizability;
+pub mod metrics;
+pub mod prob;
+pub mod raft;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod client;
+pub mod sim;
+pub mod testkit;
+pub mod workload;
+
+/// Microseconds since an arbitrary epoch: the one time unit used across
+/// the simulator, the clocks, and the protocol (the paper works in ms/µs;
+/// µs granularity covers both the 50µs clock bounds and 10s leases).
+pub type Micros = i64;
+
+/// Node identifier within a replica set (0..n).
+pub type NodeId = usize;

@@ -1,0 +1,313 @@
+//! Omniscient linearizability checker (paper §6.2).
+//!
+//! General linearizability checking is NP-complete [18]; the paper's
+//! simulator (and ours) sidesteps it with omniscience: the true time of
+//! every execution event is known. Append-only lists make the check
+//! exact and linear:
+//!
+//! * the replica set applies Puts in one global order per key (State
+//!   Machine Safety), captured in the [`crate::history::ApplyLog`];
+//! * therefore every linearizable read must observe a *prefix* of that
+//!   per-key sequence — at least everything applied strictly before the
+//!   read executed, at most everything applied up to and including its
+//!   instant (ties at the same microsecond may serialize either way,
+//!   which subsumes the paper's same-timestamp permutation search);
+//! * a client-failed write is ambiguous (§6.2): if it was ever applied
+//!   it is treated as a write at its apply time (which is ≥ its
+//!   invocation), otherwise it must never be observed.
+//!
+//! Violations detectable: stale reads (deposed leader), future reads
+//! (optimistic limbo execution), lost acknowledged writes, reads
+//! observing never-applied values, and execution points outside the
+//! invocation window.
+
+use std::collections::HashMap;
+
+use crate::history::{History, OpKind};
+use crate::Micros;
+
+/// One detected violation, with enough context to debug the protocol.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub op: u64,
+    pub key: u32,
+    pub detail: String,
+}
+
+/// Check a run. Returns all violations (empty = linearizable).
+pub fn check(history: &History) -> Vec<Violation> {
+    let mut violations = Vec::new();
+
+    // Per-key ground-truth apply sequences, built in one pass.
+    let mut seqs: HashMap<u32, Vec<(Micros, u64, u64)>> = history.applies.sequences();
+    for e in &history.entries {
+        seqs.entry(e.key).or_default();
+    }
+
+    // 1. Acknowledged writes must have been applied, within the window.
+    for e in &history.entries {
+        if let OpKind::Append { value } = e.kind {
+            match history.applies.applied_at(e.key, value) {
+                Some(at) => {
+                    if e.success && !(e.start_ts <= at && at <= e.end_ts) {
+                        violations.push(Violation {
+                            op: e.op,
+                            key: e.key,
+                            detail: format!(
+                                "acknowledged write applied at {at} outside [{}, {}]",
+                                e.start_ts, e.end_ts
+                            ),
+                        });
+                    }
+                    if at < e.start_ts {
+                        violations.push(Violation {
+                            op: e.op,
+                            key: e.key,
+                            detail: format!(
+                                "write applied at {at} before invocation {}",
+                                e.start_ts
+                            ),
+                        });
+                    }
+                }
+                None if e.success => violations.push(Violation {
+                    op: e.op,
+                    key: e.key,
+                    detail: "acknowledged write never applied (lost update)".into(),
+                }),
+                None => {} // failed and never applied: fine
+            }
+        }
+    }
+
+    // 2. Every successful read observes a valid prefix.
+    for e in &history.entries {
+        let OpKind::Read { result } = &e.kind else { continue };
+        if !e.success {
+            continue;
+        }
+        let Some(exec) = e.execution_ts else {
+            violations.push(Violation {
+                op: e.op,
+                key: e.key,
+                detail: "successful read lacks execution timestamp".into(),
+            });
+            continue;
+        };
+        if !(e.start_ts <= exec && exec <= e.end_ts) {
+            violations.push(Violation {
+                op: e.op,
+                key: e.key,
+                detail: format!("read executed at {exec} outside [{}, {}]", e.start_ts, e.end_ts),
+            });
+        }
+        let seq = &seqs[&e.key];
+        // Prefix bounds: everything applied before exec must be seen;
+        // same-instant applies may or may not be.
+        let must = seq.partition_point(|&(t, _, _)| t < exec);
+        let may = seq.partition_point(|&(t, _, _)| t <= exec);
+        if result.len() < must || result.len() > may {
+            violations.push(Violation {
+                op: e.op,
+                key: e.key,
+                detail: format!(
+                    "read at {exec} observed {} values, expected between {must} and {may} \
+                     (stale or future read)",
+                    result.len()
+                ),
+            });
+            continue;
+        }
+        for (i, (&got, &(_, _, want))) in result.iter().zip(seq.iter()).enumerate() {
+            if got != want {
+                violations.push(Violation {
+                    op: e.op,
+                    key: e.key,
+                    detail: format!(
+                        "read observed value {got} at position {i}, apply order says {want}"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+
+    violations
+}
+
+/// Convenience: panic with a report if the history is not linearizable
+/// (used by examples and integration tests).
+pub fn assert_linearizable(history: &History) {
+    let v = check(history);
+    if !v.is_empty() {
+        let mut msg = format!("{} linearizability violation(s):\n", v.len());
+        for x in v.iter().take(10) {
+            msg.push_str(&format!("  op {} key {}: {}\n", x.op, x.key, x.detail));
+        }
+        panic!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::history::{ApplyLog, HistoryEntry};
+
+    fn write(op: u64, key: u32, value: u64, start: Micros, end: Micros, success: bool) -> HistoryEntry {
+        HistoryEntry {
+            op,
+            key,
+            kind: OpKind::Append { value },
+            start_ts: start,
+            end_ts: end,
+            execution_ts: None,
+            success,
+            fail: None,
+        }
+    }
+
+    fn read(op: u64, key: u32, result: Vec<u64>, start: Micros, exec: Micros, end: Micros) -> HistoryEntry {
+        HistoryEntry {
+            op,
+            key,
+            kind: OpKind::Read { result },
+            start_ts: start,
+            end_ts: end,
+            execution_ts: Some(exec),
+            success: true,
+            fail: None,
+        }
+    }
+
+    fn history(entries: Vec<HistoryEntry>, applies: Vec<(u32, u64, Micros)>) -> History {
+        let mut a = ApplyLog::new();
+        for (k, v, t) in applies {
+            a.record(k, v, t);
+        }
+        History { entries, applies: a }
+    }
+
+    #[test]
+    fn valid_history_passes() {
+        let h = history(
+            vec![
+                write(1, 1, 10, 0, 120, true),
+                read(2, 1, vec![10], 150, 160, 170),
+                write(3, 1, 11, 200, 320, true),
+                read(4, 1, vec![10, 11], 400, 410, 420),
+            ],
+            vec![(1, 10, 100), (1, 11, 300)],
+        );
+        assert!(check(&h).is_empty());
+    }
+
+    #[test]
+    fn stale_read_detected() {
+        // Read at 400 misses value applied at 300 — a deposed leader
+        // serving after the new leader committed (the paper's §1 bug).
+        let h = history(
+            vec![
+                write(1, 1, 10, 0, 120, true),
+                write(3, 1, 11, 200, 320, true),
+                read(4, 1, vec![10], 390, 400, 420),
+            ],
+            vec![(1, 10, 100), (1, 11, 300)],
+        );
+        let v = check(&h);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("stale or future"), "{v:?}");
+    }
+
+    #[test]
+    fn future_read_detected() {
+        // Read observes a value applied after its execution point
+        // (optimistic limbo execution, §3.3's second hazard).
+        let h = history(
+            vec![write(1, 1, 10, 0, 600, true), read(2, 1, vec![10], 100, 200, 250)],
+            vec![(1, 10, 500)],
+        );
+        let v = check(&h);
+        assert!(!v.is_empty());
+    }
+
+    #[test]
+    fn lost_acknowledged_write_detected() {
+        let h = history(vec![write(1, 1, 10, 0, 100, true)], vec![]);
+        let v = check(&h);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("never applied"));
+    }
+
+    #[test]
+    fn ambiguous_failed_write_both_ways() {
+        // Failed write never applied: ok.
+        let h = history(vec![write(1, 1, 10, 0, 100, false)], vec![]);
+        assert!(check(&h).is_empty());
+        // Failed write later applied: reads after it must see it.
+        let h = history(
+            vec![
+                write(1, 1, 10, 0, 100, false),
+                read(2, 1, vec![10], 400, 450, 500),
+            ],
+            vec![(1, 10, 300)],
+        );
+        assert!(check(&h).is_empty());
+        // ...and a read that misses it is a violation.
+        let h = history(
+            vec![
+                write(1, 1, 10, 0, 100, false),
+                read(2, 1, vec![], 400, 450, 500),
+            ],
+            vec![(1, 10, 300)],
+        );
+        assert!(!check(&h).is_empty());
+    }
+
+    #[test]
+    fn same_instant_tie_accepts_either() {
+        let h = |observed: Vec<u64>| {
+            history(
+                vec![write(1, 1, 10, 0, 300, true), read(2, 1, observed, 100, 200, 250)],
+                vec![(1, 10, 200)], // applied exactly at read execution
+            )
+        };
+        assert!(check(&h(vec![])).is_empty());
+        assert!(check(&h(vec![10])).is_empty());
+    }
+
+    #[test]
+    fn wrong_order_detected() {
+        let h = history(
+            vec![read(3, 1, vec![11, 10], 400, 450, 500)],
+            vec![(1, 10, 100), (1, 11, 200)],
+        );
+        let v = check(&h);
+        assert!(!v.is_empty());
+        assert!(v[0].detail.contains("apply order"));
+    }
+
+    #[test]
+    fn read_exec_outside_window_detected() {
+        let h = history(vec![read(1, 1, vec![], 100, 700, 200)], vec![]);
+        let v = check(&h);
+        assert!(v.iter().any(|x| x.detail.contains("outside")));
+    }
+
+    #[test]
+    fn write_applied_before_invocation_detected() {
+        let h = history(vec![write(1, 1, 10, 500, 600, true)], vec![(1, 10, 400)]);
+        assert!(!check(&h).is_empty());
+    }
+
+    #[test]
+    fn keys_are_independent() {
+        let h = history(
+            vec![
+                write(1, 1, 10, 0, 100, true),
+                read(2, 2, vec![], 200, 210, 220), // other key, empty: fine
+            ],
+            vec![(1, 10, 50)],
+        );
+        assert!(check(&h).is_empty());
+    }
+}

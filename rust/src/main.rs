@@ -1,0 +1,211 @@
+//! `leaseguard` — the launcher (Layer-3 entry point).
+//!
+//! ```text
+//! leaseguard sim      [--param k=v ...]          one simulated run + report
+//! leaseguard figure N [--scale 0.5] [--out DIR]  regenerate paper figure N (5-11)
+//! leaseguard serve    --node I --listen ADDR --peers A,B,C [--param k=v ...]
+//! leaseguard bench-cluster [--param k=v ...]     in-process real cluster + open-loop client
+//! leaseguard check    [--artifacts DIR]          verify AOT artifacts load & agree with scalar
+//! leaseguard params                              dump default parameters
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use leaseguard::cli::Args;
+use leaseguard::cluster::Cluster;
+use leaseguard::config::Params;
+use leaseguard::figures::{run_figure, Scale};
+use leaseguard::linearizability;
+use leaseguard::report::{fmt_us, timeline_chart};
+use leaseguard::runtime::{hash_key, scalar_admission, AdmissionEngine, AdmissionInputs, EngineHandle};
+use leaseguard::server::server::{Server, ServerConfig};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let mut params = Params::default();
+    args.apply_params(&mut params).map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("sim") => cmd_sim(params),
+        Some("figure") => {
+            let n: u32 = args
+                .positionals
+                .first()
+                .ok_or_else(|| anyhow!("usage: leaseguard figure <5..11>"))?
+                .parse()?;
+            let scale = Scale(args.get_parse::<f64>("scale").map_err(|e| anyhow!(e))?.unwrap_or(1.0));
+            let out = args.get("out").unwrap_or("results").to_string();
+            std::fs::create_dir_all(&out).ok();
+            let report = run_figure(n, &params, scale, &out)?;
+            println!("{report}");
+            Ok(())
+        }
+        Some("serve") => cmd_serve(args, params),
+        Some("bench-cluster") => cmd_bench_cluster(args, params),
+        Some("check") => cmd_check(&params),
+        Some("params") => {
+            print!("{}", params.dump());
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'");
+            }
+            eprintln!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: leaseguard <sim|figure|serve|bench-cluster|check|params> [--param k=v ...]
+  sim                     one simulated run (availability timeline + latency + linearizability)
+  figure <5..11>          regenerate a paper figure (--scale F, --out DIR)
+  serve                   one real server (--node I --listen ADDR --peers A,B,C)
+  bench-cluster           in-process 3-node TCP cluster + open-loop client
+  check                   load AOT artifacts, cross-check engine vs scalar oracle
+  params                  print all parameters and defaults";
+
+fn cmd_sim(params: Params) -> Result<()> {
+    println!("# simulated run\n{}", params.dump());
+    let rep = Cluster::new(params.clone()).run();
+    let reads = rep.series.ok_rate_per_sec(true);
+    let writes = rep.series.ok_rate_per_sec(false);
+    println!(
+        "{}",
+        timeline_chart(&["reads/s", "writes/s"], &[reads, writes], params.bucket_us as f64 / 1000.0)
+    );
+    println!(
+        "reads:  p50={} p90={} p99={} n={}",
+        fmt_us(rep.read_latency.p50()),
+        fmt_us(rep.read_latency.p90()),
+        fmt_us(rep.read_latency.p99()),
+        rep.read_latency.count()
+    );
+    println!(
+        "writes: p50={} p90={} p99={} n={}",
+        fmt_us(rep.write_latency.p50()),
+        fmt_us(rep.write_latency.p90()),
+        fmt_us(rep.write_latency.p99()),
+        rep.write_latency.count()
+    );
+    println!("elections={} events={} limbo={}", rep.elections, rep.events_processed, rep.limbo_len);
+    let viol = linearizability::check(&rep.history);
+    if viol.is_empty() {
+        println!("linearizability: OK ({} ops)", rep.history.entries.len());
+    } else {
+        println!("linearizability: {} VIOLATIONS", viol.len());
+        for v in viol.iter().take(5) {
+            println!("  op {} key {}: {}", v.op, v.key, v.detail);
+        }
+        bail!("history not linearizable");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, params: Params) -> Result<()> {
+    let id: usize = args
+        .get_parse("node")
+        .map_err(|e| anyhow!(e))?
+        .ok_or_else(|| anyhow!("--node required"))?;
+    let peers: Vec<String> = args
+        .get("peers")
+        .ok_or_else(|| anyhow!("--peers A,B,C required"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let mut peer_addrs = peers;
+    if let Some(listen) = args.get("listen") {
+        if id < peer_addrs.len() {
+            peer_addrs[id] = listen.to_string();
+        }
+    }
+    let engine = if params.use_xla_admission {
+        Some(EngineHandle::spawn(std::path::Path::new(&params.artifacts_dir))?)
+    } else {
+        None
+    };
+    let delay_ms: u64 = args.get_parse("delay-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let h = Server::spawn(ServerConfig {
+        id,
+        peer_addrs,
+        params,
+        one_way_delay: Duration::from_millis(delay_ms),
+        engine,
+        applies: None,
+    })?;
+    println!("node {id} serving on {} (ctrl-c to stop)", h.addr);
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench_cluster(args: &Args, params: Params) -> Result<()> {
+    use leaseguard::figures::realcluster::RealCluster;
+    let engine = if params.use_xla_admission {
+        Some(EngineHandle::spawn(std::path::Path::new(&params.artifacts_dir))?)
+    } else {
+        None
+    };
+    let delay_ms: u64 = args.get_parse("delay-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let cluster = RealCluster::spawn(&params, Duration::from_millis(delay_ms), engine)?;
+    cluster
+        .wait_for_leader(Duration::from_secs(10))
+        .ok_or_else(|| anyhow!("no leader"))?;
+    let rep =
+        leaseguard::client::run_open_loop(&cluster.addrs, &params, Some(cluster.applies.clone()))?;
+    cluster.shutdown();
+    println!(
+        "sent={} completed={} read p90={} write p90={}",
+        rep.sent,
+        rep.completed,
+        fmt_us(rep.read_latency.p90()),
+        fmt_us(rep.write_latency.p90())
+    );
+    let viol = linearizability::check(&rep.history);
+    println!(
+        "linearizability: {}",
+        if viol.is_empty() { "OK".to_string() } else { format!("{} VIOLATIONS", viol.len()) }
+    );
+    Ok(())
+}
+
+fn cmd_check(params: &Params) -> Result<()> {
+    let dir = std::path::Path::new(&params.artifacts_dir);
+    let engine = AdmissionEngine::load(dir)?;
+    println!("loaded artifacts from {}: shapes {:?}", dir.display(), engine.shapes());
+    // Cross-check against the scalar oracle on randomized cases.
+    let mut rng = leaseguard::prob::Rng::new(2024);
+    let mut checked = 0;
+    for _ in 0..50 {
+        let nq = 1 + rng.below(900) as usize;
+        let nl = rng.below(300) as usize;
+        let inp = AdmissionInputs {
+            query_hashes: (0..nq).map(|_| hash_key(rng.below(64) as u32)).collect(),
+            limbo_hashes: (0..nl).map(|_| hash_key(rng.below(64) as u32)).collect(),
+            commit_age_us: rng.below(2_000_000) as i64,
+            delta_us: 1_000_000,
+            own_term_commit: rng.chance(0.25),
+        };
+        let got = engine.admit(&inp)?;
+        if got != scalar_admission(&inp) {
+            bail!("engine/oracle mismatch on case {inp:?}");
+        }
+        checked += 1;
+    }
+    println!("engine matches scalar oracle on {checked} randomized cases — OK");
+    Ok(())
+}

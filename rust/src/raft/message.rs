@@ -1,0 +1,67 @@
+//! Raft RPCs. LeaseGuard adds **no messages and no fields** beyond
+//! vanilla Raft (paper §3: "no changes to Raft messages, no additional
+//! messages") — the only addition anywhere is the timestamp inside each
+//! log entry. `seq` on AppendEntries is a round identifier LogCabin-style
+//! implementations already need for quorum reads (ReadIndex) and that the
+//! Ongaro-lease comparator uses to match acks to send times; it does not
+//! carry lease information.
+
+use super::log::Entry;
+use super::types::{Index, Term};
+use crate::NodeId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    RequestVote {
+        term: Term,
+        candidate: NodeId,
+        last_log_index: Index,
+        last_log_term: Term,
+    },
+    VoteReply {
+        term: Term,
+        voter: NodeId,
+        granted: bool,
+    },
+    AppendEntries {
+        term: Term,
+        leader: NodeId,
+        prev_index: Index,
+        prev_term: Term,
+        entries: Vec<Entry>,
+        leader_commit: Index,
+        /// Heartbeat-round id (ReadIndex / Ongaro-lease bookkeeping).
+        seq: u64,
+    },
+    AppendReply {
+        term: Term,
+        from: NodeId,
+        success: bool,
+        /// Highest log index known replicated on `from` when success.
+        match_index: Index,
+        /// Echo of the AppendEntries round id.
+        seq: u64,
+    },
+}
+
+impl Message {
+    /// The sender's term, gossiped on every message (§2.1).
+    pub fn term(&self) -> Term {
+        match self {
+            Message::RequestVote { term, .. }
+            | Message::VoteReply { term, .. }
+            | Message::AppendEntries { term, .. }
+            | Message::AppendReply { term, .. } => *term,
+        }
+    }
+
+    /// Short tag for logs/traces.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::RequestVote { .. } => "RequestVote",
+            Message::VoteReply { .. } => "VoteReply",
+            Message::AppendEntries { .. } => "AppendEntries",
+            Message::AppendReply { .. } => "AppendReply",
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! The Raft substrate (Ongaro & Ousterhout [42]) that LeaseGuard builds
+//! on: log, messages, elections, replication, commitment.
+//!
+//! The design keeps the node a *pure state machine over time-stamped
+//! inputs*: every entry point takes the node's current clock reading
+//! (a [`crate::clock::TimeInterval`]) and returns a list of [`Output`]
+//! actions (messages to send, timers to set, client replies). The same
+//! node core is therefore driven by both the deterministic simulator
+//! ([`crate::cluster`], paper §6) and the real threaded TCP server
+//! ([`crate::server`], paper §7) — one protocol implementation, two
+//! testbeds, mirroring the paper's simulation + LogCabin methodology.
+//!
+//! LeaseGuard-specific logic (lease validity, commit gating, limbo
+//! regions, Ongaro comparison leases) lives in [`crate::lease`] and is
+//! invoked from the node at the three points the paper modifies:
+//! `ClientRead`, `ClientWrite` acknowledgment, and `CommitEntry`
+//! (paper Fig 2).
+
+pub mod log;
+pub mod message;
+pub mod node;
+pub mod types;
+
+pub use log::{Entry, Log};
+pub use message::Message;
+pub use node::{Node, NodeConfig, Output};
+pub use types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind};

@@ -1,0 +1,1554 @@
+//! The Raft + LeaseGuard node: one state machine, pure over timestamped
+//! inputs, driven by the simulator ([`crate::cluster`]) and the real TCP
+//! server ([`crate::server`]) alike.
+//!
+//! Every entry point takes the node's current clock reading and returns
+//! [`Output`] actions. The node never reads a clock, spawns a thread, or
+//! touches a socket — which is what makes runs deterministic under the
+//! simulator and the protocol logic identical across both testbeds.
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::clock::TimeInterval;
+use crate::config::{ConsistencyMode, Params};
+use crate::kv::{store::ReadOutcome, Command, Store};
+use crate::lease::{LeaseGuardState, OngaroState, ReadGate};
+use crate::prob::Rng;
+use crate::{Micros, NodeId};
+
+use super::log::{Entry, Log};
+use super::message::Message;
+use super::types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind};
+
+/// Protocol-relevant subset of [`Params`].
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub id: NodeId,
+    pub n: usize,
+    pub mode: ConsistencyMode,
+    pub election_timeout_us: Micros,
+    pub election_jitter_us: Micros,
+    pub lease_duration_us: Micros,
+    pub heartbeat_us: Micros,
+    /// §5.1 proactive renewal threshold as a fraction of Δ (0 = off).
+    pub lease_renew_fraction: f64,
+    pub max_entries_per_append: usize,
+}
+
+impl NodeConfig {
+    pub fn from_params(id: NodeId, p: &Params) -> Self {
+        NodeConfig {
+            id,
+            n: p.nodes,
+            mode: p.consistency,
+            election_timeout_us: p.election_timeout_us,
+            election_jitter_us: p.election_jitter_us,
+            lease_duration_us: p.lease_duration_us,
+            heartbeat_us: p.heartbeat_us,
+            lease_renew_fraction: p.lease_renew_fraction,
+            max_entries_per_append: p.max_entries_per_append,
+        }
+    }
+
+    fn majority(&self) -> usize {
+        self.n / 2 + 1
+    }
+}
+
+/// Actions a node asks its driver to perform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Output {
+    /// Send `msg` to node `to`.
+    Send { to: NodeId, msg: Message },
+    /// Complete a client operation.
+    Reply { op: OpId, result: OpResult },
+    /// (Re)arm a timer `after` µs from now. Only the latest request per
+    /// kind need be honored; stale firings are re-validated by the node.
+    SetTimer { kind: TimerKind, after: Micros },
+    /// A Put command was applied to the local state machine (true commit
+    /// visibility — the omniscient linearizability checker's input).
+    Applied { key: u32, value: u64 },
+    /// Informational: this node just won an election for `term`.
+    ElectedLeader { term: Term },
+    /// Informational: this node stepped down from leading.
+    SteppedDown,
+}
+
+/// A client write waiting for its entry to commit.
+#[derive(Debug, Clone)]
+struct PendingWrite {
+    op: OpId,
+    index: Index,
+}
+
+/// A quorum (ReadIndex) read waiting for a heartbeat round + apply.
+#[derive(Debug, Clone)]
+struct PendingQuorumRead {
+    op: OpId,
+    key: u32,
+    read_index: Index,
+    seq: u64,
+}
+
+/// Per-run protocol counters (merged into figure outputs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeStats {
+    pub elections_won: u64,
+    pub noops_written: u64,
+    pub reads_served_local: u64,
+    pub reads_served_quorum: u64,
+    pub reads_rejected_no_lease: u64,
+    pub reads_rejected_limbo: u64,
+    pub writes_accepted: u64,
+    pub writes_rejected_gate: u64,
+    pub commit_gate_blocks: u64,
+    pub append_entries_sent: u64,
+}
+
+#[derive(Debug)]
+pub struct Node {
+    pub cfg: NodeConfig,
+    rng: Rng,
+
+    // ---- persistent state (survives crash/restart) ----
+    current_term: Term,
+    voted_for: Option<NodeId>,
+    log: Log,
+
+    // ---- volatile ----
+    role: Role,
+    commit_index: Index,
+    leader_hint: Option<NodeId>,
+    store: Store,
+    /// Local scalar clock (now.earliest) of the last AppendEntries from
+    /// a current leader — election-timeout and Ongaro vote-withholding
+    /// basis.
+    heard_leader_at: Micros,
+    election_deadline: Micros,
+
+    // ---- candidate ----
+    votes: HashSet<NodeId>,
+
+    // ---- leader ----
+    next_index: Vec<Index>,
+    match_index: Vec<Index>,
+    inflight: Vec<bool>,
+    ae_seq: u64,
+    last_ack_seq: Vec<u64>,
+    pending_writes: VecDeque<PendingWrite>,
+    pending_reads: Vec<PendingQuorumRead>,
+    lease: Option<LeaseGuardState>,
+    ongaro: Option<OngaroState>,
+
+    pub stats: NodeStats,
+}
+
+impl Node {
+    /// Create a fresh node. Returns the initial timer requests.
+    pub fn new(cfg: NodeConfig, seed: u64, now: TimeInterval) -> (Self, Vec<Output>) {
+        let n = cfg.n;
+        let mut node = Node {
+            rng: Rng::new(seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            cfg,
+            current_term: 0,
+            voted_for: None,
+            log: Log::new(),
+            role: Role::Follower,
+            commit_index: 0,
+            leader_hint: None,
+            store: Store::new(),
+            heard_leader_at: Micros::MIN,
+            election_deadline: 0,
+            votes: HashSet::new(),
+            next_index: vec![1; n],
+            match_index: vec![0; n],
+            inflight: vec![false; n],
+            ae_seq: 0,
+            last_ack_seq: vec![0; n],
+            pending_writes: VecDeque::new(),
+            pending_reads: Vec::new(),
+            lease: None,
+            ongaro: None,
+            stats: NodeStats::default(),
+        };
+        let mut out = Vec::new();
+        node.reset_election_deadline(now, &mut out);
+        (node, out)
+    }
+
+    // ---------------------------------------------------------- accessors
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+    pub fn term(&self) -> Term {
+        self.current_term
+    }
+    pub fn commit_index(&self) -> Index {
+        self.commit_index
+    }
+    pub fn log(&self) -> &Log {
+        &self.log
+    }
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+    pub fn leader_hint(&self) -> Option<NodeId> {
+        if self.role == Role::Leader {
+            Some(self.cfg.id)
+        } else {
+            self.leader_hint
+        }
+    }
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+    pub fn lease_state(&self) -> Option<&LeaseGuardState> {
+        self.lease.as_ref()
+    }
+
+    /// Conservative local scalar time used for timers and Ongaro leases.
+    #[inline]
+    fn local_now(now: TimeInterval) -> Micros {
+        now.earliest
+    }
+
+    // ------------------------------------------------------------- timers
+
+    fn reset_election_deadline(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        let jitter = if self.cfg.election_jitter_us > 0 {
+            self.rng.range_i64(0, self.cfg.election_jitter_us)
+        } else {
+            0
+        };
+        let delay = self.cfg.election_timeout_us + jitter;
+        self.election_deadline = Self::local_now(now) + delay;
+        out.push(Output::SetTimer { kind: TimerKind::Election, after: delay });
+    }
+
+    pub fn on_timer(&mut self, now: TimeInterval, kind: TimerKind) -> Vec<Output> {
+        let mut out = Vec::new();
+        match kind {
+            TimerKind::Election => self.on_election_timer(now, &mut out),
+            TimerKind::Heartbeat => self.on_heartbeat_timer(now, &mut out),
+            TimerKind::LeaseCheck => self.on_lease_check(now, &mut out),
+        }
+        out
+    }
+
+    fn on_election_timer(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        if self.role == Role::Leader {
+            return;
+        }
+        let local = Self::local_now(now);
+        if local < self.election_deadline {
+            // Deadline was pushed out (heartbeats received); re-arm.
+            out.push(Output::SetTimer {
+                kind: TimerKind::Election,
+                after: self.election_deadline - local,
+            });
+            return;
+        }
+        self.start_election(now, out);
+    }
+
+    fn on_heartbeat_timer(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        if self.role != Role::Leader {
+            return;
+        }
+        for peer in self.peers() {
+            self.inflight[peer] = false; // heartbeat overrides the window
+            self.send_append(peer, now, out);
+        }
+        out.push(Output::SetTimer { kind: TimerKind::Heartbeat, after: self.cfg.heartbeat_us });
+    }
+
+    fn on_lease_check(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        if self.role != Role::Leader {
+            return;
+        }
+        // The commit gate may have opened (§3.2 deferred commits drain
+        // here, producing the paper's post-election write spike).
+        self.try_advance_commit(now, out);
+        // §5.1 proactive lease renewal: if the newest entry is aging and
+        // nothing newer is in flight, write a no-op.
+        if self.cfg.mode.uses_log_lease() && self.cfg.lease_renew_fraction > 0.0 {
+            let threshold =
+                (self.cfg.lease_duration_us as f64 * self.cfg.lease_renew_fraction) as Micros;
+            let needs_renewal = match self.log.get(self.log.last_index()) {
+                None => true,
+                Some(e) => e.written_at.max_age(now) > threshold,
+            };
+            if needs_renewal {
+                self.append_local(Command::Noop, now);
+                self.stats.noops_written += 1;
+                self.replicate_all(now, out);
+            }
+        }
+        out.push(Output::SetTimer { kind: TimerKind::LeaseCheck, after: self.cfg.heartbeat_us });
+    }
+
+    // ---------------------------------------------------------- elections
+
+    fn start_election(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        self.current_term += 1;
+        self.role = Role::Candidate;
+        self.voted_for = Some(self.cfg.id);
+        self.votes.clear();
+        self.votes.insert(self.cfg.id);
+        self.leader_hint = None;
+        self.reset_election_deadline(now, out);
+        if self.votes.len() >= self.cfg.majority() {
+            self.become_leader(now, out); // single-node replica set
+            return;
+        }
+        let msg = Message::RequestVote {
+            term: self.current_term,
+            candidate: self.cfg.id,
+            last_log_index: self.log.last_index(),
+            last_log_term: self.log.last_term(),
+        };
+        for peer in self.peers() {
+            out.push(Output::Send { to: peer, msg: msg.clone() });
+        }
+    }
+
+    fn become_leader(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        self.role = Role::Leader;
+        self.leader_hint = Some(self.cfg.id);
+        self.stats.elections_won += 1;
+        let last = self.log.last_index();
+        for p in 0..self.cfg.n {
+            self.next_index[p] = last + 1;
+            self.match_index[p] = 0;
+            self.inflight[p] = false;
+            self.last_ack_seq[p] = 0;
+        }
+        self.match_index[self.cfg.id] = last;
+        // LeaseGuard state: prior leader's lease deadline + limbo region
+        // (paper §3.1-§3.3), fixed at election.
+        if self.cfg.mode.uses_log_lease() {
+            let st = LeaseGuardState::at_election(
+                &self.log,
+                self.current_term,
+                self.commit_index,
+                self.cfg.lease_duration_us,
+            );
+            // Install limbo keys in the state machine (§7.1's
+            // setLimboRegion) when inherited reads are enabled.
+            if self.cfg.mode.inherited_reads() {
+                if let Some((lo, hi)) = st.limbo_range() {
+                    let cmds: Vec<Command> =
+                        self.log.iter_range(lo, hi).map(|(_, e)| e.command).collect();
+                    self.store.set_limbo_region(cmds.iter());
+                } else {
+                    self.store.set_limbo_region([].iter());
+                }
+            }
+            self.lease = Some(st);
+            out.push(Output::SetTimer { kind: TimerKind::LeaseCheck, after: self.cfg.heartbeat_us });
+        }
+        if self.cfg.mode == ConsistencyMode::OngaroLease {
+            self.ongaro = Some(OngaroState::new(self.cfg.n, self.cfg.id));
+        }
+        // Term-start no-op (standard Raft; in LeaseGuard it will become
+        // this leader's lease once the commit gate opens and it commits).
+        self.append_local(Command::Noop, now);
+        self.stats.noops_written += 1;
+        self.replicate_all(now, out);
+        out.push(Output::SetTimer { kind: TimerKind::Heartbeat, after: self.cfg.heartbeat_us });
+        out.push(Output::ElectedLeader { term: self.current_term });
+    }
+
+    fn step_down(&mut self, new_term: Term, out: &mut Vec<Output>) {
+        let was_leader = self.role == Role::Leader;
+        if new_term > self.current_term {
+            self.current_term = new_term;
+            self.voted_for = None;
+        }
+        self.role = Role::Follower;
+        self.votes.clear();
+        self.lease = None;
+        self.ongaro = None;
+        self.store.set_limbo_region([].iter());
+        // Pending writes may have replicated and may yet commit: the
+        // client must treat them as ambiguous (§6.2; checker branches).
+        for w in self.pending_writes.drain(..) {
+            out.push(Output::Reply { op: w.op, result: OpResult::Failed(FailReason::MaybeCommitted) });
+        }
+        for r in self.pending_reads.drain(..) {
+            out.push(Output::Reply { op: r.op, result: OpResult::Failed(FailReason::NotLeader) });
+        }
+        if was_leader {
+            out.push(Output::SteppedDown);
+        }
+    }
+
+    // ----------------------------------------------------------- messages
+
+    pub fn on_message(&mut self, now: TimeInterval, msg: Message) -> Vec<Output> {
+        let mut out = Vec::new();
+        // Term gossip (§2.1): any higher term converts us to follower.
+        if msg.term() > self.current_term {
+            self.step_down(msg.term(), &mut out);
+            self.reset_election_deadline(now, &mut out);
+        }
+        match msg {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+                self.on_request_vote(now, term, candidate, last_log_index, last_log_term, &mut out)
+            }
+            Message::VoteReply { term, voter, granted } => {
+                self.on_vote_reply(now, term, voter, granted, &mut out)
+            }
+            Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq } => {
+                self.on_append_entries(
+                    now, term, leader, prev_index, prev_term, entries, leader_commit, seq, &mut out,
+                )
+            }
+            Message::AppendReply { term, from, success, match_index, seq } => {
+                self.on_append_reply(now, term, from, success, match_index, seq, &mut out)
+            }
+        }
+        out
+    }
+
+    fn on_request_vote(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        candidate: NodeId,
+        last_log_index: Index,
+        last_log_term: Term,
+        out: &mut Vec<Output>,
+    ) {
+        let mut granted = false;
+        if term == self.current_term && self.role == Role::Follower {
+            // Ongaro-mode vote withholding (§7.1): a follower that heard
+            // from a leader less than Δ ago refuses to vote. LeaseGuard
+            // deliberately does NOT do this (§3 "Elections").
+            let withheld = self.cfg.mode == ConsistencyMode::OngaroLease
+                && self.heard_leader_at != Micros::MIN
+                && Self::local_now(now) - self.heard_leader_at < self.cfg.lease_duration_us;
+            let can_vote = self.voted_for.is_none() || self.voted_for == Some(candidate);
+            if !withheld
+                && can_vote
+                && self.log.candidate_up_to_date(last_log_term, last_log_index)
+            {
+                granted = true;
+                self.voted_for = Some(candidate);
+                self.reset_election_deadline(now, out);
+            }
+        }
+        out.push(Output::Send {
+            to: candidate,
+            msg: Message::VoteReply { term: self.current_term, voter: self.cfg.id, granted },
+        });
+    }
+
+    fn on_vote_reply(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        voter: NodeId,
+        granted: bool,
+        out: &mut Vec<Output>,
+    ) {
+        if self.role != Role::Candidate || term != self.current_term || !granted {
+            return;
+        }
+        self.votes.insert(voter);
+        if self.votes.len() >= self.cfg.majority() {
+            self.become_leader(now, out);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_append_entries(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        leader: NodeId,
+        prev_index: Index,
+        prev_term: Term,
+        entries: Vec<Entry>,
+        leader_commit: Index,
+        seq: u64,
+        out: &mut Vec<Output>,
+    ) {
+        if term < self.current_term {
+            out.push(Output::Send {
+                to: leader,
+                msg: Message::AppendReply {
+                    term: self.current_term,
+                    from: self.cfg.id,
+                    success: false,
+                    match_index: 0,
+                    seq,
+                },
+            });
+            return;
+        }
+        // Equal term: a candidate yields to the elected leader.
+        if self.role != Role::Follower {
+            self.step_down(term, out);
+        }
+        self.leader_hint = Some(leader);
+        self.heard_leader_at = Self::local_now(now);
+        // Randomized per-receipt jitter (Raft §5.2): follower deadlines
+        // must diverge or simultaneous timeouts split the vote and delay
+        // failover past the paper's ~ET recovery point.
+        let jitter = if self.cfg.election_jitter_us > 0 {
+            self.rng.range_i64(0, self.cfg.election_jitter_us)
+        } else {
+            0
+        };
+        self.election_deadline = Self::local_now(now) + self.cfg.election_timeout_us + jitter;
+
+        // Log consistency check.
+        let success = match self.log.term_at(prev_index) {
+            Some(t) if t == prev_term => true,
+            _ => false,
+        };
+        let mut match_index = 0;
+        if success {
+            // Append, truncating on conflict (Raft §5.3).
+            let mut idx = prev_index;
+            for e in entries {
+                idx += 1;
+                match self.log.term_at(idx) {
+                    Some(t) if t == e.term => { /* duplicate, skip */ }
+                    Some(_) => {
+                        self.log.truncate_after(idx - 1);
+                        self.log.append(e);
+                    }
+                    None => {
+                        self.log.append(e);
+                    }
+                }
+            }
+            match_index = idx;
+            // Advance follower commitIndex and apply (followers keep
+            // their state machine warm so a newly elected leader can
+            // serve inherited-lease reads immediately, §3.3).
+            let new_commit = leader_commit.min(self.log.last_index());
+            if new_commit > self.commit_index {
+                self.apply_range(self.commit_index + 1, new_commit, out);
+                self.commit_index = new_commit;
+            }
+        }
+        out.push(Output::Send {
+            to: leader,
+            msg: Message::AppendReply {
+                term: self.current_term,
+                from: self.cfg.id,
+                success,
+                match_index,
+                seq,
+            },
+        });
+    }
+
+    fn on_append_reply(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        from: NodeId,
+        success: bool,
+        match_index: Index,
+        seq: u64,
+        out: &mut Vec<Output>,
+    ) {
+        if self.role != Role::Leader || term != self.current_term {
+            return;
+        }
+        self.inflight[from] = false;
+        self.last_ack_seq[from] = self.last_ack_seq[from].max(seq);
+        if let Some(o) = self.ongaro.as_mut() {
+            o.record_ack(from, seq);
+        }
+        if success {
+            if match_index > self.match_index[from] {
+                self.match_index[from] = match_index;
+            }
+            self.next_index[from] = self.next_index[from].max(match_index + 1);
+            self.try_advance_commit(now, out);
+            self.serve_ready_quorum_reads(now, out);
+            // Continue catch-up if the follower is still behind.
+            if self.next_index[from] <= self.log.last_index() {
+                self.send_append(from, now, out);
+            }
+        } else {
+            // Back up and retry (coarse: halve toward 1).
+            let ni = &mut self.next_index[from];
+            *ni = (*ni / 2).max(1);
+            self.send_append(from, now, out);
+        }
+    }
+
+    // -------------------------------------------------------- replication
+
+    fn peers(&self) -> impl Iterator<Item = NodeId> {
+        let me = self.cfg.id;
+        (0..self.cfg.n).filter(move |&p| p != me)
+    }
+
+    /// Send one AppendEntries to `peer` carrying entries from its
+    /// next_index (bounded batch), or an empty heartbeat.
+    fn send_append(&mut self, peer: NodeId, now: TimeInterval, out: &mut Vec<Output>) {
+        if self.inflight[peer] {
+            return;
+        }
+        self.ae_seq += 1;
+        let seq = self.ae_seq;
+        let prev_index = self.next_index[peer] - 1;
+        let prev_term = self.log.term_at(prev_index).unwrap_or(0);
+        let hi = self
+            .log
+            .last_index()
+            .min(prev_index + self.cfg.max_entries_per_append as Index);
+        let entries: Vec<Entry> = self.log.slice(prev_index, hi).to_vec();
+        if let Some(o) = self.ongaro.as_mut() {
+            o.record_send(peer, seq, Self::local_now(now));
+        }
+        self.inflight[peer] = true;
+        self.stats.append_entries_sent += 1;
+        out.push(Output::Send {
+            to: peer,
+            msg: Message::AppendEntries {
+                term: self.current_term,
+                leader: self.cfg.id,
+                prev_index,
+                prev_term,
+                entries,
+                leader_commit: self.commit_index,
+                seq,
+            },
+        });
+    }
+
+    fn replicate_all(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        for peer in self.peers() {
+            self.send_append(peer, now, out);
+        }
+    }
+
+    /// Force a fresh heartbeat round to every peer (quorum reads need a
+    /// round that *starts* after the read arrives — ReadIndex). Returns
+    /// the first seq of the round: every peer's send has seq >= it.
+    fn force_round(&mut self, now: TimeInterval, out: &mut Vec<Output>) -> u64 {
+        let start_seq = self.ae_seq + 1;
+        for peer in self.peers() {
+            self.inflight[peer] = false;
+            self.send_append(peer, now, out);
+        }
+        start_seq
+    }
+
+    /// Append a command to the local log stamped with `intervalNow()`
+    /// (Fig 2 lines 5-6).
+    fn append_local(&mut self, command: Command, now: TimeInterval) -> Index {
+        let e = Entry { term: self.current_term, command, written_at: now };
+        let idx = self.log.append(e);
+        self.match_index[self.cfg.id] = idx;
+        idx
+    }
+
+    /// CommitEntry (Fig 2 lines 28-42): advance commitIndex to the
+    /// highest majority-replicated own-term index, subject to the
+    /// LeaseGuard commit gate.
+    fn try_advance_commit(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        if self.role != Role::Leader {
+            return;
+        }
+        // Highest index replicated on a majority.
+        let mut m = self.match_index.clone();
+        m.sort_unstable_by(|a, b| b.cmp(a));
+        let candidate = m[self.cfg.majority() - 1];
+        if candidate <= self.commit_index {
+            return;
+        }
+        // Raft §5.4.2: only own-term entries commit by counting.
+        if self.log.term_at(candidate) != Some(self.current_term) {
+            return;
+        }
+        // LeaseGuard commit gate (Fig 2 lines 34-38): wait until the
+        // deposed leader's lease provably expired.
+        if let Some(lease) = &self.lease {
+            if !lease.commit_gate_open(now) {
+                self.stats.commit_gate_blocks += 1;
+                let after = lease.gate_retry_after(now).max(100);
+                out.push(Output::SetTimer { kind: TimerKind::LeaseCheck, after });
+                return;
+            }
+        }
+        // §5.1 planned handover: committing our own end-lease entry is
+        // the final act of this leadership — step down afterwards.
+        let relinquishing = self
+            .log
+            .iter_range(self.commit_index, candidate)
+            .any(|(_, e)| e.term == self.current_term && e.command == Command::EndLease);
+        self.apply_range(self.commit_index + 1, candidate, out);
+        self.commit_index = candidate;
+        if relinquishing {
+            // Ack everything committed, then relinquish leadership.
+            while let Some(w) = self.pending_writes.front() {
+                if w.index <= self.commit_index {
+                    let w = self.pending_writes.pop_front().unwrap();
+                    out.push(Output::Reply { op: w.op, result: OpResult::WriteOk });
+                } else {
+                    break;
+                }
+            }
+            self.step_down(self.current_term, out);
+            return;
+        }
+        if let Some(lease) = self.lease.as_mut() {
+            if !lease.own_term_committed() {
+                lease.on_own_term_commit();
+                // Limbo region disappears (§3.3): clear the read gate.
+                self.store.set_limbo_region([].iter());
+            }
+        }
+        // Acknowledge all writes whose entries just committed — under
+        // deferred commits this is the paper's post-election ack burst.
+        while let Some(w) = self.pending_writes.front() {
+            if w.index <= self.commit_index {
+                let w = self.pending_writes.pop_front().unwrap();
+                out.push(Output::Reply { op: w.op, result: OpResult::WriteOk });
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn apply_range(&mut self, from: Index, to: Index, out: &mut Vec<Output>) {
+        for i in from..=to {
+            let e = self.log.get(i).expect("applying missing entry");
+            if let Command::Put { key, value, .. } = e.command {
+                out.push(Output::Applied { key, value });
+            }
+            let cmd = e.command;
+            self.store.apply(&cmd);
+        }
+    }
+
+    // ------------------------------------------------------ client ops
+
+    /// Handle a client write (Fig 2 ClientWrite).
+    pub fn client_write(
+        &mut self,
+        now: TimeInterval,
+        op: OpId,
+        key: u32,
+        value: u64,
+        payload_bytes: u32,
+    ) -> Vec<Output> {
+        let mut out = Vec::new();
+        if self.role != Role::Leader {
+            out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NotLeader) });
+            return out;
+        }
+        // LogLease (unoptimized): fail-fast while the commit gate is
+        // closed — the paper's Fig 7 "log-based lease" blackout. With
+        // deferred commits (§3.2) the write is accepted and replicated,
+        // and its ack waits for the gate.
+        if self.cfg.mode == ConsistencyMode::LogLease {
+            if let Some(lease) = &self.lease {
+                if !lease.commit_gate_open(now) {
+                    self.stats.writes_rejected_gate += 1;
+                    out.push(Output::Reply {
+                        op,
+                        result: OpResult::Failed(FailReason::CommitGateClosed),
+                    });
+                    return out;
+                }
+            }
+        }
+        let index = self.append_local(Command::Put { key, value, payload_bytes }, now);
+        self.pending_writes.push_back(PendingWrite { op, index });
+        self.stats.writes_accepted += 1;
+        self.replicate_all(now, &mut out);
+        // Single-node replica set commits immediately.
+        self.try_advance_commit(now, &mut out);
+        out
+    }
+
+    /// Handle a client read (Fig 2 ClientRead).
+    pub fn client_read(&mut self, now: TimeInterval, op: OpId, key: u32) -> Vec<Output> {
+        let mut out = Vec::new();
+        if self.role != Role::Leader {
+            out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NotLeader) });
+            return out;
+        }
+        match self.cfg.mode {
+            ConsistencyMode::Inconsistent => {
+                self.stats.reads_served_local += 1;
+                out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
+            }
+            ConsistencyMode::Quorum => {
+                // ReadIndex: snapshot commitIndex, require a heartbeat
+                // round started after arrival to be majority-acked.
+                let seq = self.force_round(now, &mut out);
+                self.pending_reads.push(PendingQuorumRead {
+                    op,
+                    key,
+                    read_index: self.commit_index,
+                    seq,
+                });
+                if self.cfg.n == 1 {
+                    self.serve_ready_quorum_reads(now, &mut out);
+                }
+            }
+            ConsistencyMode::OngaroLease => {
+                let has = self
+                    .ongaro
+                    .as_ref()
+                    .map(|o| o.has_lease(Self::local_now(now), self.cfg.lease_duration_us))
+                    .unwrap_or(false)
+                    || self.cfg.n == 1;
+                if has {
+                    self.stats.reads_served_local += 1;
+                    out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
+                } else {
+                    self.stats.reads_rejected_no_lease += 1;
+                    out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NoLease) });
+                }
+            }
+            ConsistencyMode::LogLease | ConsistencyMode::DeferCommit | ConsistencyMode::LeaseGuard => {
+                self.lease_read(now, op, key, &mut out);
+            }
+        }
+        out
+    }
+
+    fn lease_read(&mut self, now: TimeInterval, op: OpId, key: u32, out: &mut Vec<Output>) {
+        let inherited = self.cfg.mode.inherited_reads();
+        let gate = self
+            .lease
+            .as_ref()
+            .map(|l| l.read_gate(&self.log, self.current_term, self.commit_index, now, inherited))
+            .unwrap_or(ReadGate::NoLease);
+        match gate {
+            ReadGate::Serve => {
+                self.stats.reads_served_local += 1;
+                out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
+            }
+            ReadGate::ServeUnlessLimbo => match self.store.read_gated(key) {
+                ReadOutcome::Values(v) => {
+                    self.stats.reads_served_local += 1;
+                    out.push(Output::Reply { op, result: OpResult::ReadOk(v) });
+                }
+                ReadOutcome::LimboConflict => {
+                    self.stats.reads_rejected_limbo += 1;
+                    out.push(Output::Reply {
+                        op,
+                        result: OpResult::Failed(FailReason::LimboConflict),
+                    });
+                }
+            },
+            ReadGate::NoLease => {
+                self.stats.reads_rejected_no_lease += 1;
+                // §5.1: when writes are rare, reestablish the lease with
+                // a no-op so subsequent reads can be served.
+                if self.cfg.lease_renew_fraction > 0.0
+                    && self.log.last_index() == self.commit_index
+                {
+                    self.append_local(Command::Noop, now);
+                    self.stats.noops_written += 1;
+                    self.replicate_all(now, out);
+                }
+                out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NoLease) });
+            }
+        }
+    }
+
+    /// Batched read admission — the Layer-1/2 integration point.
+    ///
+    /// In full-LeaseGuard mode on a leader, the whole batch is judged by
+    /// one admission decision (lease age + limbo conflicts), computed by
+    /// `admit` — either [`crate::runtime::scalar_admission`] or the XLA
+    /// engine ([`crate::runtime::AdmissionEngine::admit`]); the protocol
+    /// outcome is identical by construction (both implement the Fig 2
+    /// ClientRead gate; tests pin them to each other). Other modes and
+    /// non-leaders route through the per-op path.
+    pub fn client_read_batch<F>(
+        &mut self,
+        now: TimeInterval,
+        ops: &[(OpId, u32)],
+        admit: F,
+    ) -> Vec<Output>
+    where
+        F: FnOnce(&crate::runtime::AdmissionInputs) -> Vec<bool>,
+    {
+        use crate::runtime::{hash_key, AdmissionInputs};
+        if self.role != Role::Leader || self.cfg.mode != ConsistencyMode::LeaseGuard {
+            let mut out = Vec::new();
+            for &(op, key) in ops {
+                out.extend(self.client_read(now, op, key));
+            }
+            return out;
+        }
+        let Some(lease) = self.lease.as_ref() else {
+            let mut out = Vec::new();
+            for &(op, key) in ops {
+                out.extend(self.client_read(now, op, key));
+            }
+            return out;
+        };
+        let status = lease.status(&self.log, self.current_term, self.commit_index, now);
+        let limbo_hashes: Vec<i32> = if status.own_term_commit {
+            Vec::new()
+        } else {
+            self.store.limbo_keys().map(hash_key).collect()
+        };
+        let inputs = AdmissionInputs {
+            query_hashes: ops.iter().map(|&(_, k)| hash_key(k)).collect(),
+            limbo_hashes,
+            commit_age_us: status.commit_age_us.min(i32::MAX as Micros),
+            delta_us: self.cfg.lease_duration_us.min(i32::MAX as Micros),
+            own_term_commit: status.own_term_commit,
+        };
+        let mask = admit(&inputs);
+        debug_assert_eq!(mask.len(), ops.len());
+        let mut out = Vec::new();
+        let mut renewed = false;
+        for (&(op, key), &admitted) in ops.iter().zip(mask.iter()) {
+            if admitted {
+                self.stats.reads_served_local += 1;
+                out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
+            } else if !status.valid {
+                self.stats.reads_rejected_no_lease += 1;
+                if !renewed
+                    && self.cfg.lease_renew_fraction > 0.0
+                    && self.log.last_index() == self.commit_index
+                {
+                    renewed = true;
+                    self.append_local(Command::Noop, now);
+                    self.stats.noops_written += 1;
+                    self.replicate_all(now, &mut out);
+                }
+                out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NoLease) });
+            } else {
+                self.stats.reads_rejected_limbo += 1;
+                out.push(Output::Reply { op, result: OpResult::Failed(FailReason::LimboConflict) });
+            }
+        }
+        out
+    }
+
+    /// Serve quorum reads whose round is majority-acked (ReadIndex).
+    fn serve_ready_quorum_reads(&mut self, _now: TimeInterval, out: &mut Vec<Output>) {
+        if self.pending_reads.is_empty() {
+            return;
+        }
+        let majority = self.cfg.majority();
+        let mut remaining = Vec::with_capacity(self.pending_reads.len());
+        let reads = std::mem::take(&mut self.pending_reads);
+        for r in reads {
+            // Count self plus peers whose last ack round >= r.seq.
+            let acks = 1 + self
+                .peers_ack_count(r.seq);
+            let applied_enough = self.commit_index >= r.read_index;
+            if acks >= majority && applied_enough {
+                self.stats.reads_served_quorum += 1;
+                out.push(Output::Reply {
+                    op: r.op,
+                    result: OpResult::ReadOk(self.store.read(r.key)),
+                });
+            } else {
+                remaining.push(r);
+            }
+        }
+        self.pending_reads = remaining;
+    }
+
+    fn peers_ack_count(&self, seq: u64) -> usize {
+        self.peers().filter(|&p| self.last_ack_seq[p] >= seq).count()
+    }
+
+    // -------------------------------------------------- crash / restart
+
+    /// Crash recovery: volatile state is lost; persistent (term, vote,
+    /// log) survives. The driver isolates a crashed node via the
+    /// network; this models the reboot.
+    pub fn restart(&mut self, now: TimeInterval) -> Vec<Output> {
+        let mut out = Vec::new();
+        self.role = Role::Follower;
+        self.commit_index = 0;
+        self.leader_hint = None;
+        self.store.reset();
+        self.votes.clear();
+        self.pending_writes.clear();
+        self.pending_reads.clear();
+        self.lease = None;
+        self.ongaro = None;
+        self.heard_leader_at = Micros::MIN;
+        for p in 0..self.cfg.n {
+            self.next_index[p] = 1;
+            self.match_index[p] = 0;
+            self.inflight[p] = false;
+            self.last_ack_seq[p] = 0;
+        }
+        self.reset_election_deadline(now, &mut out);
+        out
+    }
+
+    /// Planned handover (§5.1): relinquish the lease by committing an
+    /// end-lease entry, then step down once it commits. (Exposed for the
+    /// maintenance-drain example; not used by the availability figures.)
+    pub fn begin_stepdown(&mut self, now: TimeInterval) -> Vec<Output> {
+        let mut out = Vec::new();
+        if self.role != Role::Leader {
+            return out;
+        }
+        self.append_local(Command::EndLease, now);
+        self.replicate_all(now, &mut out);
+        out
+    }
+
+    /// Test/driver hook: inject log entries (e.g. to set up limbo-region
+    /// scenarios deterministically).
+    #[doc(hidden)]
+    pub fn debug_force_log(&mut self, entries: Vec<Entry>, commit: Index) {
+        let mut out = Vec::new();
+        for e in entries {
+            self.log.append(e);
+        }
+        let commit = commit.min(self.log.last_index());
+        if commit > self.commit_index {
+            self.apply_range(self.commit_index + 1, commit, &mut out);
+            self.commit_index = commit;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ET: Micros = 500_000;
+    const DELTA: Micros = 1_000_000;
+
+    fn cfg(id: NodeId, mode: ConsistencyMode) -> NodeConfig {
+        NodeConfig {
+            id,
+            n: 3,
+            mode,
+            election_timeout_us: ET,
+            election_jitter_us: 0,
+            lease_duration_us: DELTA,
+            heartbeat_us: 75_000,
+            lease_renew_fraction: 0.5,
+            max_entries_per_append: 1024,
+        }
+    }
+
+    fn t(us: Micros) -> TimeInterval {
+        TimeInterval::exact(us)
+    }
+
+    /// Drive node 0 to leadership at time `now` by faking votes.
+    fn make_leader(mode: ConsistencyMode, now: TimeInterval) -> Node {
+        let (mut n, _) = Node::new(cfg(0, mode), 1, t(0));
+        let out = n.on_timer(now, TimerKind::Election);
+        assert!(out.iter().any(|o| matches!(o, Output::Send { msg: Message::RequestVote { .. }, .. })));
+        let term = n.term();
+        let out = n.on_message(now, Message::VoteReply { term, voter: 1, granted: true });
+        assert!(out.iter().any(|o| matches!(o, Output::ElectedLeader { .. })));
+        assert!(n.is_leader());
+        n
+    }
+
+    fn ack_all(n: &mut Node, now: TimeInterval, from: NodeId) -> Vec<Output> {
+        // Ack everything the leader has. Each peer may have been sent a
+        // different round seq (a real follower echoes the seq it got);
+        // echo the last two rounds to cover this helper's callers.
+        let seq = n.ae_seq;
+        let mut out = n.on_message(
+            now,
+            Message::AppendReply {
+                term: n.term(),
+                from,
+                success: true,
+                match_index: n.log.last_index(),
+                seq: seq.saturating_sub(1),
+            },
+        );
+        out.extend(n.on_message(
+            now,
+            Message::AppendReply {
+                term: n.term(),
+                from,
+                success: true,
+                match_index: n.log.last_index(),
+                seq,
+            },
+        ));
+        out
+    }
+
+    #[test]
+    fn election_happy_path() {
+        let now = t(ET);
+        let n = make_leader(ConsistencyMode::Inconsistent, now);
+        assert_eq!(n.term(), 1);
+        assert_eq!(n.log.last_index(), 1); // term-start noop
+    }
+
+    #[test]
+    fn follower_grants_one_vote_per_term() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::Inconsistent), 2, t(0));
+        let out = f.on_message(
+            t(10),
+            Message::RequestVote { term: 1, candidate: 0, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+        ));
+        // Second candidate, same term: denied.
+        let out = f.on_message(
+            t(20),
+            Message::RequestVote { term: 1, candidate: 2, last_log_index: 5, last_log_term: 1 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: false, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn vote_denied_to_stale_log() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::Inconsistent), 2, t(0));
+        f.debug_force_log(
+            vec![Entry { term: 1, command: Command::Noop, written_at: t(5) }],
+            0,
+        );
+        f.current_term = 1;
+        let out = f.on_message(
+            t(10),
+            Message::RequestVote { term: 2, candidate: 0, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: false, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn write_commits_after_majority_ack() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Inconsistent, now);
+        ack_all(&mut n, now, 1); // commit the noop
+        let out = n.client_write(t(ET + 1000), 42, 7, 700, 0);
+        assert!(out.iter().any(|o| matches!(o, Output::Send { msg: Message::AppendEntries { .. }, .. })));
+        assert!(!out.iter().any(|o| matches!(o, Output::Reply { .. })));
+        let out = ack_all(&mut n, t(ET + 2000), 1);
+        assert!(
+            out.iter()
+                .any(|o| matches!(o, Output::Reply { op: 42, result: OpResult::WriteOk })),
+            "{out:?}"
+        );
+        assert_eq!(n.store().read(7), vec![700]);
+    }
+
+    #[test]
+    fn inconsistent_read_served_immediately() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Inconsistent, now);
+        let out = n.client_read(now, 1, 5);
+        assert!(matches!(
+            out.last(),
+            Some(Output::Reply { result: OpResult::ReadOk(v), .. }) if v.is_empty()
+        ));
+    }
+
+    #[test]
+    fn quorum_read_waits_for_round() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Quorum, now);
+        ack_all(&mut n, now, 1);
+        let out = n.client_read(t(ET + 100), 9, 3);
+        // Not served yet: needs a majority-acked round.
+        assert!(!out.iter().any(|o| matches!(o, Output::Reply { .. })));
+        let out = ack_all(&mut n, t(ET + 300), 1);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { op: 9, result: OpResult::ReadOk(_) })));
+    }
+
+    #[test]
+    fn leaseguard_read_denied_without_commit() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::LeaseGuard, now);
+        // Nothing committed yet → no lease.
+        let out = n.client_read(now, 5, 1);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { result: OpResult::Failed(FailReason::NoLease), .. })));
+    }
+
+    #[test]
+    fn leaseguard_read_served_after_own_commit_then_expires() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::LeaseGuard, now);
+        ack_all(&mut n, now, 1); // noop commits: fresh cluster, gate open
+        let out = n.client_read(t(ET + 1000), 5, 1);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { result: OpResult::ReadOk(_), .. })));
+        // After Δ with no writes, the lease expires → NoLease (+ renewal noop).
+        let late = t(ET + DELTA + 10_000);
+        let out = n.client_read(late, 6, 1);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { result: OpResult::Failed(FailReason::NoLease), .. })));
+        // Renewal noop was appended and replicated.
+        assert!(out.iter().any(|o| matches!(o, Output::Send { msg: Message::AppendEntries { .. }, .. })));
+    }
+
+    /// Build the paper's failover scene: node 1 replicated entries from a
+    /// term-1 leader (some committed), then wins term 2.
+    fn failover_leader(mode: ConsistencyMode) -> Node {
+        let (mut n, _) = Node::new(cfg(1, mode), 3, t(0));
+        // Replicate 3 entries from leader 0, the last written at 500ms;
+        // leader_commit covers only the first.
+        let entries = vec![
+            Entry { term: 1, command: Command::Put { key: 1, value: 11, payload_bytes: 0 }, written_at: t(300_000) },
+            Entry { term: 1, command: Command::Put { key: 2, value: 22, payload_bytes: 0 }, written_at: t(400_000) },
+            Entry { term: 1, command: Command::Put { key: 3, value: 33, payload_bytes: 0 }, written_at: t(500_000) },
+        ];
+        n.on_message(
+            t(500_100),
+            Message::AppendEntries {
+                term: 1,
+                leader: 0,
+                prev_index: 0,
+                prev_term: 0,
+                entries,
+                leader_commit: 1,
+                seq: 1,
+            },
+        );
+        assert_eq!(n.commit_index(), 1);
+        // Old leader crashes; node 1 times out and wins term 2.
+        let now = t(1_100_000);
+        n.on_timer(now, TimerKind::Election);
+        assert_eq!(n.role(), Role::Candidate);
+        n.on_message(now, Message::VoteReply { term: 2, voter: 2, granted: true });
+        assert!(n.is_leader());
+        n
+    }
+
+    #[test]
+    fn commit_gate_blocks_until_prior_lease_expires() {
+        let mut n = failover_leader(ConsistencyMode::LeaseGuard);
+        // Majority-ack everything (noop at index 4).
+        let now = t(1_000_200);
+        ack_all(&mut n, now, 2);
+        // Gate: last prior-term entry written at 500ms + Δ → 1.5s.
+        assert_eq!(n.commit_index(), 1, "commit must be gated");
+        assert!(n.stats.commit_gate_blocks > 0);
+        // After the lease expires the LeaseCheck timer opens the gate.
+        let late = t(1_500_200);
+        n.on_timer(late, TimerKind::LeaseCheck);
+        assert_eq!(n.commit_index(), 4);
+    }
+
+    #[test]
+    fn defer_commit_accepts_writes_while_gated() {
+        let mut n = failover_leader(ConsistencyMode::DeferCommit);
+        // Clear the initial replication window so the write below sends
+        // immediately (otherwise it rides the next heartbeat).
+        ack_all(&mut n, t(1_000_250), 2);
+        let now = t(1_000_300);
+        let out = n.client_write(now, 77, 9, 900, 0);
+        // Accepted (replication sent), not yet acked.
+        assert!(out.iter().any(|o| matches!(o, Output::Send { .. })));
+        assert!(!out.iter().any(|o| matches!(o, Output::Reply { .. })));
+        // Ack from majority; still gated.
+        ack_all(&mut n, t(1_000_400), 2);
+        assert_eq!(n.commit_index(), 1);
+        // Gate opens → deferred ack burst.
+        let out = n.on_timer(t(1_500_300), TimerKind::LeaseCheck);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { op: 77, result: OpResult::WriteOk })));
+        assert_eq!(n.commit_index(), 5);
+    }
+
+    #[test]
+    fn logllease_rejects_writes_while_gated() {
+        let mut n = failover_leader(ConsistencyMode::LogLease);
+        let out = n.client_write(t(1_000_300), 77, 9, 900, 0);
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { result: OpResult::Failed(FailReason::CommitGateClosed), .. }
+        )));
+    }
+
+    #[test]
+    fn inherited_lease_reads_respect_limbo() {
+        let mut n = failover_leader(ConsistencyMode::LeaseGuard);
+        let now = t(1_100_000); // prior lease (from 500ms entry) valid till 1.5s
+        // Limbo region = entries (1, 3]: keys 2 and 3.
+        assert_eq!(n.lease_state().unwrap().limbo_len(), 2);
+        // Key 1 (committed, not in limbo): served from inherited lease.
+        let out = n.client_read(now, 1, 1);
+        assert!(
+            out.iter().any(
+                |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if v == &vec![11])
+            ),
+            "{out:?}"
+        );
+        // Key 2 (in limbo): rejected.
+        let out = n.client_read(now, 2, 2);
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { result: OpResult::Failed(FailReason::LimboConflict), .. }
+        )));
+    }
+
+    #[test]
+    fn loglease_has_no_inherited_reads() {
+        let mut n = failover_leader(ConsistencyMode::LogLease);
+        let out = n.client_read(t(1_100_000), 1, 1);
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { result: OpResult::Failed(FailReason::NoLease), .. }
+        )));
+    }
+
+    #[test]
+    fn limbo_clears_after_own_term_commit() {
+        let mut n = failover_leader(ConsistencyMode::LeaseGuard);
+        ack_all(&mut n, t(1_000_200), 2);
+        n.on_timer(t(1_500_200), TimerKind::LeaseCheck); // gate opens, commits
+        assert!(n.lease_state().unwrap().own_term_committed());
+        // Key 2 now readable.
+        let out = n.client_read(t(1_500_300), 3, 2);
+        assert!(out.iter().any(
+            |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if v == &vec![22])
+        ));
+    }
+
+    #[test]
+    fn ongaro_lease_from_heartbeat_acks() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::OngaroLease, now);
+        // Before any ack: no lease.
+        let out = n.client_read(now, 1, 1);
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { result: OpResult::Failed(FailReason::NoLease), .. }
+        )));
+        ack_all(&mut n, t(ET + 200), 1);
+        let out = n.client_read(t(ET + 300), 2, 1);
+        assert!(out.iter().any(|o| matches!(o, Output::Reply { result: OpResult::ReadOk(_), .. })));
+        // Lease lapses without further acks after Δ from the SEND time.
+        let out = n.client_read(t(ET + DELTA + 1000), 3, 1);
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { result: OpResult::Failed(FailReason::NoLease), .. }
+        )));
+    }
+
+    #[test]
+    fn ongaro_follower_withholds_vote() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::OngaroLease), 5, t(0));
+        // Hears from leader 0 at t=100ms.
+        f.on_message(
+            t(100_000),
+            Message::AppendEntries {
+                term: 1, leader: 0, prev_index: 0, prev_term: 0,
+                entries: vec![], leader_commit: 0, seq: 1,
+            },
+        );
+        // Candidate asks at t=600ms: within Δ=1s of last AE → withheld.
+        let out = f.on_message(
+            t(600_000),
+            Message::RequestVote { term: 2, candidate: 2, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: false, .. }, .. })
+        ));
+        // At t=1.2s (past Δ since last AE): grants.
+        let out = f.on_message(
+            t(1_200_000),
+            Message::RequestVote { term: 3, candidate: 2, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn leaseguard_does_not_withhold_votes() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 5, t(0));
+        f.on_message(
+            t(100_000),
+            Message::AppendEntries {
+                term: 1, leader: 0, prev_index: 0, prev_term: 0,
+                entries: vec![], leader_commit: 0, seq: 1,
+            },
+        );
+        // §3: even a node that knows of a valid lease may vote.
+        let out = f.on_message(
+            t(150_000),
+            Message::RequestVote { term: 2, candidate: 2, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn step_down_fails_pending_ambiguously() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Inconsistent, now);
+        ack_all(&mut n, now, 1);
+        n.client_write(t(ET + 100), 50, 1, 100, 0);
+        // Higher-term message deposes.
+        let out = n.on_message(
+            t(ET + 200),
+            Message::AppendEntries {
+                term: 9, leader: 2, prev_index: 0, prev_term: 0,
+                entries: vec![], leader_commit: 0, seq: 1,
+            },
+        );
+        assert!(out.iter().any(|o| matches!(
+            o,
+            Output::Reply { op: 50, result: OpResult::Failed(FailReason::MaybeCommitted) }
+        )));
+        assert!(out.iter().any(|o| matches!(o, Output::SteppedDown)));
+        assert_eq!(n.role(), Role::Follower);
+    }
+
+    #[test]
+    fn follower_truncates_conflicts() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::Inconsistent), 8, t(0));
+        f.on_message(
+            t(100),
+            Message::AppendEntries {
+                term: 1, leader: 0, prev_index: 0, prev_term: 0,
+                entries: vec![
+                    Entry { term: 1, command: Command::Put { key: 1, value: 1, payload_bytes: 0 }, written_at: t(50) },
+                    Entry { term: 1, command: Command::Put { key: 2, value: 2, payload_bytes: 0 }, written_at: t(60) },
+                ],
+                leader_commit: 0,
+                seq: 1,
+            },
+        );
+        assert_eq!(f.log().last_index(), 2);
+        // New leader (term 3) overwrites index 2.
+        f.on_message(
+            t(200),
+            Message::AppendEntries {
+                term: 3, leader: 2, prev_index: 1, prev_term: 1,
+                entries: vec![Entry { term: 3, command: Command::Noop, written_at: t(150) }],
+                leader_commit: 2,
+                seq: 1,
+            },
+        );
+        assert_eq!(f.log().last_index(), 2);
+        assert_eq!(f.log().last_term(), 3);
+        assert_eq!(f.commit_index(), 2);
+    }
+
+    #[test]
+    fn follower_rejects_gapped_append() {
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::Inconsistent), 8, t(0));
+        let out = f.on_message(
+            t(100),
+            Message::AppendEntries {
+                term: 1, leader: 0, prev_index: 5, prev_term: 1,
+                entries: vec![], leader_commit: 0, seq: 3,
+            },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::AppendReply { success: false, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn restart_preserves_log_loses_volatile() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::LeaseGuard, now);
+        ack_all(&mut n, now, 1);
+        n.client_write(t(ET + 100), 1, 1, 10, 0);
+        ack_all(&mut n, t(ET + 200), 1);
+        assert!(n.commit_index() >= 2);
+        let log_len = n.log().last_index();
+        n.restart(t(ET + 300));
+        assert_eq!(n.role(), Role::Follower);
+        assert_eq!(n.commit_index(), 0);
+        assert_eq!(n.log().last_index(), log_len);
+        assert_eq!(n.term(), 1);
+        assert_eq!(n.store().applied(), 0);
+    }
+
+    #[test]
+    fn planned_handover_relinquishes_lease() {
+        // §5.1: the outgoing leader commits an end-lease entry as its
+        // final act; the next leader needs no gate wait.
+        let now = t(ET);
+        let mut old = make_leader(ConsistencyMode::LeaseGuard, now);
+        ack_all(&mut old, now, 1);
+        old.client_write(t(ET + 1000), 1, 5, 50, 0);
+        ack_all(&mut old, t(ET + 2000), 1);
+        // Begin the drain: append EndLease, replicate, commit.
+        let outs = old.begin_stepdown(t(ET + 3000));
+        assert!(outs.iter().any(|o| matches!(o, Output::Send { .. })));
+        let outs = ack_all(&mut old, t(ET + 4000), 1);
+        assert!(outs.iter().any(|o| matches!(o, Output::SteppedDown)), "{outs:?}");
+        assert_eq!(old.role(), Role::Follower);
+
+        // A new leader whose log ends with the EndLease entry starts
+        // with an open commit gate (no Δ wait), despite fresh entries.
+        let (mut new, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 9, t(0));
+        let entries: Vec<Entry> = old.log().slice(0, old.log().last_index()).to_vec();
+        new.on_message(
+            t(ET + 5000),
+            Message::AppendEntries {
+                term: old.term(),
+                leader: 0,
+                prev_index: 0,
+                prev_term: 0,
+                entries,
+                leader_commit: 1,
+                seq: 1,
+            },
+        );
+        new.on_timer(t(2 * ET + 5100), TimerKind::Election);
+        new.on_message(t(2 * ET + 5100), Message::VoteReply {
+            term: new.term(),
+            voter: 2,
+            granted: true,
+        });
+        assert!(new.is_leader());
+        // Gate open immediately: majority ack commits everything now,
+        // long before the EndLease entry is Δ old.
+        ack_all(&mut new, t(2 * ET + 6000), 2);
+        assert_eq!(new.commit_index(), new.log().last_index());
+        let out = new.client_read(t(2 * ET + 7000), 99, 5);
+        assert!(out.iter().any(|o| matches!(o, Output::Reply { result: OpResult::ReadOk(_), .. })));
+    }
+
+    #[test]
+    fn applied_outputs_emitted_once_per_put() {
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Inconsistent, now);
+        ack_all(&mut n, now, 1);
+        n.client_write(t(ET + 100), 1, 3, 30, 0);
+        let out = ack_all(&mut n, t(ET + 200), 1);
+        let applied: Vec<_> = out
+            .iter()
+            .filter(|o| matches!(o, Output::Applied { key: 3, value: 30 }))
+            .collect();
+        assert_eq!(applied.len(), 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! Core identifier and result types shared across the Raft stack.
+
+/// Election term. Starts at 0 (no leader ever elected), increments on
+/// each candidacy.
+pub type Term = u64;
+
+/// 1-based log position; 0 means "nothing" (before the first entry).
+pub type Index = u64;
+
+/// Client operation identifier, unique per run (assigned by the workload
+/// generator / client library, echoed back in replies).
+pub type OpId = u64;
+
+/// Raft node role.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+/// Why an operation failed (client-visible; the figures bucket these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// This node is not the leader; hint may name the real one.
+    NotLeader,
+    /// Lease modes: no valid lease to serve a local read, and the
+    /// implementation is configured fail-fast (paper Fig 7 note).
+    NoLease,
+    /// Inherited-lease reads: the key is affected by a limbo-region
+    /// entry (paper §3.3).
+    LimboConflict,
+    /// LogLease mode without deferred commits: writes rejected while the
+    /// commit gate is closed.
+    CommitGateClosed,
+    /// Leader deposed/crashed while the op was pending — the op *may*
+    /// have succeeded (ambiguous; the linearizability checker branches).
+    MaybeCommitted,
+    /// Client-side timeout (open-loop client gave up waiting).
+    Timeout,
+}
+
+/// Result of a client operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpResult {
+    WriteOk,
+    /// The append-only list for the key, in commit order (§6.1).
+    ReadOk(Vec<u64>),
+    Failed(FailReason),
+}
+
+impl OpResult {
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, OpResult::Failed(_))
+    }
+}
+
+/// Timers a node may request from its driver (simulator or real server).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimerKind {
+    /// Election timeout check (followers/candidates).
+    Election,
+    /// Leader heartbeat tick.
+    Heartbeat,
+    /// Re-evaluate the commit gate / lease renewal (§3.2, §5.1).
+    LeaseCheck,
+}

@@ -1,0 +1,155 @@
+//! Rendering experiment results: ASCII tables, sparkline-style timeline
+//! charts for the availability figures, and CSV emission so results can
+//! be re-plotted elsewhere. Everything the figure drivers print flows
+//! through here.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple aligned table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(r.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(r);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:>width$}  ", c, width = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(r, &widths, &mut out);
+        }
+        out
+    }
+
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// ASCII timeline chart: one row per series, one character per bucket,
+/// height-coded by value (the availability figures at terminal
+/// resolution).
+pub fn timeline_chart(labels: &[&str], series: &[Vec<f64>], bucket_ms: f64) -> String {
+    const GLYPHS: &[char] = &[' ', '\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}', '\u{2585}', '\u{2586}', '\u{2587}', '\u{2588}'];
+    let maxv = series
+        .iter()
+        .flat_map(|s| s.iter().copied())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut out = String::new();
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    for (label, s) in labels.iter().zip(series.iter()) {
+        let _ = write!(out, "{label:>label_w$} |");
+        for &v in s {
+            let idx = ((v / maxv) * (GLYPHS.len() - 1) as f64).round() as usize;
+            out.push(GLYPHS[idx.min(GLYPHS.len() - 1)]);
+        }
+        let _ = writeln!(out, "| max={maxv:.0}/s");
+    }
+    let n = series.first().map(|s| s.len()).unwrap_or(0);
+    let _ = writeln!(
+        out,
+        "{:>label_w$} |{}| ({} buckets x {:.0} ms)",
+        "t",
+        (0..n).map(|i| if i % 10 == 0 { '+' } else { '-' }).collect::<String>(),
+        n,
+        bucket_ms
+    );
+    out
+}
+
+/// Format µs as a human latency string.
+pub fn fmt_us(us: i64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1e6)
+    } else if us >= 1000 {
+        format!("{:.2}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}µs")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["mode", "p90(read)", "p90(write)"]);
+        t.row(["quorum", "5.1ms", "5.3ms"]);
+        t.row(["leaseguard", "120µs", "5.2ms"]);
+        let s = t.render();
+        assert!(s.contains("quorum"));
+        assert!(s.lines().count() == 4);
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert_eq!(widths[0], widths[2], "aligned rows");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(["x", "y"]);
+        t.row(["1", "2"]);
+        let p = std::env::temp_dir().join("leaseguard_test_table.csv");
+        t.write_csv(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "x,y\n1,2\n");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn chart_has_one_row_per_series() {
+        let s = timeline_chart(&["reads", "writes"], &[vec![0.0, 5.0, 10.0], vec![1.0, 1.0, 1.0]], 50.0);
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn fmt_us_scales() {
+        assert_eq!(fmt_us(900), "900µs");
+        assert_eq!(fmt_us(1500), "1.50ms");
+        assert_eq!(fmt_us(2_000_000), "2.00s");
+    }
+}

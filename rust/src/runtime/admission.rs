@@ -1,0 +1,112 @@
+//! Read-admission ABI shared between the scalar fallback and the XLA
+//! engine. Mirrors `python/compile/model.py` exactly — the pytest suite
+//! pins the Python side to `ref.py`, and `engine::tests` pins the Rust
+//! execution of the artifact to [`scalar_admission`], closing the loop.
+
+use crate::Micros;
+
+/// Padding sentinel for unused limbo slots (i32::MIN); reserved — no
+/// real key may hash to it (see [`hash_key`]).
+pub const PAD_SENTINEL: i32 = i32::MIN;
+
+/// Hash a key id into the i32 hash space of the kernel ABI.
+///
+/// Collisions are harmless in one direction only: a colliding read is
+/// spuriously *rejected* (conservative), never wrongly admitted —
+/// rejection just means the client retries after the lease resolves.
+/// The sentinel is remapped so padding can never match a query.
+#[inline]
+pub fn hash_key(key: u32) -> i32 {
+    // splitmix-style avalanche, folded to 32 bits.
+    let mut z = (key as u64).wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    let h = (z ^ (z >> 31)) as u32 as i32;
+    if h == PAD_SENTINEL {
+        0x5EED
+    } else {
+        h
+    }
+}
+
+/// Inputs to one batched admission decision (the Layer-2 model's ABI).
+#[derive(Debug, Clone)]
+pub struct AdmissionInputs {
+    /// Hashes of the keys the queued reads touch (one per read).
+    pub query_hashes: Vec<i32>,
+    /// Hashes of keys written in the limbo region.
+    pub limbo_hashes: Vec<i32>,
+    /// Conservative age of the newest committed entry, µs
+    /// (`now.latest - entry.earliest`).
+    pub commit_age_us: Micros,
+    /// Lease duration Δ, µs.
+    pub delta_us: Micros,
+    /// Newest committed entry is in the leader's own term (no limbo
+    /// restriction applies).
+    pub own_term_commit: bool,
+}
+
+/// Scalar reference implementation of the admission decision — the
+/// oracle the XLA engine is tested against, and the non-engine path.
+pub fn scalar_admission(inp: &AdmissionInputs) -> Vec<bool> {
+    let lease_valid = inp.commit_age_us < inp.delta_us;
+    inp.query_hashes
+        .iter()
+        .map(|q| {
+            if !lease_valid {
+                return false;
+            }
+            if inp.own_term_commit {
+                return true;
+            }
+            !inp.limbo_hashes.iter().any(|l| l == q && *l != PAD_SENTINEL)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_never_emits_sentinel() {
+        for k in 0..200_000u32 {
+            assert_ne!(hash_key(k), PAD_SENTINEL);
+        }
+    }
+
+    #[test]
+    fn hash_distinct_for_small_keyspace() {
+        // The experiments use ≤ 4096 keys; hashes must be collision-free
+        // there so conflict checks are exact, not merely conservative.
+        let mut hs: Vec<i32> = (0..4096).map(hash_key).collect();
+        hs.sort_unstable();
+        hs.dedup();
+        assert_eq!(hs.len(), 4096);
+    }
+
+    #[test]
+    fn scalar_rules() {
+        let base = AdmissionInputs {
+            query_hashes: vec![1, 2, 3],
+            limbo_hashes: vec![2],
+            commit_age_us: 10,
+            delta_us: 100,
+            own_term_commit: false,
+        };
+        assert_eq!(scalar_admission(&base), vec![true, false, true]);
+        // Expired lease rejects all.
+        let mut e = base.clone();
+        e.commit_age_us = 100;
+        assert_eq!(scalar_admission(&e), vec![false, false, false]);
+        // Own-term commit ignores limbo.
+        let mut o = base.clone();
+        o.own_term_commit = true;
+        assert_eq!(scalar_admission(&o), vec![true, true, true]);
+        // Sentinel in limbo never matches.
+        let mut s = base.clone();
+        s.query_hashes = vec![PAD_SENTINEL];
+        s.limbo_hashes = vec![PAD_SENTINEL];
+        assert_eq!(scalar_admission(&s), vec![true]);
+    }
+}

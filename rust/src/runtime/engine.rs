@@ -1,0 +1,256 @@
+//! PJRT execution of the AOT read-admission model.
+//!
+//! Artifacts are compiled **once** at engine construction (startup), so
+//! the request path is: pad inputs → 3 host literals → execute → read
+//! back the i32 mask. Python is never involved at runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::admission::{scalar_admission, AdmissionInputs, PAD_SENTINEL};
+
+/// One compiled (B, K) shape point.
+struct Variant {
+    b: usize,
+    k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Engine runtime counters (perf pass visibility).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub queries: u64,
+    pub scalar_fallbacks: u64,
+}
+
+pub struct AdmissionEngine {
+    variants: Vec<Variant>,
+    stats: std::cell::Cell<EngineStats>,
+}
+
+impl AdmissionEngine {
+    /// Load every `read_admission_b{B}_k{K}.hlo.txt` in `dir`, compile
+    /// on the PJRT CPU client. Fails if none found (run `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut variants = Vec::new();
+        let rd = std::fs::read_dir(dir)
+            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+        let mut paths: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        paths.sort();
+        for path in paths {
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            let Some(bk) = parse_artifact_name(name) else { continue };
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            variants.push(Variant { b: bk.0, k: bk.1, exe });
+        }
+        if variants.is_empty() {
+            bail!("no read_admission artifacts in {} (run `make artifacts`)", dir.display());
+        }
+        variants.sort_by_key(|v| (v.b, v.k));
+        Ok(AdmissionEngine { variants, stats: Default::default() })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.get()
+    }
+
+    /// Shape points available (b, k), sorted ascending.
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.variants.iter().map(|v| (v.b, v.k)).collect()
+    }
+
+    /// Batched admission decision. Pads/chunks to the compiled shapes;
+    /// falls back to the scalar path only if the limbo region exceeds
+    /// every compiled K (conservatively correct either way).
+    pub fn admit(&self, inp: &AdmissionInputs) -> Result<Vec<bool>> {
+        let mut stats = self.stats.get();
+        stats.calls += 1;
+        stats.queries += inp.query_hashes.len() as u64;
+        let max_k = self.variants.iter().map(|v| v.k).max().unwrap();
+        if inp.limbo_hashes.len() > max_k {
+            stats.scalar_fallbacks += 1;
+            self.stats.set(stats);
+            return Ok(scalar_admission(inp));
+        }
+        self.stats.set(stats);
+        let mut out = Vec::with_capacity(inp.query_hashes.len());
+        // Pick the smallest variant that fits the limbo region; chunk
+        // queries through its B.
+        let v = self
+            .variants
+            .iter()
+            .find(|v| v.k >= inp.limbo_hashes.len())
+            .expect("max_k checked above");
+        let mut limbo = inp.limbo_hashes.clone();
+        limbo.resize(v.k, PAD_SENTINEL);
+        let age = inp.commit_age_us.clamp(0, i32::MAX as i64) as i32;
+        let delta = inp.delta_us.clamp(0, i32::MAX as i64) as i32;
+        let scalars = [age, delta, inp.own_term_commit as i32, 0];
+        for chunk in inp.query_hashes.chunks(v.b.max(1)) {
+            let mut q = chunk.to_vec();
+            q.resize(v.b, PAD_SENTINEL);
+            let mask = self.execute(v, &q, &limbo, &scalars)?;
+            out.extend(mask.iter().take(chunk.len()).map(|&m| m != 0));
+        }
+        Ok(out)
+    }
+
+    fn execute(&self, v: &Variant, q: &[i32], l: &[i32], s: &[i32; 4]) -> Result<Vec<i32>> {
+        let ql = xla::Literal::vec1(q);
+        let ll = xla::Literal::vec1(l);
+        let sl = xla::Literal::vec1(&s[..]);
+        let res = v
+            .exe
+            .execute::<xla::Literal>(&[ql, ll, sl])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = res[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        let tup = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        tup.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Thread-safe handle to an [`AdmissionEngine`].
+///
+/// PJRT client/executable types are `!Send` (they hold `Rc` internals),
+/// so the engine lives on a dedicated owner thread; handles are cheap
+/// to clone and serialize all executions through a channel — which also
+/// matches the deployment reality that one compiled executable serves
+/// the whole process.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: std::sync::mpsc::Sender<(AdmissionInputs, std::sync::mpsc::Sender<Result<Vec<bool>, String>>)>,
+}
+
+impl EngineHandle {
+    /// Spawn the owner thread and load artifacts there. Blocks until the
+    /// load finishes so failures surface immediately.
+    pub fn spawn(dir: &Path) -> Result<EngineHandle> {
+        let dir = dir.to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<(
+            AdmissionInputs,
+            std::sync::mpsc::Sender<Result<Vec<bool>, String>>,
+        )>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<(), String>>();
+        std::thread::spawn(move || {
+            let engine = match AdmissionEngine::load(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            while let Ok((inp, reply)) = rx.recv() {
+                let _ = reply.send(engine.admit(&inp).map_err(|e| format!("{e:#}")));
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(EngineHandle { tx })
+    }
+
+    /// Execute one batched admission on the owner thread.
+    pub fn admit(&self, inp: &AdmissionInputs) -> Result<Vec<bool>> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        self.tx
+            .send((inp.clone(), rtx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rrx.recv().map_err(|_| anyhow!("engine thread gone"))?.map_err(|e| anyhow!(e))
+    }
+}
+
+/// Parse `read_admission_b{B}_k{K}.hlo.txt` → (B, K).
+fn parse_artifact_name(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("read_admission_b")?;
+    let rest = rest.strip_suffix(".hlo.txt")?;
+    let (b, k) = rest.split_once("_k")?;
+    Some((b.parse().ok()?, k.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prob::Rng;
+    use crate::runtime::admission::hash_key;
+
+    fn engine() -> Option<AdmissionEngine> {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping engine test: run `make artifacts` first");
+            return None;
+        }
+        Some(AdmissionEngine::load(dir).expect("engine load"))
+    }
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(parse_artifact_name("read_admission_b256_k128.hlo.txt"), Some((256, 128)));
+        assert_eq!(parse_artifact_name("manifest.json"), None);
+        assert_eq!(parse_artifact_name("read_admission_bx_k1.hlo.txt"), None);
+    }
+
+    #[test]
+    fn engine_matches_scalar_oracle() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(99);
+        for trial in 0..20 {
+            let nq = 1 + rng.below(700) as usize;
+            let nl = rng.below(250) as usize;
+            let keyspace = 1 + rng.below(50) as u32;
+            let inp = AdmissionInputs {
+                query_hashes: (0..nq).map(|_| hash_key(rng.below(keyspace as u64) as u32)).collect(),
+                limbo_hashes: (0..nl).map(|_| hash_key(rng.below(keyspace as u64) as u32)).collect(),
+                commit_age_us: rng.below(2_000_000) as i64,
+                delta_us: 1_000_000,
+                own_term_commit: rng.chance(0.3),
+            };
+            let got = e.admit(&inp).unwrap();
+            let want = scalar_admission(&inp);
+            assert_eq!(got, want, "trial {trial} nq={nq} nl={nl}");
+        }
+    }
+
+    #[test]
+    fn engine_handles_empty_limbo_and_chunking() {
+        let Some(e) = engine() else { return };
+        let inp = AdmissionInputs {
+            query_hashes: (0..3000).map(hash_key).collect(),
+            limbo_hashes: vec![],
+            commit_age_us: 0,
+            delta_us: 1_000_000,
+            own_term_commit: false,
+        };
+        let got = e.admit(&inp).unwrap();
+        assert_eq!(got.len(), 3000);
+        assert!(got.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn engine_falls_back_when_limbo_huge() {
+        let Some(e) = engine() else { return };
+        let inp = AdmissionInputs {
+            query_hashes: vec![hash_key(1)],
+            limbo_hashes: (0..10_000).map(hash_key).collect(),
+            commit_age_us: 0,
+            delta_us: 1_000_000,
+            own_term_commit: false,
+        };
+        let got = e.admit(&inp).unwrap();
+        assert_eq!(got, scalar_admission(&inp));
+        assert!(e.stats().scalar_fallbacks > 0);
+    }
+}

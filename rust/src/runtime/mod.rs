@@ -1,0 +1,23 @@
+//! Layer-3 ↔ Layer-1/2 bridge: loads the AOT-compiled read-admission
+//! model (`artifacts/*.hlo.txt`, produced once at build time by
+//! `python/compile/aot.py`) and executes it from the coordinator's hot
+//! path via the PJRT CPU client (`xla` crate).
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! [`AdmissionEngine`] is the batched form of the paper's per-read limbo
+//! check (§7.1's `setLimboRegion` + lease-age gate): given the hashes of
+//! the keys a queue of pending reads touches, the limbo-region key
+//! hashes, the conservative age of the newest committed entry and Δ, it
+//! returns an admit/reject mask in one XLA execution. The scalar
+//! fallback ([`scalar_admission`]) implements the identical decision and
+//! is both the correctness oracle for tests and the path used when the
+//! engine is disabled (`use_xla_admission = false` — the ablation).
+
+pub mod admission;
+pub mod engine;
+
+pub use admission::{hash_key, scalar_admission, AdmissionInputs, PAD_SENTINEL};
+pub use engine::{AdmissionEngine, EngineHandle};

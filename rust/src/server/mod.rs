@@ -1,0 +1,26 @@
+//! Real-mode cluster: the LogCabin-equivalent testbed (paper §7).
+//!
+//! Each [`server::Server`] wraps the same [`crate::raft::Node`] the
+//! simulator drives, but behind real threads, a real monotonic clock
+//! with configured error bounds ([`crate::clock::real::RealClock`]),
+//! and a length-prefixed binary protocol over TCP ([`wire`]).
+//!
+//! Threading model (per server):
+//! * an acceptor thread takes peer + client connections;
+//! * one reader thread per connection decodes frames into the server's
+//!   event channel;
+//! * one writer thread per outgoing peer link, with an optional injected
+//!   one-way delay (the paper's `tc` WAN emulation, §7.2) — the delay
+//!   queue preserves FIFO order per link, like netem;
+//! * the main loop owns the Node: it drains events, fires due timers,
+//!   batches concurrently-arrived reads through the XLA admission
+//!   engine when enabled, and routes outputs.
+//!
+//! Python never appears anywhere here: the admission engine executes an
+//! AOT artifact through PJRT.
+
+pub mod server;
+pub mod transport;
+pub mod wire;
+
+pub use server::{Server, ServerConfig, ServerHandle};

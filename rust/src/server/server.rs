@@ -1,0 +1,350 @@
+//! The server main loop: the same [`Node`] the simulator drives, behind
+//! real threads, sockets, and clocks (the paper's LogCabin role, §7).
+
+use std::collections::{BinaryHeap, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::clock::real::RealClock;
+use crate::clock::Clock;
+use crate::raft::{Message, Node, NodeConfig, Output, Role, TimerKind};
+use crate::runtime::{scalar_admission, EngineHandle};
+use crate::{Micros, NodeId};
+
+use super::transport::{read_frame, write_frame, DelayedSender};
+use super::wire::{self, ClientResp, Frame};
+
+/// Shared in-process apply log (real-mode linearizability input). All
+/// servers of an in-process cluster push (key, value, monotonic µs).
+pub type SharedApplies = Arc<Mutex<Vec<(u32, u64, Micros)>>>;
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub id: NodeId,
+    /// Peer addresses, indexed by node id (own slot = listen address,
+    /// or `"auto"` for an ephemeral port).
+    pub peer_addrs: Vec<String>,
+    pub params: crate::config::Params,
+    /// Injected one-way delay on *peer* links (the paper's `tc` WAN
+    /// emulation; client links are unaffected, §7.2).
+    pub one_way_delay: Duration,
+    /// Batched XLA read admission (None = scalar path).
+    pub engine: Option<EngineHandle>,
+    pub applies: Option<SharedApplies>,
+}
+
+/// Externally visible, lock-free server status.
+#[derive(Default)]
+pub struct Status {
+    pub is_leader: AtomicBool,
+    pub term: AtomicU64,
+    pub commit_index: AtomicU64,
+    pub limbo_len: AtomicU64,
+    pub reads_batched: AtomicU64,
+    pub engine_batches: AtomicU64,
+}
+
+enum Ev {
+    /// New inbound connection: the write half for replies.
+    NewConn(u64, TcpStream),
+    Peer(Message),
+    Client { conn: u64, req: wire::ClientReq },
+    ConnClosed(u64),
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    pub id: NodeId,
+    pub addr: String,
+    pub status: Arc<Status>,
+    tx: Sender<Ev>,
+    main: Option<JoinHandle<()>>,
+    accept: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerHandle {
+    /// Stop the server (models a crash: connections drop, no flush).
+    pub fn kill(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Ev::Shutdown);
+        let _ = TcpStream::connect(&self.addr); // unblock acceptor
+        if let Some(h) = self.main.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+pub struct Server;
+
+impl Server {
+    /// Bind and spawn. The actual bound address is in the handle.
+    pub fn spawn(mut cfg: ServerConfig) -> std::io::Result<ServerHandle> {
+        let bind_to = if cfg.peer_addrs[cfg.id] == "auto" {
+            "127.0.0.1:0".to_string()
+        } else {
+            cfg.peer_addrs[cfg.id].clone()
+        };
+        let listener = TcpListener::bind(&bind_to)?;
+        let addr = listener.local_addr()?.to_string();
+        cfg.peer_addrs[cfg.id] = addr.clone();
+        let (tx, rx) = channel::<Ev>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let status = Arc::new(Status::default());
+        let id = cfg.id;
+
+        let accept = {
+            let tx = tx.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut next_conn: u64 = 1;
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    stream.set_nodelay(true).ok();
+                    let conn = next_conn;
+                    next_conn += 1;
+                    if let Ok(w) = stream.try_clone() {
+                        if tx.send(Ev::NewConn(conn, w)).is_err() {
+                            break;
+                        }
+                    }
+                    let tx = tx.clone();
+                    std::thread::spawn(move || reader_loop(stream, conn, tx));
+                }
+            })
+        };
+
+        let main = {
+            let status = status.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || main_loop(cfg, rx, status, stop))
+        };
+
+        Ok(ServerHandle { id, addr, status, tx, main: Some(main), accept: Some(accept), stop })
+    }
+}
+
+/// Decode frames off one inbound connection into the event channel.
+fn reader_loop(mut stream: TcpStream, conn: u64, tx: Sender<Ev>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Some(body)) => match wire::decode(&body) {
+                Ok(Frame::Raft { msg, .. }) => {
+                    if tx.send(Ev::Peer(msg)).is_err() {
+                        break;
+                    }
+                }
+                Ok(Frame::HelloPeer { .. }) => {}
+                Ok(Frame::ClientReq(req)) => {
+                    if tx.send(Ev::Client { conn, req }).is_err() {
+                        break;
+                    }
+                }
+                Ok(Frame::ClientResp(_)) | Err(_) => break, // protocol error
+            },
+            _ => break,
+        }
+    }
+    let _ = tx.send(Ev::ConnClosed(conn));
+}
+
+/// Mutable state the output router needs (bundled to keep borrows sane).
+struct Router {
+    cfg: ServerConfig,
+    timers: BinaryHeap<std::cmp::Reverse<(Micros, u8)>>,
+    peers: HashMap<NodeId, DelayedSender>,
+    op_conn: HashMap<u64, u64>,
+    conns: HashMap<u64, TcpStream>,
+}
+
+fn kind_of(k: TimerKind) -> u8 {
+    match k {
+        TimerKind::Election => 0,
+        TimerKind::Heartbeat => 1,
+        TimerKind::LeaseCheck => 2,
+    }
+}
+
+fn kind_from(b: u8) -> TimerKind {
+    match b {
+        0 => TimerKind::Election,
+        1 => TimerKind::Heartbeat,
+        _ => TimerKind::LeaseCheck,
+    }
+}
+
+impl Router {
+    fn handle(&mut self, outs: Vec<Output>) {
+        for o in outs {
+            match o {
+                Output::Send { to, msg } => {
+                    if !self.peers.contains_key(&to) {
+                        if let Some(s) =
+                            connect_peer(&self.cfg.peer_addrs[to], self.cfg.id, self.cfg.one_way_delay)
+                        {
+                            self.peers.insert(to, s);
+                        }
+                    }
+                    if let Some(sender) = self.peers.get(&to) {
+                        let body = wire::encode(&Frame::Raft { from: self.cfg.id, msg });
+                        if !sender.send(body) {
+                            self.peers.remove(&to); // reconnect next send
+                        }
+                    }
+                }
+                Output::SetTimer { kind, after } => {
+                    self.timers
+                        .push(std::cmp::Reverse((RealClock::monotonic_us() + after, kind_of(kind))));
+                }
+                Output::Reply { op, result } => {
+                    if let Some(conn) = self.op_conn.remove(&op) {
+                        if let Some(stream) = self.conns.get_mut(&conn) {
+                            let resp = Frame::ClientResp(ClientResp {
+                                op,
+                                exec_us: RealClock::monotonic_us(),
+                                result,
+                            });
+                            if write_frame(stream, &wire::encode(&resp)).is_err() {
+                                self.conns.remove(&conn);
+                            }
+                        }
+                    }
+                }
+                Output::Applied { key, value } => {
+                    if let Some(a) = &self.cfg.applies {
+                        a.lock().unwrap().push((key, value, RealClock::monotonic_us()));
+                    }
+                }
+                Output::ElectedLeader { .. } | Output::SteppedDown => {}
+            }
+        }
+    }
+}
+
+fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc<AtomicBool>) {
+    let mut clock = RealClock::new(cfg.params.clock_error_us);
+    let now = clock.interval_now();
+    let (mut node, outs) =
+        Node::new(NodeConfig::from_params(cfg.id, &cfg.params), cfg.params.seed, now);
+    let engine = cfg.engine.clone();
+    let mut router = Router {
+        cfg,
+        timers: BinaryHeap::new(),
+        peers: HashMap::new(),
+        op_conn: HashMap::new(),
+        conns: HashMap::new(),
+    };
+    router.handle(outs);
+
+    let publish = |node: &Node, status: &Status| {
+        status.is_leader.store(node.role() == Role::Leader, Ordering::Relaxed);
+        status.term.store(node.term(), Ordering::Relaxed);
+        status.commit_index.store(node.commit_index(), Ordering::Relaxed);
+        status
+            .limbo_len
+            .store(node.lease_state().map(|l| l.limbo_len()).unwrap_or(0), Ordering::Relaxed);
+    };
+
+    let mut read_batch: Vec<(u64, u32)> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        // Fire due timers.
+        let now_us = RealClock::monotonic_us();
+        while let Some(&std::cmp::Reverse((due, kb))) = router.timers.peek() {
+            if due > now_us {
+                break;
+            }
+            router.timers.pop();
+            let now = clock.interval_now();
+            let outs = node.on_timer(now, kind_from(kb));
+            router.handle(outs);
+        }
+        publish(&node, &status);
+        // Wait for events until the next timer (bounded poll).
+        let wait_us = router
+            .timers
+            .peek()
+            .map(|&std::cmp::Reverse((due, _))| (due - RealClock::monotonic_us()).max(0) as u64)
+            .unwrap_or(2_000)
+            .min(2_000);
+        let first = match rx.recv_timeout(Duration::from_micros(wait_us)) {
+            Ok(ev) => Some(ev),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(_) => break,
+        };
+        let mut events: Vec<Ev> = Vec::new();
+        if let Some(f) = first {
+            events.push(f);
+        }
+        while let Ok(ev) = rx.try_recv() {
+            events.push(ev);
+            if events.len() >= 1024 {
+                break;
+            }
+        }
+        read_batch.clear();
+        for ev in events {
+            match ev {
+                Ev::Shutdown => return,
+                Ev::NewConn(conn, stream) => {
+                    router.conns.insert(conn, stream);
+                }
+                Ev::Peer(msg) => {
+                    let now = clock.interval_now();
+                    let outs = node.on_message(now, msg);
+                    router.handle(outs);
+                }
+                Ev::Client { conn, req } => {
+                    router.op_conn.insert(req.op, conn);
+                    match req.write_value {
+                        Some(v) => {
+                            let now = clock.interval_now();
+                            let outs =
+                                node.client_write(now, req.op, req.key, v, req.payload.len() as u32);
+                            router.handle(outs);
+                        }
+                        None => read_batch.push((req.op, req.key)),
+                    }
+                }
+                Ev::ConnClosed(conn) => {
+                    router.conns.remove(&conn);
+                }
+            }
+        }
+        // Reads batched per loop iteration: one admission decision for
+        // everything that arrived together (the XLA engine's raison
+        // d'être during post-election thundering herds).
+        if !read_batch.is_empty() {
+            status.reads_batched.fetch_add(read_batch.len() as u64, Ordering::Relaxed);
+            let now = clock.interval_now();
+            let outs = node.client_read_batch(now, &read_batch, |inp| match &engine {
+                Some(e) => {
+                    status.engine_batches.fetch_add(1, Ordering::Relaxed);
+                    e.admit(inp).unwrap_or_else(|_| scalar_admission(inp))
+                }
+                None => scalar_admission(inp),
+            });
+            router.handle(outs);
+        }
+        publish(&node, &status);
+    }
+}
+
+/// One connection attempt; None if the peer is down (retried on the
+/// next send).
+fn connect_peer(addr: &str, from: NodeId, delay: Duration) -> Option<DelayedSender> {
+    let s = TcpStream::connect_timeout(&addr.parse().ok()?, Duration::from_millis(50)).ok()?;
+    s.set_nodelay(true).ok();
+    let ds = DelayedSender::new(s, delay);
+    ds.send(wire::encode(&Frame::HelloPeer { from }));
+    Some(ds)
+}

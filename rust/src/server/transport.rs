@@ -1,0 +1,119 @@
+//! Framed TCP transport + WAN delay injection.
+//!
+//! Frames are u32-length-prefixed wire bodies. [`DelayedSender`] is the
+//! `tc netem` stand-in from the paper's §7.2 latency experiments: an
+//! outgoing queue thread that holds each frame for a configured one-way
+//! delay before writing it, preserving per-link FIFO order.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Write one frame (length prefix + body).
+pub fn write_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    let len = (body.len() as u32).to_le_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(body)
+}
+
+/// Read one frame body. Returns None on clean EOF.
+pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match stream.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 64 << 20 {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
+    }
+    let mut body = vec![0u8; n];
+    stream.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// An outgoing link with an injected one-way delay. Send is non-blocking
+/// for the caller; a dedicated thread enforces the delay and writes in
+/// FIFO order. Dropping the handle closes the link.
+pub struct DelayedSender {
+    tx: Sender<(Instant, Vec<u8>)>,
+    _thread: JoinHandle<()>,
+}
+
+impl DelayedSender {
+    pub fn new(mut stream: TcpStream, delay: Duration) -> Self {
+        let (tx, rx) = channel::<(Instant, Vec<u8>)>();
+        let thread = std::thread::spawn(move || {
+            // netem-style: each frame departs `delay` after it was
+            // enqueued; FIFO order is inherent to the channel.
+            while let Ok((enqueued, body)) = rx.recv() {
+                let due = enqueued + delay;
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if write_frame(&mut stream, &body).is_err() {
+                    break; // peer gone; drain & exit
+                }
+            }
+        });
+        DelayedSender { tx, _thread: thread }
+    }
+
+    /// Queue a frame; returns false if the link is down.
+    pub fn send(&self, body: Vec<u8>) -> bool {
+        self.tx.send((Instant::now(), body)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let (mut a, mut b) = pair();
+        write_frame(&mut a, b"hello").unwrap();
+        write_frame(&mut a, &[]).unwrap();
+        assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut b).unwrap().unwrap(), Vec::<u8>::new());
+        drop(a);
+        assert!(read_frame(&mut b).unwrap().is_none());
+    }
+
+    #[test]
+    fn delayed_sender_enforces_delay_and_order() {
+        let (a, mut b) = pair();
+        let tx = DelayedSender::new(a, Duration::from_millis(30));
+        let t0 = Instant::now();
+        assert!(tx.send(b"one".to_vec()));
+        assert!(tx.send(b"two".to_vec()));
+        assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"one");
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(28), "{elapsed:?}");
+        assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"two");
+        // Second frame was enqueued ~immediately, so it should arrive
+        // shortly after the first, not 2x the delay.
+        assert!(t0.elapsed() < Duration::from_millis(90));
+    }
+
+    #[test]
+    fn zero_delay_passthrough() {
+        let (a, mut b) = pair();
+        let tx = DelayedSender::new(a, Duration::ZERO);
+        tx.send(b"x".to_vec());
+        assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"x");
+    }
+}

@@ -1,0 +1,435 @@
+//! Hand-rolled binary wire format (no serde offline): length-prefixed
+//! frames, little-endian integers, u8 tags. Covers peer RPCs
+//! ([`crate::raft::Message`]) and the client protocol.
+//!
+//! Frame = u32 length || payload. Payload starts with a u8 frame kind.
+
+use crate::clock::TimeInterval;
+use crate::kv::Command;
+use crate::raft::log::Entry;
+use crate::raft::types::{FailReason, OpResult};
+use crate::raft::Message;
+use crate::NodeId;
+
+/// Top-level frame kinds.
+pub const FRAME_HELLO_PEER: u8 = 1;
+pub const FRAME_RAFT: u8 = 2;
+pub const FRAME_CLIENT_REQ: u8 = 3;
+pub const FRAME_CLIENT_RESP: u8 = 4;
+
+/// Client request: a read or a write.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientReq {
+    pub op: u64,
+    pub key: u32,
+    /// None = read; Some(value) = append.
+    pub write_value: Option<u64>,
+    /// Payload carried on the wire for writes (bandwidth realism).
+    pub payload: Vec<u8>,
+}
+
+/// Client response. `exec_us` is the server's monotonic timestamp at
+/// execution (same epoch as the in-process apply log), letting the
+/// omniscient linearizability checker run on real-mode histories too.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientResp {
+    pub op: u64,
+    pub result: OpResult,
+    pub exec_us: i64,
+}
+
+/// Anything decodable from a frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Peer identification sent once per outgoing peer link.
+    HelloPeer { from: NodeId },
+    Raft { from: NodeId, msg: Message },
+    ClientReq(ClientReq),
+    ClientResp(ClientResp),
+}
+
+// ---------------------------------------------------------------- encode
+
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::with_capacity(256) }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    fn interval(&mut self, t: TimeInterval) {
+        self.i64(t.earliest);
+        self.i64(t.latest);
+    }
+
+    fn command(&mut self, c: &Command) {
+        match c {
+            Command::Noop => self.u8(0),
+            Command::EndLease => self.u8(1),
+            Command::Put { key, value, payload_bytes } => {
+                self.u8(2);
+                self.u32(*key);
+                self.u64(*value);
+                self.u32(*payload_bytes);
+            }
+        }
+    }
+
+    fn entry(&mut self, e: &Entry) {
+        self.u64(e.term);
+        self.command(&e.command);
+        self.interval(e.written_at);
+    }
+
+    fn result(&mut self, r: &OpResult) {
+        match r {
+            OpResult::WriteOk => self.u8(0),
+            OpResult::ReadOk(values) => {
+                self.u8(1);
+                self.u32(values.len() as u32);
+                for v in values {
+                    self.u64(*v);
+                }
+            }
+            OpResult::Failed(reason) => {
+                self.u8(2);
+                self.u8(match reason {
+                    FailReason::NotLeader => 0,
+                    FailReason::NoLease => 1,
+                    FailReason::LimboConflict => 2,
+                    FailReason::CommitGateClosed => 3,
+                    FailReason::MaybeCommitted => 4,
+                    FailReason::Timeout => 5,
+                });
+            }
+        }
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Encode a frame body (without the length prefix).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut e = Enc::new();
+    match frame {
+        Frame::HelloPeer { from } => {
+            e.u8(FRAME_HELLO_PEER);
+            e.u32(*from as u32);
+        }
+        Frame::Raft { from, msg } => {
+            e.u8(FRAME_RAFT);
+            e.u32(*from as u32);
+            match msg {
+                Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+                    e.u8(0);
+                    e.u64(*term);
+                    e.u32(*candidate as u32);
+                    e.u64(*last_log_index);
+                    e.u64(*last_log_term);
+                }
+                Message::VoteReply { term, voter, granted } => {
+                    e.u8(1);
+                    e.u64(*term);
+                    e.u32(*voter as u32);
+                    e.u8(*granted as u8);
+                }
+                Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq } => {
+                    e.u8(2);
+                    e.u64(*term);
+                    e.u32(*leader as u32);
+                    e.u64(*prev_index);
+                    e.u64(*prev_term);
+                    e.u64(*leader_commit);
+                    e.u64(*seq);
+                    e.u32(entries.len() as u32);
+                    for en in entries {
+                        e.entry(en);
+                    }
+                }
+                Message::AppendReply { term, from: f, success, match_index, seq } => {
+                    e.u8(3);
+                    e.u64(*term);
+                    e.u32(*f as u32);
+                    e.u8(*success as u8);
+                    e.u64(*match_index);
+                    e.u64(*seq);
+                }
+            }
+        }
+        Frame::ClientReq(r) => {
+            e.u8(FRAME_CLIENT_REQ);
+            e.u64(r.op);
+            e.u32(r.key);
+            match r.write_value {
+                None => e.u8(0),
+                Some(v) => {
+                    e.u8(1);
+                    e.u64(v);
+                }
+            }
+            e.bytes(&r.payload);
+        }
+        Frame::ClientResp(r) => {
+            e.u8(FRAME_CLIENT_RESP);
+            e.u64(r.op);
+            e.i64(r.exec_us);
+            e.result(&r.result);
+        }
+    }
+    e.buf
+}
+
+// ---------------------------------------------------------------- decode
+
+pub struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError(pub String);
+
+type R<T> = Result<T, DecodeError>;
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Dec { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> R<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            return Err(DecodeError(format!("truncated at {} want {n}", self.pos)));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> R<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> R<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> R<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> R<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn bytes(&mut self) -> R<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn interval(&mut self) -> R<TimeInterval> {
+        let e = self.i64()?;
+        let l = self.i64()?;
+        Ok(TimeInterval::new(e, l))
+    }
+
+    fn command(&mut self) -> R<Command> {
+        Ok(match self.u8()? {
+            0 => Command::Noop,
+            1 => Command::EndLease,
+            2 => Command::Put { key: self.u32()?, value: self.u64()?, payload_bytes: self.u32()? },
+            t => return Err(DecodeError(format!("bad command tag {t}"))),
+        })
+    }
+
+    fn entry(&mut self) -> R<Entry> {
+        Ok(Entry { term: self.u64()?, command: self.command()?, written_at: self.interval()? })
+    }
+
+    fn result(&mut self) -> R<OpResult> {
+        Ok(match self.u8()? {
+            0 => OpResult::WriteOk,
+            1 => {
+                let n = self.u32()? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(self.u64()?);
+                }
+                OpResult::ReadOk(v)
+            }
+            2 => OpResult::Failed(match self.u8()? {
+                0 => FailReason::NotLeader,
+                1 => FailReason::NoLease,
+                2 => FailReason::LimboConflict,
+                3 => FailReason::CommitGateClosed,
+                4 => FailReason::MaybeCommitted,
+                5 => FailReason::Timeout,
+                t => return Err(DecodeError(format!("bad fail tag {t}"))),
+            }),
+            t => return Err(DecodeError(format!("bad result tag {t}"))),
+        })
+    }
+}
+
+/// Decode one frame body.
+pub fn decode(b: &[u8]) -> R<Frame> {
+    let mut d = Dec::new(b);
+    let frame = match d.u8()? {
+        FRAME_HELLO_PEER => Frame::HelloPeer { from: d.u32()? as NodeId },
+        FRAME_RAFT => {
+            let from = d.u32()? as NodeId;
+            let msg = match d.u8()? {
+                0 => Message::RequestVote {
+                    term: d.u64()?,
+                    candidate: d.u32()? as NodeId,
+                    last_log_index: d.u64()?,
+                    last_log_term: d.u64()?,
+                },
+                1 => Message::VoteReply { term: d.u64()?, voter: d.u32()? as NodeId, granted: d.u8()? != 0 },
+                2 => {
+                    let term = d.u64()?;
+                    let leader = d.u32()? as NodeId;
+                    let prev_index = d.u64()?;
+                    let prev_term = d.u64()?;
+                    let leader_commit = d.u64()?;
+                    let seq = d.u64()?;
+                    let n = d.u32()? as usize;
+                    let mut entries = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        entries.push(d.entry()?);
+                    }
+                    Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq }
+                }
+                3 => Message::AppendReply {
+                    term: d.u64()?,
+                    from: d.u32()? as NodeId,
+                    success: d.u8()? != 0,
+                    match_index: d.u64()?,
+                    seq: d.u64()?,
+                },
+                t => return Err(DecodeError(format!("bad raft tag {t}"))),
+            };
+            Frame::Raft { from, msg }
+        }
+        FRAME_CLIENT_REQ => {
+            let op = d.u64()?;
+            let key = d.u32()?;
+            let write_value = match d.u8()? {
+                0 => None,
+                1 => Some(d.u64()?),
+                t => return Err(DecodeError(format!("bad req tag {t}"))),
+            };
+            let payload = d.bytes()?;
+            Frame::ClientReq(ClientReq { op, key, write_value, payload })
+        }
+        FRAME_CLIENT_RESP => {
+            Frame::ClientResp(ClientResp { op: d.u64()?, exec_us: d.i64()?, result: d.result()? })
+        }
+        t => return Err(DecodeError(format!("bad frame tag {t}"))),
+    };
+    if d.pos != b.len() {
+        return Err(DecodeError(format!("{} trailing bytes", b.len() - d.pos)));
+    }
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let enc = encode(&f);
+        let dec = decode(&enc).expect("decode");
+        assert_eq!(dec, f);
+    }
+
+    #[test]
+    fn roundtrip_all_raft_messages() {
+        roundtrip(Frame::HelloPeer { from: 2 });
+        roundtrip(Frame::Raft {
+            from: 0,
+            msg: Message::RequestVote { term: 3, candidate: 0, last_log_index: 9, last_log_term: 2 },
+        });
+        roundtrip(Frame::Raft {
+            from: 1,
+            msg: Message::VoteReply { term: 3, voter: 1, granted: true },
+        });
+        roundtrip(Frame::Raft {
+            from: 0,
+            msg: Message::AppendEntries {
+                term: 4,
+                leader: 0,
+                prev_index: 10,
+                prev_term: 3,
+                entries: vec![
+                    Entry { term: 4, command: Command::Noop, written_at: TimeInterval::new(5, 9) },
+                    Entry {
+                        term: 4,
+                        command: Command::Put { key: 7, value: 70, payload_bytes: 1024 },
+                        written_at: TimeInterval::new(100, 180),
+                    },
+                    Entry { term: 4, command: Command::EndLease, written_at: TimeInterval::new(-5, 5) },
+                ],
+                leader_commit: 10,
+                seq: 42,
+            },
+        });
+        roundtrip(Frame::Raft {
+            from: 2,
+            msg: Message::AppendReply { term: 4, from: 2, success: false, match_index: 0, seq: 42 },
+        });
+    }
+
+    #[test]
+    fn roundtrip_client_frames() {
+        roundtrip(Frame::ClientReq(ClientReq { op: 9, key: 3, write_value: None, payload: vec![] }));
+        roundtrip(Frame::ClientReq(ClientReq {
+            op: 10,
+            key: 3,
+            write_value: Some(33),
+            payload: vec![0xAB; 1024],
+        }));
+        roundtrip(Frame::ClientResp(ClientResp {
+            op: 9,
+            exec_us: 123,
+            result: OpResult::ReadOk(vec![1, 2, 3]),
+        }));
+        roundtrip(Frame::ClientResp(ClientResp { op: 10, exec_us: -1, result: OpResult::WriteOk }));
+        for r in [
+            FailReason::NotLeader,
+            FailReason::NoLease,
+            FailReason::LimboConflict,
+            FailReason::CommitGateClosed,
+            FailReason::MaybeCommitted,
+            FailReason::Timeout,
+        ] {
+            roundtrip(Frame::ClientResp(ClientResp { op: 1, exec_us: 0, result: OpResult::Failed(r) }));
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[99]).is_err());
+        assert!(decode(&[FRAME_RAFT, 0, 0, 0, 0, 77]).is_err());
+        // Trailing bytes rejected.
+        let mut ok = encode(&Frame::HelloPeer { from: 1 });
+        ok.push(0);
+        assert!(decode(&ok).is_err());
+    }
+}

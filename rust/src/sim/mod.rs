@@ -1,0 +1,16 @@
+//! Deterministic discrete-event simulation substrate (the paper's
+//! `simulate.py`, §6.1).
+//!
+//! [`event_loop::EventQueue`] is a virtual-time priority queue with a
+//! stable tie-break, so a run is a pure function of (parameters, seed) —
+//! the reproducibility the paper "carefully engineered ... to ease
+//! debugging and analysis". [`network::SimNetwork`] samples per-message
+//! lognormal delays and models partitions, message loss, and node
+//! crashes. The replica-set harness that drives Raft nodes over this
+//! substrate lives in [`crate::cluster`].
+
+pub mod event_loop;
+pub mod network;
+
+pub use event_loop::EventQueue;
+pub use network::SimNetwork;

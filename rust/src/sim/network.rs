@@ -1,0 +1,201 @@
+//! Simulated network: per-message lognormal delay, partitions, loss, and
+//! node liveness (paper §6.1: "Nodes communicate via message-passing,
+//! with random network delays").
+//!
+//! The network itself is policy-only — it decides *whether* and *when* a
+//! message arrives; the cluster harness owns the event queue and actually
+//! schedules the delivery. Keeping the two separate makes the policy unit
+//! -testable without running a simulation.
+
+use crate::prob::{LogNormal, Rng};
+use crate::{Micros, NodeId};
+
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Mean one-way delay, µs. Paper Fig 6 sweeps 1–10 ms; Fig 7 uses the
+    /// AWS same-subnet fit (mean 191 µs, variance 391 µs²).
+    pub one_way_mean_us: f64,
+    /// Variance of the one-way delay, µs².
+    pub one_way_variance_us2: f64,
+    /// Propagation floor, µs (no message arrives faster than this).
+    pub min_delay_us: Micros,
+    /// Probability a message is silently dropped (outside partitions).
+    pub loss: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        // AWS same-subnet latency fit from §6.5 / [23].
+        NetConfig {
+            one_way_mean_us: 191.0,
+            one_way_variance_us2: 391.0,
+            min_delay_us: 20,
+            loss: 0.0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Paper Fig 6 parameterization: lognormal with variance = mean,
+    /// mean given in milliseconds.
+    pub fn wan_ms(mean_ms: f64) -> Self {
+        let mean_us = mean_ms * 1000.0;
+        NetConfig {
+            one_way_mean_us: mean_us,
+            // "variance equal to the mean" (in ms²) → scale to µs².
+            one_way_variance_us2: mean_ms * 1_000_000.0,
+            min_delay_us: 50,
+            loss: 0.0,
+        }
+    }
+}
+
+/// Verdict for one message send.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// Deliver after this one-way delay (µs).
+    After(Micros),
+    /// Silently dropped (partition, crash, or random loss).
+    Dropped,
+}
+
+#[derive(Debug)]
+pub struct SimNetwork {
+    cfg: NetConfig,
+    dist: LogNormal,
+    rng: Rng,
+    /// Partition group id per node; messages cross groups only if healed.
+    group: Vec<u8>,
+    /// Node liveness — a crashed node neither sends nor receives.
+    up: Vec<bool>,
+}
+
+impl SimNetwork {
+    pub fn new(n: usize, cfg: NetConfig, rng: &mut Rng) -> Self {
+        let dist = LogNormal::from_mean_variance(
+            cfg.one_way_mean_us.max(1.0),
+            cfg.one_way_variance_us2.max(0.0),
+        );
+        SimNetwork { cfg, dist, rng: rng.fork(), group: vec![0; n], up: vec![true; n] }
+    }
+
+    /// Decide the fate of one message from `from` to `to`.
+    pub fn send(&mut self, from: NodeId, to: NodeId) -> Delivery {
+        if !self.up[from] || !self.up[to] {
+            return Delivery::Dropped;
+        }
+        if self.group[from] != self.group[to] {
+            return Delivery::Dropped;
+        }
+        if self.cfg.loss > 0.0 && self.rng.chance(self.cfg.loss) {
+            return Delivery::Dropped;
+        }
+        let d = self.dist.sample(&mut self.rng) as Micros;
+        Delivery::After(d.max(self.cfg.min_delay_us))
+    }
+
+    /// Partition the cluster: nodes in `minority` lose contact with the
+    /// rest (e.g. an old leader on the wrong side of a partition, §1).
+    pub fn partition(&mut self, minority: &[NodeId]) {
+        for &n in minority {
+            self.group[n] = 1;
+        }
+    }
+
+    /// Heal all partitions.
+    pub fn heal(&mut self) {
+        for g in self.group.iter_mut() {
+            *g = 0;
+        }
+    }
+
+    pub fn crash(&mut self, node: NodeId) {
+        self.up[node] = false;
+    }
+
+    pub fn restart(&mut self, node: NodeId) {
+        self.up[node] = true;
+    }
+
+    pub fn is_up(&self, node: NodeId) -> bool {
+        self.up[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(cfg: NetConfig) -> SimNetwork {
+        SimNetwork::new(3, cfg, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn delays_positive_and_near_mean() {
+        let mut n = net(NetConfig::default());
+        let mut sum = 0i64;
+        let k = 20_000;
+        for _ in 0..k {
+            match n.send(0, 1) {
+                Delivery::After(d) => {
+                    assert!(d >= 20);
+                    sum += d;
+                }
+                Delivery::Dropped => panic!("no loss configured"),
+            }
+        }
+        let mean = sum as f64 / k as f64;
+        assert!((mean - 191.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn partition_blocks_cross_group_only() {
+        let mut n = net(NetConfig::default());
+        n.partition(&[2]);
+        assert_eq!(n.send(0, 2), Delivery::Dropped);
+        assert_eq!(n.send(2, 1), Delivery::Dropped);
+        assert!(matches!(n.send(0, 1), Delivery::After(_)));
+        n.heal();
+        assert!(matches!(n.send(0, 2), Delivery::After(_)));
+    }
+
+    #[test]
+    fn crashed_node_isolated() {
+        let mut n = net(NetConfig::default());
+        n.crash(1);
+        assert_eq!(n.send(0, 1), Delivery::Dropped);
+        assert_eq!(n.send(1, 0), Delivery::Dropped);
+        n.restart(1);
+        assert!(matches!(n.send(0, 1), Delivery::After(_)));
+    }
+
+    #[test]
+    fn loss_rate_respected() {
+        let mut cfg = NetConfig::default();
+        cfg.loss = 0.25;
+        let mut n = net(cfg);
+        let mut dropped = 0;
+        let k = 40_000;
+        for _ in 0..k {
+            if n.send(0, 1) == Delivery::Dropped {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / k as f64;
+        assert!((rate - 0.25).abs() < 0.02, "loss rate {rate}");
+    }
+
+    #[test]
+    fn wan_parameterization() {
+        let mut n = net(NetConfig::wan_ms(5.0));
+        let mut sum = 0i64;
+        let k = 20_000;
+        for _ in 0..k {
+            if let Delivery::After(d) = n.send(0, 1) {
+                sum += d;
+            }
+        }
+        let mean_ms = sum as f64 / k as f64 / 1000.0;
+        assert!((mean_ms - 5.0).abs() < 0.3, "mean {mean_ms}ms");
+    }
+}

@@ -1,0 +1,167 @@
+//! Mini property-based testing framework (proptest is unavailable in the
+//! offline image; see DESIGN.md substitutions).
+//!
+//! Deliberately small: seeded case generation from [`crate::prob::Rng`],
+//! a fixed case budget, and on failure a greedy *shrink* over a
+//! user-supplied simplification function. Used by `rust/tests/
+//! properties.rs` to explore randomized fault schedules against the
+//! protocol invariants.
+
+use crate::prob::Rng;
+
+/// Configuration for one property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_shrink_steps: 200 }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok { cases: usize },
+    Failed { case: T, seed: u64, message: String },
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, greedily apply
+/// `shrink` (which proposes simpler candidates) while the property still
+/// fails, then report the minimal failing case.
+pub fn check<T, G, S, P>(cfg: PropConfig, mut gen: G, mut shrink: S, mut prop: P) -> PropResult<T>
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: FnMut(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for i in 0..cfg.cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let case = gen(&mut case_rng);
+        if let Err(msg) = prop(&case) {
+            // Shrink.
+            let mut best = case;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            eprintln!(
+                "property failed on case {i} (seed {case_seed:#x}) after shrinking:\n{best:?}\n{best_msg}"
+            );
+            return PropResult::Failed { case: best, seed: case_seed, message: best_msg };
+        }
+    }
+    PropResult::Ok { cases: cfg.cases }
+}
+
+/// Panic unless the property holds (test-friendly wrapper).
+pub fn assert_prop<T, G, S, P>(cfg: PropConfig, gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: FnMut(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    match check(cfg, gen, shrink, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { case, seed, message } => {
+            panic!("property failed (seed {seed:#x}): {message}\nminimal case: {case:?}")
+        }
+    }
+}
+
+/// Shrinker for vectors: propose dropping halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = check(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng| rng.below(100) as i64,
+            |_| vec![],
+            |&x| if x < 100 { Ok(()) } else { Err("too big".into()) },
+        );
+        assert!(matches!(r, PropResult::Ok { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // Property: no vector contains an element >= 40. Shrinking should
+        // find a near-minimal counterexample.
+        let r = check(
+            PropConfig { cases: 100, ..Default::default() },
+            |rng| (0..rng.below(20)).map(|_| rng.below(50) as i64).collect::<Vec<_>>(),
+            |v| shrink_vec(v),
+            |v| {
+                if v.iter().all(|&x| x < 40) {
+                    Ok(())
+                } else {
+                    Err("element >= 40".into())
+                }
+            },
+        );
+        match r {
+            PropResult::Failed { case, .. } => {
+                assert!(case.len() <= 2, "shrunk to near-minimal: {case:?}");
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut seen = Vec::new();
+            let _ = check(
+                PropConfig { cases: 10, seed: 7, ..Default::default() },
+                |rng| rng.next_u64(),
+                |_| vec![],
+                |&x| {
+                    seen.push(x);
+                    Ok(())
+                },
+            );
+            seen
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,176 @@
+//! Open-loop workload generation (paper §6.3-§6.6, §7).
+//!
+//! "These workload generators are *open loop*: they start requests at a
+//! fixed rate regardless of the response latency" (§6.1, citing
+//! Schroeder et al. [45] on why closed-loop benchmarks lie). The
+//! generator yields a deterministic schedule of operations from the
+//! seeded PRNG: arrival time (Poisson or fixed-rate), kind (read/write
+//! mix), key (uniform or Zipf), and a globally unique value per write.
+
+use crate::config::Params;
+use crate::prob::{Rng, Zipf};
+use crate::Micros;
+
+/// One scheduled client operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpSpec {
+    pub at: Micros,
+    pub key: u32,
+    /// None = read; Some(value) = append this unique value.
+    pub write_value: Option<u64>,
+    pub payload_bytes: u32,
+}
+
+impl OpSpec {
+    pub fn is_read(&self) -> bool {
+        self.write_value.is_none()
+    }
+}
+
+/// Deterministic open-loop generator.
+#[derive(Debug)]
+pub struct Workload {
+    rng: Rng,
+    zipf: Option<Zipf>,
+    num_keys: usize,
+    interarrival_us: f64,
+    poisson: bool,
+    write_fraction: f64,
+    payload_bytes: u32,
+    next_at: Micros,
+    next_value: u64,
+}
+
+impl Workload {
+    pub fn from_params(p: &Params, rng: &mut Rng) -> Self {
+        Workload {
+            rng: rng.fork(),
+            zipf: if p.zipf_a > 0.0 { Some(Zipf::new(p.num_keys, p.zipf_a)) } else { None },
+            num_keys: p.num_keys,
+            interarrival_us: p.interarrival_us,
+            poisson: p.poisson_arrivals,
+            write_fraction: p.write_fraction,
+            payload_bytes: p.value_bytes as u32,
+            next_at: 0,
+            next_value: 1,
+        }
+    }
+
+    /// Next operation in the schedule. Values are unique across the run
+    /// (they double as operation identity for the checker).
+    pub fn next(&mut self) -> OpSpec {
+        let gap = if self.poisson {
+            self.rng.exponential(self.interarrival_us)
+        } else {
+            self.interarrival_us
+        };
+        self.next_at += gap.max(1.0) as Micros;
+        let key = match &self.zipf {
+            Some(z) => z.sample(&mut self.rng) as u32,
+            None => self.rng.below(self.num_keys as u64) as u32,
+        };
+        let write_value = if self.rng.chance(self.write_fraction) {
+            let v = self.next_value;
+            self.next_value += 1;
+            Some(v)
+        } else {
+            None
+        };
+        OpSpec {
+            at: self.next_at,
+            key,
+            write_value,
+            payload_bytes: if write_value.is_some() { self.payload_bytes } else { 0 },
+        }
+    }
+
+    /// All operations up to `duration_us`.
+    pub fn schedule(&mut self, duration_us: Micros) -> Vec<OpSpec> {
+        let mut v = Vec::new();
+        loop {
+            let op = self.next();
+            if op.at > duration_us {
+                return v;
+            }
+            v.push(op);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Params {
+        let mut p = Params::default();
+        p.interarrival_us = 300.0;
+        p.write_fraction = 1.0 / 3.0;
+        p.num_keys = 1000;
+        p
+    }
+
+    #[test]
+    fn deterministic_schedule() {
+        let p = params();
+        let a = Workload::from_params(&p, &mut Rng::new(5)).schedule(1_000_000);
+        let b = Workload::from_params(&p, &mut Rng::new(5)).schedule(1_000_000);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn rate_and_mix_match_params() {
+        let p = params();
+        let ops = Workload::from_params(&p, &mut Rng::new(7)).schedule(3_000_000);
+        // ~10k ops in 3s at 300µs interarrival.
+        let n = ops.len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "{n} ops");
+        let writes = ops.iter().filter(|o| !o.is_read()).count() as f64;
+        assert!((writes / n - 1.0 / 3.0).abs() < 0.02);
+        assert!(ops.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(ops.iter().all(|o| (o.key as usize) < 1000));
+    }
+
+    #[test]
+    fn write_values_unique() {
+        let p = params();
+        let ops = Workload::from_params(&p, &mut Rng::new(9)).schedule(2_000_000);
+        let mut vals: Vec<u64> = ops.iter().filter_map(|o| o.write_value).collect();
+        let n = vals.len();
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), n);
+    }
+
+    #[test]
+    fn fixed_rate_mode_exact() {
+        let mut p = params();
+        p.poisson_arrivals = false;
+        let ops = Workload::from_params(&p, &mut Rng::new(3)).schedule(30_000);
+        assert_eq!(ops.len(), 100);
+        assert_eq!(ops[0].at, 300);
+        assert_eq!(ops[99].at, 30_000);
+    }
+
+    #[test]
+    fn zipf_skews_keys() {
+        let mut p = params();
+        p.zipf_a = 2.0;
+        let ops = Workload::from_params(&p, &mut Rng::new(11)).schedule(10_000_000);
+        let hot = ops.iter().filter(|o| o.key == 0).count() as f64 / ops.len() as f64;
+        assert!((hot - 0.61).abs() < 0.03, "hottest key mass {hot}");
+    }
+
+    #[test]
+    fn payload_only_on_writes() {
+        let p = params();
+        let ops = Workload::from_params(&p, &mut Rng::new(13)).schedule(1_000_000);
+        for o in &ops {
+            if o.is_read() {
+                assert_eq!(o.payload_bytes, 0);
+            } else {
+                assert_eq!(o.payload_bytes, 1024);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Real-mode integration: TCP servers + open-loop client, in process.
+//! These are slower than the simulator tests, so workloads are modest;
+//! the heavy versions live in the fig9-11 benches.
+
+use std::time::Duration;
+
+use leaseguard::client::run_open_loop;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::figures::realcluster::RealCluster;
+use leaseguard::linearizability;
+use leaseguard::runtime::EngineHandle;
+
+fn base(mode: ConsistencyMode) -> Params {
+    let mut p = Params::default();
+    p.consistency = mode;
+    p.nodes = 3;
+    p.election_timeout_us = 200_000;
+    p.election_jitter_us = 150_000;
+    p.heartbeat_us = 50_000;
+    p.lease_duration_us = 400_000;
+    p.duration_us = 900_000;
+    p.interarrival_us = 1000.0;
+    p.value_bytes = 256;
+    p.seed = 42;
+    p
+}
+
+fn steady_state(mode: ConsistencyMode) {
+    let p = base(mode);
+    let cluster = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
+    cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
+    let rep = run_open_loop(&cluster.addrs, &p, Some(cluster.applies.clone())).expect("client");
+    cluster.shutdown();
+    let ok = rep.read_latency.count() + rep.write_latency.count();
+    assert!(ok > 300, "{mode}: only {ok} successful ops");
+    let viol = linearizability::check(&rep.history);
+    assert!(viol.is_empty(), "{mode}: {:?}", viol.first());
+}
+
+#[test]
+fn steady_state_leaseguard() {
+    steady_state(ConsistencyMode::LeaseGuard);
+}
+
+#[test]
+fn steady_state_quorum() {
+    steady_state(ConsistencyMode::Quorum);
+}
+
+#[test]
+fn steady_state_ongaro() {
+    steady_state(ConsistencyMode::OngaroLease);
+}
+
+#[test]
+fn steady_state_inconsistent() {
+    steady_state(ConsistencyMode::Inconsistent);
+}
+
+#[test]
+fn crash_failover_leaseguard_real() {
+    let mut p = base(ConsistencyMode::LeaseGuard);
+    p.duration_us = 1_800_000;
+    let mut cluster = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
+    let leader = cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
+    let addrs = cluster.addrs.clone();
+    let applies = cluster.applies.clone();
+    let pc = p.clone();
+    let client = std::thread::spawn(move || run_open_loop(&addrs, &pc, Some(applies)));
+    std::thread::sleep(Duration::from_millis(400));
+    cluster.kill(leader);
+    let rep = client.join().unwrap().expect("client");
+    cluster.shutdown();
+    let viol = linearizability::check(&rep.history);
+    assert!(viol.is_empty(), "{:?}", viol.first());
+    // Reads recover after failover.
+    let tail = rep.series.window_totals(true, 1_400_000, 1_800_000);
+    assert!(tail.ok > 20, "reads should recover post-failover: {tail:?}");
+}
+
+#[test]
+fn xla_engine_serves_batched_reads() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = EngineHandle::spawn(std::path::Path::new("artifacts")).expect("engine");
+    let mut p = base(ConsistencyMode::LeaseGuard);
+    p.use_xla_admission = true;
+    let cluster = RealCluster::spawn(&p, Duration::ZERO, Some(engine)).expect("spawn");
+    cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
+    let rep = run_open_loop(&cluster.addrs, &p, Some(cluster.applies.clone())).expect("client");
+    let batched: u64 = cluster
+        .handles
+        .iter()
+        .flatten()
+        .map(|h| h.status.reads_batched.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    cluster.shutdown();
+    assert!(batched > 100, "reads should flow through the batch path: {batched}");
+    assert!(rep.read_latency.count() > 200);
+    linearizability::assert_linearizable(&rep.history);
+}
+
+#[test]
+fn injected_delay_slows_writes_not_lease_reads() {
+    let mut p = base(ConsistencyMode::LeaseGuard);
+    p.election_timeout_us = 600_000;
+    p.lease_duration_us = 1_000_000;
+    p.duration_us = 900_000;
+    let cluster = RealCluster::spawn(&p, Duration::from_millis(5), None).expect("spawn");
+    cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
+    let rep = run_open_loop(&cluster.addrs, &p, Some(cluster.applies.clone())).expect("client");
+    cluster.shutdown();
+    assert!(
+        rep.write_latency.p50() >= 5_000,
+        "writes must pay the injected one-way delay: p50={}",
+        rep.write_latency.p50()
+    );
+    assert!(
+        rep.read_latency.p50() < 5_000,
+        "lease reads must not: p50={}",
+        rep.read_latency.p50()
+    );
+    linearizability::assert_linearizable(&rep.history);
+}

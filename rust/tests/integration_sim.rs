@@ -1,0 +1,197 @@
+//! Simulator integration tests: whole-protocol runs with fault
+//! injection, across every consistency mode the paper evaluates.
+
+use leaseguard::cluster::Cluster;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::linearizability;
+
+fn base(mode: ConsistencyMode, seed: u64) -> Params {
+    let mut p = Params::default();
+    p.consistency = mode;
+    p.seed = seed;
+    p.duration_us = 2_500_000;
+    p.interarrival_us = 400.0;
+    p.crash_leader_at_us = 500_000;
+    p
+}
+
+#[test]
+fn all_consistent_modes_survive_crash_linearizably() {
+    // Every mode except "inconsistent" must be linearizable through a
+    // leader crash + failover (the paper's core safety claim).
+    for mode in [
+        ConsistencyMode::Quorum,
+        ConsistencyMode::OngaroLease,
+        ConsistencyMode::LogLease,
+        ConsistencyMode::DeferCommit,
+        ConsistencyMode::LeaseGuard,
+    ] {
+        for seed in [1u64, 2, 3] {
+            let rep = Cluster::new(base(mode, seed)).run();
+            let viol = linearizability::check(&rep.history);
+            assert!(
+                viol.is_empty(),
+                "{mode} seed {seed}: {} violations, first: {:?}",
+                viol.len(),
+                viol.first()
+            );
+            assert!(rep.elections >= 2, "{mode} seed {seed}: no failover election");
+        }
+    }
+}
+
+#[test]
+fn leaseguard_serves_reads_while_awaiting_lease_loglease_does_not() {
+    // The paper's inherited-lease claim, quantified: between election
+    // (~1s) and old-lease expiry (1.5s), full LeaseGuard serves most
+    // reads; unoptimized log lease serves (almost) none.
+    let lg = Cluster::new(base(ConsistencyMode::LeaseGuard, 7)).run();
+    let ll = Cluster::new(base(ConsistencyMode::LogLease, 7)).run();
+    let lg_w = lg.series.window_totals(true, 1_100_000, 1_450_000);
+    let ll_w = ll.series.window_totals(true, 1_100_000, 1_450_000);
+    assert!(
+        lg_w.ok > 100,
+        "LeaseGuard should serve reads while awaiting lease: {lg_w:?}"
+    );
+    assert!(
+        ll_w.ok <= 5,
+        "LogLease should be dark until lease expiry: {ll_w:?}"
+    );
+}
+
+#[test]
+fn defer_commit_recovers_writes_loglease_rejects_them() {
+    let dc = Cluster::new(base(ConsistencyMode::DeferCommit, 9)).run();
+    let ll = Cluster::new(base(ConsistencyMode::LogLease, 9)).run();
+    // Writes accepted during the wait are acked in a burst at expiry:
+    // count successful writes whose ack lands in [1.4s, 1.7s].
+    let dc_w = dc.series.window_totals(false, 1_400_000, 1_700_000);
+    let ll_w = ll.series.window_totals(false, 1_000_000, 1_500_000);
+    assert!(dc_w.ok > 100, "defer-commit ack burst expected: {dc_w:?}");
+    assert!(
+        ll_w.failed > 100,
+        "loglease should fail writes while gated: {ll_w:?}"
+    );
+}
+
+#[test]
+fn inconsistent_mode_violates_linearizability_under_partition() {
+    // §1's motivating bug: partition the old leader away; it keeps
+    // serving (stale) reads while a new leader commits writes. The
+    // omniscient checker must catch this in inconsistent mode.
+    let mut violations_seen = 0;
+    for seed in 1..=8u64 {
+        let mut p = base(ConsistencyMode::Inconsistent, seed);
+        p.crash_leader_at_us = 0;
+        p.partition_leader_at_us = 500_000;
+        p.client_stray_prob = 0.1; // some clients keep hitting the old leader
+        p.op_timeout_us = 300_000;
+        p.duration_us = 3_000_000;
+        let rep = Cluster::new(p).run();
+        violations_seen += linearizability::check(&rep.history).len();
+    }
+    assert!(
+        violations_seen > 0,
+        "expected stale reads from a partitioned old leader in inconsistent mode"
+    );
+}
+
+#[test]
+fn leaseguard_linearizable_under_partition() {
+    // Same partition scenario, but LeaseGuard: the deposed leader may
+    // serve reads only while its lease is provably fresh, so the
+    // history must stay linearizable.
+    for seed in 1..=8u64 {
+        let mut p = base(ConsistencyMode::LeaseGuard, seed);
+        p.crash_leader_at_us = 0;
+        p.partition_leader_at_us = 500_000;
+        p.client_stray_prob = 0.1;
+        p.op_timeout_us = 300_000;
+        p.duration_us = 3_000_000;
+        let rep = Cluster::new(p).run();
+        let viol = linearizability::check(&rep.history);
+        assert!(viol.is_empty(), "seed {seed}: {:?}", viol.first());
+    }
+}
+
+#[test]
+fn broken_clocks_break_inherited_lease_reads() {
+    // §4.3: "Inherited lease reads require correct clock bounds!" With
+    // deliberately wrong bounds and a partitioned old leader, some seed
+    // must produce a checker-visible violation — demonstrating both the
+    // protocol's stated dependence and the checker's power.
+    let mut violations = 0;
+    for seed in 1..=10u64 {
+        let mut p = base(ConsistencyMode::LeaseGuard, seed);
+        p.clock_broken = true;
+        p.clock_error_us = 400_000; // lies up to ~1.6 s into the future
+        p.crash_leader_at_us = 0;
+        p.partition_leader_at_us = 500_000;
+        p.client_stray_prob = 0.1;
+        p.op_timeout_us = 300_000;
+        p.duration_us = 3_000_000;
+        let rep = Cluster::new(p).run();
+        violations += linearizability::check(&rep.history).len();
+    }
+    assert!(
+        violations > 0,
+        "broken clock bounds should eventually produce a stale read"
+    );
+}
+
+#[test]
+fn restart_rejoins_and_catches_up() {
+    let mut p = base(ConsistencyMode::LeaseGuard, 21);
+    p.restart_after_us = 400_000;
+    p.duration_us = 3_000_000;
+    let rep = Cluster::new(p).run();
+    linearizability::assert_linearizable(&rep.history);
+    // Healthy throughput at the end of the run.
+    let tail = rep.series.window_totals(true, 2_400_000, 3_000_000);
+    assert!(tail.ok > 200, "cluster should be healthy post-restart: {tail:?}");
+}
+
+#[test]
+fn lease_renewal_keeps_reads_alive_without_writes() {
+    // §5.1: read-only workload. The leader must renew its lease with
+    // no-ops or every read after Δ would fail.
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.write_fraction = 0.0;
+    p.duration_us = 3_000_000; // 3 x Δ
+    p.interarrival_us = 1000.0;
+    p.seed = 5;
+    let rep = Cluster::new(p).run();
+    let total = rep.series.window_totals(true, 0, i64::MAX);
+    let fail_rate = total.failed as f64 / (total.ok + total.failed).max(1) as f64;
+    assert!(
+        fail_rate < 0.02,
+        "reads should survive on renewal no-ops: {total:?}"
+    );
+    assert!(rep.node_stats.iter().any(|s| s.noops_written > 2));
+    linearizability::assert_linearizable(&rep.history);
+}
+
+#[test]
+fn five_node_cluster_failover() {
+    let mut p = base(ConsistencyMode::LeaseGuard, 31);
+    p.nodes = 5;
+    let rep = Cluster::new(p).run();
+    linearizability::assert_linearizable(&rep.history);
+    let tail = rep.series.window_totals(true, 2_000_000, 2_500_000);
+    assert!(tail.ok > 100);
+}
+
+#[test]
+fn seeds_are_reproducible_and_distinct() {
+    let a = Cluster::new(base(ConsistencyMode::LeaseGuard, 77)).run();
+    let b = Cluster::new(base(ConsistencyMode::LeaseGuard, 77)).run();
+    let c = Cluster::new(base(ConsistencyMode::LeaseGuard, 78)).run();
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.history.entries.len(), b.history.entries.len());
+    assert_ne!(
+        (a.events_processed, a.t0),
+        (c.events_processed, c.t0),
+        "different seeds should diverge"
+    );
+}

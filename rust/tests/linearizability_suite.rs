@@ -1,0 +1,168 @@
+//! Checker-vs-protocol cross-validation: generate valid histories from
+//! real simulated runs, mutate them adversarially, and require the
+//! checker to (a) accept the originals and (b) flag the mutations.
+//! "Always be suspicious of success" (§5.4) — a checker that can't see
+//! injected bugs proves nothing.
+
+use leaseguard::cluster::Cluster;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::history::{History, OpKind};
+use leaseguard::linearizability::check;
+use leaseguard::prob::Rng;
+
+fn run_history(seed: u64) -> History {
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.seed = seed;
+    p.duration_us = 1_500_000;
+    p.interarrival_us = 500.0;
+    p.crash_leader_at_us = 400_000;
+    Cluster::new(p).run().history
+}
+
+#[test]
+fn real_histories_accepted() {
+    for seed in [1u64, 5, 9] {
+        let h = run_history(seed);
+        assert!(h.entries.len() > 500, "history too small: {}", h.entries.len());
+        let v = check(&h);
+        assert!(v.is_empty(), "seed {seed}: {:?}", v.first());
+    }
+}
+
+#[test]
+fn mutation_dropping_read_value_detected() {
+    // Removing the last observed value from a non-empty successful read
+    // makes it stale; the checker must notice at least one such
+    // mutation (some reads may legally drop a same-instant value).
+    let h = run_history(2);
+    let mut rng = Rng::new(1);
+    let mut detected = 0;
+    let mut tried = 0;
+    for _ in 0..50 {
+        let mut m = h.clone();
+        let candidates: Vec<usize> = m
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.success && matches!(&e.kind, OpKind::Read { result } if result.len() >= 2)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let i = *rng.choice(&candidates);
+        if let OpKind::Read { result } = &mut m.entries[i].kind {
+            result.pop();
+        }
+        tried += 1;
+        if !check(&m).is_empty() {
+            detected += 1;
+        }
+    }
+    assert!(tried > 10, "not enough mutable reads ({tried})");
+    assert!(
+        detected * 2 > tried,
+        "checker blind to stale reads: {detected}/{tried} detected"
+    );
+}
+
+#[test]
+fn mutation_reordering_read_values_detected() {
+    let h = run_history(3);
+    let mut rng = Rng::new(2);
+    let mut detected = 0;
+    let mut tried = 0;
+    for _ in 0..50 {
+        let mut m = h.clone();
+        let candidates: Vec<usize> = m
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.success && matches!(&e.kind, OpKind::Read { result } if result.len() >= 2)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let i = *rng.choice(&candidates);
+        if let OpKind::Read { result } = &mut m.entries[i].kind {
+            result.swap(0, 1);
+        }
+        tried += 1;
+        if !check(&m).is_empty() {
+            detected += 1;
+        }
+    }
+    assert!(tried > 10);
+    assert_eq!(detected, tried, "reorders must always be caught");
+}
+
+#[test]
+fn mutation_forged_future_value_detected() {
+    // A read claiming to observe a value that was never applied.
+    let h = run_history(4);
+    let mut m = h.clone();
+    let i = m
+        .entries
+        .iter()
+        .position(|e| e.success && matches!(e.kind, OpKind::Read { .. }))
+        .expect("a successful read");
+    if let OpKind::Read { result } = &mut m.entries[i].kind {
+        result.push(0xDEAD_BEEF);
+    }
+    assert!(!check(&m).is_empty());
+}
+
+#[test]
+fn mutation_unacked_write_observed_is_fine_but_lost_write_is_not() {
+    let h = run_history(6);
+    // Forge: mark a successful write as failed — checker must still
+    // accept (ambiguity rule §6.2).
+    let mut m = h.clone();
+    if let Some(e) = m
+        .entries
+        .iter_mut()
+        .find(|e| e.success && matches!(e.kind, OpKind::Append { .. }))
+    {
+        e.success = false;
+    }
+    assert!(check(&m).is_empty(), "failed-but-applied writes are legal");
+    // Forge: a successful write whose apply record is erased = lost
+    // update. Rebuild the apply log without one written value.
+    let mut m2 = h.clone();
+    let victim = m2
+        .entries
+        .iter()
+        .find_map(|e| match (&e.kind, e.success) {
+            (OpKind::Append { value }, true) => Some((e.key, *value)),
+            _ => None,
+        })
+        .expect("a successful write");
+    let mut fresh = leaseguard::history::ApplyLog::new();
+    for e in &h.entries {
+        if let (OpKind::Append { value }, true) = (&e.kind, e.success) {
+            if (e.key, *value) != victim {
+                if let Some(at) = h.applies.applied_at(e.key, *value) {
+                    fresh.record(e.key, *value, at);
+                }
+            }
+        }
+    }
+    // Also strip reads that observed the victim so only the lost-update
+    // rule fires.
+    m2.entries.retain(|e| match &e.kind {
+        OpKind::Read { result } => !(e.key == victim.0 && result.contains(&victim.1)),
+        _ => true,
+    });
+    m2.applies = fresh;
+    let v = check(&m2);
+    assert!(
+        v.iter().any(|x| x.detail.contains("never applied")),
+        "lost acknowledged write must be flagged: {v:?}"
+    );
+}

@@ -1,0 +1,208 @@
+//! Property-based tests over the protocol invariants (testkit is the
+//! offline proptest substitute; see DESIGN.md substitutions).
+//!
+//! These are the strongest safety checks in the suite: randomized fault
+//! schedules (crash/partition timing, network parameters, clock error,
+//! seeds) against the full simulated cluster, asserting the paper's
+//! invariants; plus model-level properties of the lease gates.
+
+use leaseguard::clock::TimeInterval;
+use leaseguard::cluster::Cluster;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::linearizability;
+use leaseguard::prob::Rng;
+use leaseguard::testkit::{assert_prop, PropConfig};
+
+/// One randomized fault schedule.
+#[derive(Debug, Clone)]
+struct FaultCase {
+    seed: u64,
+    mode_idx: usize,
+    crash_at_ms: i64,
+    partition_instead: bool,
+    restart_after_ms: i64,
+    net_mean_us: f64,
+    clock_error_us: i64,
+    interarrival_us: f64,
+    stray: bool,
+}
+
+const MODES: [ConsistencyMode; 5] = [
+    ConsistencyMode::Quorum,
+    ConsistencyMode::OngaroLease,
+    ConsistencyMode::LogLease,
+    ConsistencyMode::DeferCommit,
+    ConsistencyMode::LeaseGuard,
+];
+
+fn gen_case(rng: &mut Rng) -> FaultCase {
+    FaultCase {
+        seed: rng.next_u64(),
+        mode_idx: rng.below(MODES.len() as u64) as usize,
+        crash_at_ms: rng.range_i64(100, 1200),
+        partition_instead: rng.chance(0.4),
+        restart_after_ms: if rng.chance(0.5) { rng.range_i64(100, 800) } else { 0 },
+        net_mean_us: 100.0 + rng.f64() * 3000.0,
+        clock_error_us: rng.range_i64(0, 500),
+        interarrival_us: 300.0 + rng.f64() * 1200.0,
+        stray: rng.chance(0.5),
+    }
+}
+
+fn params_of(c: &FaultCase) -> Params {
+    let mut p = Params::default();
+    p.consistency = MODES[c.mode_idx];
+    p.seed = c.seed;
+    p.duration_us = 2_500_000;
+    p.interarrival_us = c.interarrival_us;
+    p.net_mean_us = c.net_mean_us;
+    p.net_variance_us2 = c.net_mean_us; // paper's variance = mean shape
+    p.clock_error_us = c.clock_error_us;
+    if c.partition_instead {
+        p.partition_leader_at_us = c.crash_at_ms * 1000;
+        p.heal_after_us = if c.restart_after_ms > 0 { c.restart_after_ms * 1000 } else { 0 };
+    } else {
+        p.crash_leader_at_us = c.crash_at_ms * 1000;
+        p.restart_after_us = if c.restart_after_ms > 0 { c.restart_after_ms * 1000 } else { 0 };
+    }
+    if c.stray {
+        p.client_stray_prob = 0.05;
+        p.op_timeout_us = 400_000;
+    }
+    p
+}
+
+#[test]
+fn prop_consistent_modes_always_linearizable() {
+    // The flagship property: under ANY crash/partition/heal schedule,
+    // with correct clocks, every consistency mode except "inconsistent"
+    // yields a linearizable history.
+    assert_prop(
+        PropConfig { cases: 40, seed: 0xDEC0DE, max_shrink_steps: 8 },
+        gen_case,
+        |c| {
+            // Shrink toward: no restart, no stray, calmer network.
+            let mut v = Vec::new();
+            if c.restart_after_ms > 0 {
+                let mut s = c.clone();
+                s.restart_after_ms = 0;
+                v.push(s);
+            }
+            if c.stray {
+                let mut s = c.clone();
+                s.stray = false;
+                v.push(s);
+            }
+            if c.clock_error_us > 0 {
+                let mut s = c.clone();
+                s.clock_error_us = 0;
+                v.push(s);
+            }
+            v
+        },
+        |c| {
+            let rep = Cluster::new(params_of(c)).run();
+            let viol = linearizability::check(&rep.history);
+            if viol.is_empty() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} violations in mode {}, first: {:?}",
+                    viol.len(),
+                    MODES[c.mode_idx],
+                    viol.first()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_progress_after_faults() {
+    // Liveness-ish: after the fault settles (last 500 ms of the run),
+    // the replica set serves reads again in every consistent mode.
+    assert_prop(
+        PropConfig { cases: 20, seed: 0x11FE, max_shrink_steps: 4 },
+        gen_case,
+        |_| Vec::new(),
+        |c| {
+            let mut p = params_of(c);
+            p.duration_us = 3_200_000; // leave room to recover
+            let rep = Cluster::new(p).run();
+            let tail = rep.series.window_totals(true, 2_700_000, 3_200_000);
+            if tail.ok > 0 {
+                Ok(())
+            } else {
+                Err(format!("no reads served in the final window: {tail:?}"))
+            }
+        },
+    );
+}
+
+/// Model-level safety property of the two lease gates (§4.2 Case 2):
+/// whenever a new leader's commit gate is open (it may commit), the old
+/// leader's read gate must already be closed — for any entry timestamps
+/// and any pair of *correct* clock readings.
+#[test]
+fn prop_gate_exclusivity_under_uncertainty() {
+    #[derive(Debug, Clone)]
+    struct GateCase {
+        entry_at: i64,
+        entry_err: i64,
+        delta: i64,
+        true_now: i64,
+        err_a: i64,
+        err_b: i64,
+    }
+    assert_prop(
+        PropConfig { cases: 3000, seed: 0x6A7E, max_shrink_steps: 0 },
+        |rng| GateCase {
+            entry_at: rng.range_i64(0, 2_000_000),
+            entry_err: rng.range_i64(0, 100),
+            delta: rng.range_i64(1, 2_000_000),
+            true_now: rng.range_i64(0, 5_000_000),
+            err_a: rng.range_i64(0, 100),
+            err_b: rng.range_i64(0, 100),
+        },
+        |_| Vec::new(),
+        |c| {
+            // Correct interval construction: truth inside the interval.
+            let entry = TimeInterval::new(c.entry_at - c.entry_err, c.entry_at + c.entry_err);
+            let now_commit = TimeInterval::new(c.true_now - c.err_a, c.true_now + c.err_a);
+            // The reader observes the same or an EARLIER true time (the
+            // dangerous direction): its reading still contains its truth.
+            let reader_true = c.true_now; // same instant
+            let now_read = TimeInterval::new(reader_true - c.err_b, reader_true + c.err_b);
+            let commit_allowed = entry.definitely_older_than(c.delta, now_commit);
+            let read_allowed = !entry.possibly_older_than(c.delta, now_read);
+            if commit_allowed && read_allowed {
+                Err(format!("both gates open: {c:?}"))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+/// Determinism as a property: any fault case replayed twice produces an
+/// identical event count and history length.
+#[test]
+fn prop_simulation_deterministic() {
+    assert_prop(
+        PropConfig { cases: 10, seed: 0x5EED5, max_shrink_steps: 0 },
+        gen_case,
+        |_| Vec::new(),
+        |c| {
+            let a = Cluster::new(params_of(c)).run();
+            let b = Cluster::new(params_of(c)).run();
+            if a.events_processed == b.events_processed
+                && a.history.entries.len() == b.history.entries.len()
+                && a.t0 == b.t0
+            {
+                Ok(())
+            } else {
+                Err("replay diverged".into())
+            }
+        },
+    );
+}
