@@ -1,137 +1,37 @@
 //! Microbenchmarks of the hot paths (harness=false; criterion is not
-//! available offline). Feeds EXPERIMENTS.md §Perf: event-loop
-//! throughput, node write path, read admission (scalar vs XLA engine at
-//! several batch sizes), histogram recording, wire codec.
-
-use std::path::Path;
-use std::time::Instant;
-
-use leaseguard::clock::TimeInterval;
-use leaseguard::cluster::Cluster;
-use leaseguard::config::{ConsistencyMode, Params};
-use leaseguard::figures::fig8::limbo_leader;
-use leaseguard::metrics::Histogram;
-use leaseguard::prob::Rng;
-use leaseguard::runtime::{hash_key, scalar_admission, AdmissionEngine, AdmissionInputs};
-use leaseguard::server::wire::{self, ClientReq, Frame};
-use leaseguard::sim::EventQueue;
-
-fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
-    // Warmup + 3 timed reps; report best ops/s.
-    f();
-    let mut best = 0.0f64;
-    let mut last_ops = 0;
-    for _ in 0..3 {
-        let t0 = Instant::now();
-        let ops = f();
-        let dt = t0.elapsed().as_secs_f64();
-        best = best.max(ops as f64 / dt);
-        last_ops = ops;
-    }
-    println!("{name:<44} {:>14.0} ops/s  ({last_ops} ops/rep)", best);
-}
+//! available offline). The suite itself lives in [`leaseguard::bench`]
+//! so `leaseguard bench` (CLI) and this target share one implementation.
+//!
+//! `cargo bench --bench micro -- --json [PATH]` additionally writes the
+//! machine-readable trajectory (default `BENCH_micro.json` at the repo
+//! root) — see `scripts/bench.sh`.
 
 fn main() {
-    println!("== leaseguard microbenches ==");
-
-    bench("event_loop: schedule+pop", || {
-        let mut q = EventQueue::new();
-        let n = 1_000_000u64;
-        for i in 0..n {
-            q.schedule(i as i64, i);
-        }
-        let mut popped = 0;
-        while q.pop().is_some() {
-            popped += 1;
-        }
-        popped
-    });
-
-    bench("sim: full availability run (events)", || {
-        let mut p = Params::default();
-        p.consistency = ConsistencyMode::LeaseGuard;
-        p.duration_us = 1_000_000;
-        p.interarrival_us = 100.0;
-        p.crash_leader_at_us = 300_000;
-        let rep = Cluster::new(p).run();
-        rep.events_processed
-    });
-
-    bench("admission: scalar 256q x 64 limbo", || {
-        let inp = AdmissionInputs {
-            query_hashes: (0..256).map(hash_key).collect(),
-            limbo_hashes: (0..64).map(hash_key).collect(),
-            commit_age_us: 10,
-            delta_us: 1_000_000,
-            own_term_commit: false,
-        };
-        let mut total = 0u64;
-        for _ in 0..2000 {
-            total += scalar_admission(&inp).iter().filter(|&&b| b).count() as u64;
-        }
-        2000 * 256
-    });
-
-    if Path::new("artifacts/manifest.json").exists() {
-        let engine = AdmissionEngine::load(Path::new("artifacts")).expect("engine");
-        for (nq, nl) in [(64usize, 64usize), (256, 128), (1024, 256)] {
-            bench(&format!("admission: XLA engine {nq}q x {nl} limbo"), || {
-                let inp = AdmissionInputs {
-                    query_hashes: (0..nq as u32).map(hash_key).collect(),
-                    limbo_hashes: (0..nl as u32).map(hash_key).collect(),
-                    commit_age_us: 10,
-                    delta_us: 1_000_000,
-                    own_term_commit: false,
-                };
-                let reps = 200;
-                for _ in 0..reps {
-                    let _ = engine.admit(&inp).unwrap();
+    // cargo passes `--bench` to harness=false targets; ignore unknowns.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(v) = args[i].strip_prefix("--json=") {
+            json = Some(v.to_string());
+        } else if args[i] == "--json" {
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    json = Some(v.clone());
+                    i += 1;
                 }
-                (reps * nq) as u64
-            });
+                _ => json = Some("BENCH_micro.json".to_string()),
+            }
         }
-    } else {
-        println!("(XLA engine benches skipped: run `make artifacts`)");
+        i += 1;
     }
 
-    bench("node: batched read admission path (limbo)", || {
-        let p = Params::default();
-        let mut node = limbo_leader(&p, 100, 0.5, 3);
-        let ops: Vec<(u64, u32)> = (0..1024u64).map(|i| (i, (i % 1000) as u32)).collect();
-        let now = TimeInterval::exact(1_200_000);
-        let reps = 200;
-        for _ in 0..reps {
-            let _ = node.client_read_batch(now, &ops, |i| scalar_admission(i));
-        }
-        reps * ops.len() as u64
-    });
-
-    bench("metrics: histogram record+p99", || {
-        let mut h = Histogram::new();
-        let mut r = Rng::new(1);
-        let n = 2_000_000u64;
-        for _ in 0..n {
-            h.record(r.below(1_000_000) as i64);
-        }
-        assert!(h.p99() > 0);
-        n
-    });
-
-    bench("wire: encode+decode 1KiB write req", || {
-        let req = Frame::ClientReq(ClientReq {
-            op: 1,
-            key: 7,
-            write_value: Some(9),
-            payload: vec![0xA5; 1024],
-        });
-        let n = 100_000u64;
-        for _ in 0..n {
-            let enc = wire::encode(&req);
-            let dec = wire::decode(&enc).unwrap();
-            assert!(matches!(dec, Frame::ClientReq(_)));
-        }
-        n
-    });
-
+    println!("== leaseguard microbenches ==");
+    let results = leaseguard::bench::run_suite();
+    if let Some(path) = json {
+        leaseguard::bench::write_json(std::path::Path::new(&path), &results)
+            .expect("write bench json");
+        println!("wrote {path}");
+    }
     println!("== done ==");
 }

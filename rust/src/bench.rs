@@ -1,0 +1,346 @@
+//! Microbenchmark suite for the hot paths, shared by the harness=false
+//! bench target (`cargo bench --bench micro`) and the CLI
+//! (`leaseguard bench`). Both can emit the machine-readable
+//! `BENCH_micro.json` trajectory at the repo root so every perf PR
+//! records before/after numbers (see `scripts/bench.sh`).
+//!
+//! Covered: event-loop throughput, a full sim availability run, read
+//! admission (scalar and, when artifacts exist, the XLA engine),
+//! zero-copy replication fan-out vs. the per-peer deep-copy baseline,
+//! wire encode with and without buffer reuse, loopback frame transport,
+//! histogram recording, and the client-frame codec.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::clock::TimeInterval;
+use crate::cluster::Cluster;
+use crate::config::{ConsistencyMode, Params};
+use crate::figures::fig8::limbo_leader;
+use crate::kv::Command;
+use crate::metrics::Histogram;
+use crate::prob::Rng;
+use crate::raft::log::Entry;
+use crate::raft::{Message, Node, NodeConfig, Output, TimerKind};
+use crate::report;
+use crate::runtime::{hash_key, scalar_admission, AdmissionEngine, AdmissionInputs};
+use crate::server::transport::{write_frame, FrameReader};
+use crate::server::wire::{self, ClientReq, Enc, Frame};
+use crate::sim::EventQueue;
+
+/// One measured microbench: best-of-3 throughput after a warmup rep.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub ops_per_sec: f64,
+    pub ops_per_rep: u64,
+}
+
+fn bench<F: FnMut() -> u64>(out: &mut Vec<BenchResult>, name: &str, mut f: F) {
+    f(); // warmup
+    let mut best = 0.0f64;
+    let mut last_ops = 0;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        best = best.max(ops as f64 / dt);
+        last_ops = ops;
+    }
+    println!("{name:<56} {best:>14.0} ops/s  ({last_ops} ops/rep)");
+    out.push(BenchResult { name: name.to_string(), ops_per_sec: best, ops_per_rep: last_ops });
+}
+
+/// A 5-node leader with `entries` log entries and all followers unacked
+/// (`next_index` still at 1), so every heartbeat fan-out re-sends the
+/// full batch to each of the 4 peers — the replication hot path under a
+/// catch-up-shaped load.
+fn fanout_leader(entries: u64) -> (Node, TimeInterval) {
+    let cfg = NodeConfig {
+        id: 0,
+        n: 5,
+        mode: ConsistencyMode::Inconsistent,
+        election_timeout_us: 500_000,
+        election_jitter_us: 0,
+        lease_duration_us: 1_000_000,
+        heartbeat_us: 75_000,
+        lease_renew_fraction: 0.0,
+        max_entries_per_append: 1024,
+    };
+    let (mut node, _) = Node::new(cfg, 1, TimeInterval::exact(0));
+    let now = TimeInterval::exact(500_000);
+    node.on_timer(now, TimerKind::Election);
+    let term = node.term();
+    node.on_message(now, Message::VoteReply { term, voter: 1, granted: true });
+    node.on_message(now, Message::VoteReply { term, voter: 2, granted: true });
+    assert!(node.is_leader(), "bench setup: election failed");
+    // Term-start noop is entry 1; add the rest via the write path.
+    for i in 1..entries {
+        node.client_write(now, i, (i % 64) as u32, i, 0);
+    }
+    assert_eq!(node.log().last_index(), entries);
+    (node, now)
+}
+
+/// Run the whole suite, printing a line per bench, returning the data.
+pub fn run_suite() -> Vec<BenchResult> {
+    let mut out = Vec::new();
+
+    bench(&mut out, "event_loop: schedule+pop", || {
+        let mut q = EventQueue::new();
+        let n = 1_000_000u64;
+        for i in 0..n {
+            q.schedule(i as i64, i);
+        }
+        let mut popped = 0;
+        while q.pop().is_some() {
+            popped += 1;
+        }
+        popped
+    });
+
+    bench(&mut out, "sim: full availability run (events)", || {
+        let mut p = Params::default();
+        p.consistency = ConsistencyMode::LeaseGuard;
+        p.duration_us = 1_000_000;
+        p.interarrival_us = 100.0;
+        p.crash_leader_at_us = 300_000;
+        let rep = Cluster::new(p).run();
+        rep.events_processed
+    });
+
+    // ---- replication fan-out: the tentpole measurement --------------
+    // 5-node replicate-all with 64-entry batches. The zero-copy path
+    // materializes the batch into one Arc and fans out views; the
+    // baseline re-enacts what `send_append` did before this PR — one
+    // deep copy of the 64-entry segment per follower.
+    bench(&mut out, "replication: fan-out 5n x 64 entries (zero-copy)", || {
+        let (mut node, now) = fanout_leader(64);
+        let reps = 4000u64;
+        let mut entries_sent = 0u64;
+        for _ in 0..reps {
+            let outs = node.on_timer(now, TimerKind::Heartbeat);
+            for o in &outs {
+                if let Output::Send { msg: Message::AppendEntries { entries, .. }, .. } = o {
+                    entries_sent += entries.len() as u64;
+                }
+            }
+        }
+        assert_eq!(entries_sent, reps * 4 * 64);
+        entries_sent
+    });
+
+    bench(&mut out, "replication: fan-out 5n x 64 entries (deep-copy baseline)", || {
+        // Re-enacts the pre-refactor send path shape-for-shape: per
+        // round, build one AppendEntries per peer into an output vec —
+        // but materialize the batch once per PEER (the old
+        // `slice(..).to_vec()` behavior) instead of once per round.
+        // Only the materialization strategy differs from the zero-copy
+        // row above.
+        let (node, _) = fanout_leader(64);
+        let term = node.term();
+        let commit = node.commit_index();
+        let reps = 4000u64;
+        let mut entries_sent = 0u64;
+        for _ in 0..reps {
+            let mut outs: Vec<Output> = Vec::new();
+            for peer in 1..5usize {
+                let batch: crate::raft::EntryBatch = node.log().slice(0, 64).into();
+                entries_sent += batch.len() as u64;
+                outs.push(Output::Send {
+                    to: peer,
+                    msg: Message::AppendEntries {
+                        term,
+                        leader: 0,
+                        prev_index: 0,
+                        prev_term: 0,
+                        entries: batch,
+                        leader_commit: commit,
+                        seq: 1,
+                    },
+                });
+            }
+            std::hint::black_box(&outs);
+        }
+        entries_sent
+    });
+
+    // ---- wire / frame throughput ------------------------------------
+    let batch_msg = || Message::AppendEntries {
+        term: 3,
+        leader: 0,
+        prev_index: 0,
+        prev_term: 0,
+        entries: (0..64u32)
+            .map(|i| Entry {
+                term: 3,
+                command: Command::Put { key: i, value: i as u64, payload_bytes: 256 },
+                written_at: TimeInterval::exact(i as i64),
+            })
+            .collect::<Vec<_>>()
+            .into(),
+        leader_commit: 0,
+        seq: 9,
+    };
+
+    bench(&mut out, "wire: encode 64-entry AppendEntries (reused buffer)", || {
+        let msg = batch_msg();
+        let mut enc = Enc::new();
+        let n = 100_000u64;
+        for _ in 0..n {
+            enc.reset();
+            wire::encode_raft_into(0, &msg, &mut enc);
+            std::hint::black_box(&enc.buf);
+        }
+        n
+    });
+
+    bench(&mut out, "wire: encode 64-entry AppendEntries (fresh alloc)", || {
+        let msg = batch_msg();
+        let n = 100_000u64;
+        for _ in 0..n {
+            let body = wire::encode(&Frame::Raft { from: 0, msg: msg.clone() });
+            std::hint::black_box(&body);
+        }
+        n
+    });
+
+    bench(&mut out, "transport: loopback 1KiB frames (vectored+buffered)", || {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut tx = TcpStream::connect(addr).expect("connect");
+        tx.set_nodelay(true).ok();
+        let (rx, _) = listener.accept().expect("accept");
+        rx.set_nodelay(true).ok();
+        let mut frames = FrameReader::new(rx);
+        let body = vec![0xA5u8; 1024];
+        let n = 20_000u64;
+        let burst = 32u64;
+        let mut seen = 0u64;
+        while seen < n {
+            for _ in 0..burst {
+                write_frame(&mut tx, &body).expect("write");
+            }
+            for _ in 0..burst {
+                let got = frames.next_frame().expect("read").expect("frame");
+                debug_assert_eq!(got.len(), body.len());
+                seen += 1;
+            }
+        }
+        n
+    });
+
+    // ---- read admission ---------------------------------------------
+    bench(&mut out, "admission: scalar 256q x 64 limbo", || {
+        let inp = AdmissionInputs {
+            query_hashes: (0..256).map(hash_key).collect(),
+            limbo_hashes: (0..64).map(hash_key).collect(),
+            commit_age_us: 10,
+            delta_us: 1_000_000,
+            own_term_commit: false,
+        };
+        let mut total = 0u64;
+        for _ in 0..2000 {
+            total += scalar_admission(&inp).iter().filter(|&&b| b).count() as u64;
+        }
+        std::hint::black_box(total);
+        2000 * 256
+    });
+
+    if Path::new("artifacts/manifest.json").exists() {
+        match AdmissionEngine::load(Path::new("artifacts")) {
+            Ok(engine) => {
+                for (nq, nl) in [(64usize, 64usize), (256, 128), (1024, 256)] {
+                    bench(&mut out, &format!("admission: XLA engine {nq}q x {nl} limbo"), || {
+                        let inp = AdmissionInputs {
+                            query_hashes: (0..nq as u32).map(hash_key).collect(),
+                            limbo_hashes: (0..nl as u32).map(hash_key).collect(),
+                            commit_age_us: 10,
+                            delta_us: 1_000_000,
+                            own_term_commit: false,
+                        };
+                        let reps = 200;
+                        for _ in 0..reps {
+                            let _ = engine.admit(&inp).unwrap();
+                        }
+                        (reps * nq) as u64
+                    });
+                }
+            }
+            Err(e) => println!("(XLA engine benches skipped: {e:#})"),
+        }
+    } else {
+        println!("(XLA engine benches skipped: run `make artifacts`)");
+    }
+
+    bench(&mut out, "node: batched read admission path (limbo)", || {
+        let p = Params::default();
+        let mut node = limbo_leader(&p, 100, 0.5, 3);
+        let ops: Vec<(u64, u32)> = (0..1024u64).map(|i| (i, (i % 1000) as u32)).collect();
+        let now = TimeInterval::exact(1_200_000);
+        let reps = 200;
+        for _ in 0..reps {
+            let _ = node.client_read_batch(now, &ops, |i| scalar_admission(i));
+        }
+        reps * ops.len() as u64
+    });
+
+    bench(&mut out, "metrics: histogram record+p99", || {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(1);
+        let n = 2_000_000u64;
+        for _ in 0..n {
+            h.record(r.below(1_000_000) as i64);
+        }
+        assert!(h.p99() > 0);
+        n
+    });
+
+    bench(&mut out, "wire: encode+decode 1KiB write req", || {
+        let req = Frame::ClientReq(ClientReq {
+            op: 1,
+            key: 7,
+            write_value: Some(9),
+            payload: vec![0xA5; 1024],
+        });
+        let n = 100_000u64;
+        for _ in 0..n {
+            let enc = wire::encode(&req);
+            let dec = wire::decode(&enc).unwrap();
+            assert!(matches!(dec, Frame::ClientReq(_)));
+        }
+        n
+    });
+
+    out
+}
+
+/// Write results as `BENCH_micro.json` (or any path).
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    let rows: Vec<(String, f64, u64)> =
+        results.iter().map(|r| (r.name.clone(), r.ops_per_sec, r.ops_per_rep)).collect();
+    report::write_bench_json(path, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanout_leader_is_ready_for_measurement() {
+        let (mut node, now) = fanout_leader(8);
+        let outs = node.on_timer(now, TimerKind::Heartbeat);
+        let batches: Vec<_> = outs
+            .iter()
+            .filter_map(|o| match o {
+                Output::Send { msg: Message::AppendEntries { entries, .. }, .. } => Some(entries),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(batches.len(), 4, "5-node fan-out sends to 4 peers");
+        assert!(batches.iter().all(|b| b.len() == 8), "full batch to every peer");
+        // Zero per-peer deep copies: all views share one allocation.
+        assert!(batches.windows(2).all(|w| w[0].shares_buffer(w[1])));
+    }
+}

@@ -22,8 +22,8 @@ use crate::metrics::{Histogram, TimeSeries};
 use crate::prob::Rng;
 use crate::raft::{FailReason, OpResult};
 use crate::server::server::SharedApplies;
-use crate::server::transport::{read_frame, write_frame};
-use crate::server::wire::{self, ClientReq, Frame};
+use crate::server::transport::{write_frame, FrameReader};
+use crate::server::wire::{self, ClientReq, Enc, Frame};
 use crate::workload::{OpSpec, Workload};
 use crate::Micros;
 
@@ -79,11 +79,13 @@ pub fn run_open_loop(
         match TcpStream::connect(addr) {
             Ok(s) => {
                 s.set_nodelay(true).ok();
-                let mut r = s.try_clone()?;
+                let r = s.try_clone()?;
                 let sh = shared.clone();
                 readers.push(std::thread::spawn(move || {
-                    while let Ok(Some(body)) = read_frame(&mut r) {
-                        let Ok(Frame::ClientResp(resp)) = wire::decode(&body) else { break };
+                    // Buffered reads + reusable scratch per connection.
+                    let mut frames = FrameReader::new(r);
+                    while let Ok(Some(body)) = frames.next_frame() {
+                        let Ok(Frame::ClientResp(resp)) = wire::decode(body) else { break };
                         let end = RealClock::monotonic_us();
                         // Live leader discovery: NotLeader un-pins the
                         // belief; any other reply pins the target.
@@ -139,6 +141,9 @@ pub fn run_open_loop(
     let mut probe = 0usize;
     let mut sent: u64 = 0;
     let mut op_id: u64 = 0;
+    // Reusable request-encode buffer: the open-loop writer allocates no
+    // fresh frame buffer per operation.
+    let mut enc = Enc::new();
 
     for spec in &schedule {
         // Open loop: issue exactly at t0 + spec.at.
@@ -178,7 +183,11 @@ pub fn run_open_loop(
             payload: vec![0xA5; spec.payload_bytes as usize],
         });
         let ok = match &mut writers[target] {
-            Some(w) => write_frame(w, &wire::encode(&req)).is_ok(),
+            Some(w) => {
+                enc.reset();
+                wire::encode_into(&req, &mut enc);
+                write_frame(w, &enc.buf).is_ok()
+            }
             None => false,
         };
         if !ok {

@@ -57,7 +57,7 @@ pub fn limbo_leader(params: &Params, limbo_entries: usize, zipf_a: f64, seed: u6
             leader: 0,
             prev_index: 0,
             prev_term: 0,
-            entries,
+            entries: entries.into(),
             leader_commit: 1,
             seq: 1,
         },

@@ -24,6 +24,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`bench`] | hot-path microbench suite (BENCH_micro.json trajectory) |
 //! | [`prob`] | seeded PRNG + the paper's probability distributions |
 //! | [`clock`] | bounded-uncertainty clocks (§2.2, §4.3) |
 //! | [`sim`] | deterministic event loop + simulated network (§6.1) |
@@ -40,6 +41,7 @@
 //! | [`config`], [`cli`] | params system + hand-rolled CLI |
 //! | [`testkit`] | mini property-testing framework (proptest substitute) |
 
+pub mod bench;
 pub mod cli;
 pub mod clock;
 pub mod cluster;

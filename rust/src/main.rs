@@ -56,6 +56,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("serve") => cmd_serve(args, params),
         Some("bench-cluster") => cmd_bench_cluster(args, params),
+        Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(&params),
         Some("params") => {
             print!("{}", params.dump());
@@ -71,10 +72,11 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: leaseguard <sim|figure|serve|bench-cluster|check|params> [--param k=v ...]
+const USAGE: &str = "usage: leaseguard <sim|figure|serve|bench|bench-cluster|check|params> [--param k=v ...]
   sim                     one simulated run (availability timeline + latency + linearizability)
   figure <5..11>          regenerate a paper figure (--scale F, --out DIR)
   serve                   one real server (--node I --listen ADDR --peers A,B,C)
+  bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
   bench-cluster           in-process 3-node TCP cluster + open-loop client
   check                   load AOT artifacts, cross-check engine vs scalar oracle
   params                  print all parameters and defaults";
@@ -180,6 +182,19 @@ fn cmd_bench_cluster(args: &Args, params: Params) -> Result<()> {
         "linearizability: {}",
         if viol.is_empty() { "OK".to_string() } else { format!("{} VIOLATIONS", viol.len()) }
     );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    println!("== leaseguard microbenches ==");
+    let results = leaseguard::bench::run_suite();
+    if let Some(v) = args.get("json") {
+        // `--json` alone parses as the boolean "true" → default path.
+        let path = if v == "true" { "BENCH_micro.json" } else { v };
+        leaseguard::bench::write_json(std::path::Path::new(path), &results)?;
+        println!("wrote {path}");
+    }
+    println!("== done ==");
     Ok(())
 }
 

@@ -9,7 +9,9 @@ use crate::kv::Command;
 use super::types::{Index, Term};
 
 /// One log entry: `(term, command, intervalNow())` (Fig 2 line 5).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// `Copy`: three scalar fields — follower ingest copies entries out of a
+/// shared [`super::batch::EntryBatch`] without touching the heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Entry {
     pub term: Term,
     pub command: Command,

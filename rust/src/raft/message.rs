@@ -6,7 +6,7 @@
 //! Ongaro-lease comparator uses to match acks to send times; it does not
 //! carry lease information.
 
-use super::log::Entry;
+use super::batch::EntryBatch;
 use super::types::{Index, Term};
 use crate::NodeId;
 
@@ -28,9 +28,13 @@ pub enum Message {
         leader: NodeId,
         prev_index: Index,
         prev_term: Term,
-        entries: Vec<Entry>,
+        /// Shared view into the leader's materialized batch: cloning a
+        /// `Message` (per-peer fan-out, sim deliveries, wire queues)
+        /// bumps a refcount instead of deep-copying entries.
+        entries: EntryBatch,
         leader_commit: Index,
-        /// Heartbeat-round id (ReadIndex / Ongaro-lease bookkeeping).
+        /// Replication-round id (ReadIndex / Ongaro-lease bookkeeping);
+        /// one id per fan-out round, shared by every peer's message.
         seq: u64,
     },
     AppendReply {

@@ -16,11 +16,13 @@
 //! `ClientRead`, `ClientWrite` acknowledgment, and `CommitEntry`
 //! (paper Fig 2).
 
+pub mod batch;
 pub mod log;
 pub mod message;
 pub mod node;
 pub mod types;
 
+pub use batch::EntryBatch;
 pub use log::{Entry, Log};
 pub use message::Message;
 pub use node::{Node, NodeConfig, Output};

@@ -8,6 +8,7 @@
 //! simulator and the protocol logic identical across both testbeds.
 
 use std::collections::{HashSet, VecDeque};
+use std::sync::Arc;
 
 use crate::clock::TimeInterval;
 use crate::config::{ConsistencyMode, Params};
@@ -16,6 +17,7 @@ use crate::lease::{LeaseGuardState, OngaroState, ReadGate};
 use crate::prob::Rng;
 use crate::{Micros, NodeId};
 
+use super::batch::EntryBatch;
 use super::log::{Entry, Log};
 use super::message::Message;
 use super::types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind};
@@ -90,6 +92,19 @@ struct PendingQuorumRead {
     seq: u64,
 }
 
+/// The leader's materialized batch for the current replication round:
+/// `arc` holds log entries `(base, base + arc.len()]`. Per-peer sends
+/// take offset views into it instead of re-copying the log segment.
+/// Only consulted while leader; leader logs are append-only, so a cached
+/// segment can never go stale mid-leadership (it is dropped on any role
+/// change or log rewrite).
+#[derive(Debug)]
+struct BatchCache {
+    /// Exclusive lower bound (the `prev_index` of the widest view).
+    base: Index,
+    arc: Arc<[Entry]>,
+}
+
 /// Per-run protocol counters (merged into figure outputs).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NodeStats {
@@ -139,6 +154,7 @@ pub struct Node {
     pending_reads: Vec<PendingQuorumRead>,
     lease: Option<LeaseGuardState>,
     ongaro: Option<OngaroState>,
+    batch_cache: Option<BatchCache>,
 
     pub stats: NodeStats,
 }
@@ -169,6 +185,7 @@ impl Node {
             pending_reads: Vec::new(),
             lease: None,
             ongaro: None,
+            batch_cache: None,
             stats: NodeStats::default(),
         };
         let mut out = Vec::new();
@@ -256,9 +273,13 @@ impl Node {
         if self.role != Role::Leader {
             return;
         }
+        // One round id for the whole fan-out; aligned peers then carry
+        // byte-identical messages the transport can encode once.
+        self.ae_seq += 1;
+        let seq = self.ae_seq;
         for peer in self.peers() {
             self.inflight[peer] = false; // heartbeat overrides the window
-            self.send_append(peer, now, out);
+            self.send_append_with_seq(peer, seq, now, out);
         }
         out.push(Output::SetTimer { kind: TimerKind::Heartbeat, after: self.cfg.heartbeat_us });
     }
@@ -317,6 +338,9 @@ impl Node {
         self.role = Role::Leader;
         self.leader_hint = Some(self.cfg.id);
         self.stats.elections_won += 1;
+        // The log may have been truncated while following; any cached
+        // batch from a previous leadership is untrustworthy.
+        self.batch_cache = None;
         let last = self.log.last_index();
         for p in 0..self.cfg.n {
             self.next_index[p] = last + 1;
@@ -370,6 +394,7 @@ impl Node {
         self.votes.clear();
         self.lease = None;
         self.ongaro = None;
+        self.batch_cache = None;
         self.store.set_limbo_region([].iter());
         // Pending writes may have replicated and may yet commit: the
         // client must treat them as ambiguous (§6.2; checker branches).
@@ -470,7 +495,7 @@ impl Node {
         leader: NodeId,
         prev_index: Index,
         prev_term: Term,
-        entries: Vec<Entry>,
+        entries: EntryBatch,
         leader_commit: Index,
         seq: u64,
         out: &mut Vec<Output>,
@@ -511,9 +536,11 @@ impl Node {
         };
         let mut match_index = 0;
         if success {
-            // Append, truncating on conflict (Raft §5.3).
+            // Append, truncating on conflict (Raft §5.3). Entries are
+            // `Copy` scalars read straight out of the shared batch — no
+            // per-entry heap work on the follower ingest path.
             let mut idx = prev_index;
-            for e in entries {
+            for &e in entries.iter() {
                 idx += 1;
                 match self.log.term_at(idx) {
                     Some(t) if t == e.term => { /* duplicate, skip */ }
@@ -593,20 +620,38 @@ impl Node {
     }
 
     /// Send one AppendEntries to `peer` carrying entries from its
-    /// next_index (bounded batch), or an empty heartbeat.
+    /// next_index (bounded batch), or an empty heartbeat. Solo sends
+    /// (catch-up, nack backoff) open their own one-message round.
     fn send_append(&mut self, peer: NodeId, now: TimeInterval, out: &mut Vec<Output>) {
         if self.inflight[peer] {
             return;
         }
         self.ae_seq += 1;
         let seq = self.ae_seq;
+        self.send_append_with_seq(peer, seq, now, out);
+    }
+
+    /// The per-peer half of a replication round. Callers have already
+    /// allocated the round id and cleared `inflight` where appropriate.
+    /// Zero per-peer deep copies: the entry payload is a view into the
+    /// round's shared batch (see [`Self::shared_entries`]).
+    fn send_append_with_seq(
+        &mut self,
+        peer: NodeId,
+        seq: u64,
+        now: TimeInterval,
+        out: &mut Vec<Output>,
+    ) {
+        if self.inflight[peer] {
+            return;
+        }
         let prev_index = self.next_index[peer] - 1;
         let prev_term = self.log.term_at(prev_index).unwrap_or(0);
         let hi = self
             .log
             .last_index()
             .min(prev_index + self.cfg.max_entries_per_append as Index);
-        let entries: Vec<Entry> = self.log.slice(prev_index, hi).to_vec();
+        let entries = self.shared_entries(prev_index, hi);
         if let Some(o) = self.ongaro.as_mut() {
             o.record_send(peer, seq, Self::local_now(now));
         }
@@ -626,20 +671,46 @@ impl Node {
         });
     }
 
+    /// Entries `(lo, hi]` as a shared view: materialized into an `Arc`
+    /// at most once per round, then handed to every peer by refcount.
+    /// A peer at a different `next_index` (catch-up) re-centers the
+    /// cache; aligned peers — the steady-state fan-out — always hit.
+    fn shared_entries(&mut self, lo: Index, hi: Index) -> EntryBatch {
+        if hi <= lo {
+            return EntryBatch::empty();
+        }
+        if let Some(c) = &self.batch_cache {
+            if c.base <= lo && hi <= c.base + c.arc.len() as Index {
+                return EntryBatch::view(
+                    c.arc.clone(),
+                    (lo - c.base) as usize,
+                    (hi - lo) as usize,
+                );
+            }
+        }
+        let arc: Arc<[Entry]> = Arc::from(self.log.slice(lo, hi));
+        self.batch_cache = Some(BatchCache { base: lo, arc: arc.clone() });
+        EntryBatch::view(arc, 0, (hi - lo) as usize)
+    }
+
     fn replicate_all(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
+        // One round id + one materialized batch for the whole fan-out.
+        self.ae_seq += 1;
+        let seq = self.ae_seq;
         for peer in self.peers() {
-            self.send_append(peer, now, out);
+            self.send_append_with_seq(peer, seq, now, out);
         }
     }
 
     /// Force a fresh heartbeat round to every peer (quorum reads need a
     /// round that *starts* after the read arrives — ReadIndex). Returns
-    /// the first seq of the round: every peer's send has seq >= it.
+    /// the round's seq: every peer's send has seq >= it.
     fn force_round(&mut self, now: TimeInterval, out: &mut Vec<Output>) -> u64 {
-        let start_seq = self.ae_seq + 1;
+        self.ae_seq += 1;
+        let start_seq = self.ae_seq;
         for peer in self.peers() {
             self.inflight[peer] = false;
-            self.send_append(peer, now, out);
+            self.send_append_with_seq(peer, start_seq, now, out);
         }
         start_seq
     }
@@ -982,6 +1053,7 @@ impl Node {
         self.pending_reads.clear();
         self.lease = None;
         self.ongaro = None;
+        self.batch_cache = None;
         self.heard_leader_at = Micros::MIN;
         for p in 0..self.cfg.n {
             self.next_index[p] = 1;
@@ -1011,6 +1083,7 @@ impl Node {
     #[doc(hidden)]
     pub fn debug_force_log(&mut self, entries: Vec<Entry>, commit: Index) {
         let mut out = Vec::new();
+        self.batch_cache = None;
         for e in entries {
             self.log.append(e);
         }
@@ -1225,7 +1298,7 @@ mod tests {
                 leader: 0,
                 prev_index: 0,
                 prev_term: 0,
-                entries,
+                entries: entries.into(),
                 leader_commit: 1,
                 seq: 1,
             },
@@ -1361,7 +1434,7 @@ mod tests {
             t(100_000),
             Message::AppendEntries {
                 term: 1, leader: 0, prev_index: 0, prev_term: 0,
-                entries: vec![], leader_commit: 0, seq: 1,
+                entries: EntryBatch::empty(), leader_commit: 0, seq: 1,
             },
         );
         // Candidate asks at t=600ms: within Δ=1s of last AE → withheld.
@@ -1391,7 +1464,7 @@ mod tests {
             t(100_000),
             Message::AppendEntries {
                 term: 1, leader: 0, prev_index: 0, prev_term: 0,
-                entries: vec![], leader_commit: 0, seq: 1,
+                entries: EntryBatch::empty(), leader_commit: 0, seq: 1,
             },
         );
         // §3: even a node that knows of a valid lease may vote.
@@ -1416,7 +1489,7 @@ mod tests {
             t(ET + 200),
             Message::AppendEntries {
                 term: 9, leader: 2, prev_index: 0, prev_term: 0,
-                entries: vec![], leader_commit: 0, seq: 1,
+                entries: EntryBatch::empty(), leader_commit: 0, seq: 1,
             },
         );
         assert!(out.iter().any(|o| matches!(
@@ -1437,7 +1510,8 @@ mod tests {
                 entries: vec![
                     Entry { term: 1, command: Command::Put { key: 1, value: 1, payload_bytes: 0 }, written_at: t(50) },
                     Entry { term: 1, command: Command::Put { key: 2, value: 2, payload_bytes: 0 }, written_at: t(60) },
-                ],
+                ]
+                .into(),
                 leader_commit: 0,
                 seq: 1,
             },
@@ -1448,7 +1522,7 @@ mod tests {
             t(200),
             Message::AppendEntries {
                 term: 3, leader: 2, prev_index: 1, prev_term: 1,
-                entries: vec![Entry { term: 3, command: Command::Noop, written_at: t(150) }],
+                entries: vec![Entry { term: 3, command: Command::Noop, written_at: t(150) }].into(),
                 leader_commit: 2,
                 seq: 1,
             },
@@ -1465,7 +1539,7 @@ mod tests {
             t(100),
             Message::AppendEntries {
                 term: 1, leader: 0, prev_index: 5, prev_term: 1,
-                entries: vec![], leader_commit: 0, seq: 3,
+                entries: EntryBatch::empty(), leader_commit: 0, seq: 3,
             },
         );
         assert!(matches!(
@@ -1510,7 +1584,7 @@ mod tests {
         // A new leader whose log ends with the EndLease entry starts
         // with an open commit gate (no Δ wait), despite fresh entries.
         let (mut new, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 9, t(0));
-        let entries: Vec<Entry> = old.log().slice(0, old.log().last_index()).to_vec();
+        let entries: EntryBatch = old.log().slice(0, old.log().last_index()).into();
         new.on_message(
             t(ET + 5000),
             Message::AppendEntries {
@@ -1536,6 +1610,38 @@ mod tests {
         assert_eq!(new.commit_index(), new.log().last_index());
         let out = new.client_read(t(2 * ET + 7000), 99, 5);
         assert!(out.iter().any(|o| matches!(o, Output::Reply { result: OpResult::ReadOk(_), .. })));
+    }
+
+    #[test]
+    fn fanout_shares_one_batch_across_peers() {
+        // A replication round must materialize the batch once and hand
+        // every peer a view of the same allocation, under one round id.
+        let now = t(ET);
+        let mut n = make_leader(ConsistencyMode::Inconsistent, now);
+        n.client_write(t(ET + 100), 1, 1, 10, 0);
+        let outs = n.on_timer(t(ET + 200), TimerKind::Heartbeat);
+        let appends: Vec<(&EntryBatch, u64)> = outs
+            .iter()
+            .filter_map(|o| match o {
+                Output::Send { msg: Message::AppendEntries { entries, seq, .. }, .. } => {
+                    Some((entries, *seq))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(appends.len(), 2, "{outs:?}");
+        assert_eq!(appends[0].0.len(), 2); // noop + the write
+        assert!(
+            appends[0].0.shares_buffer(appends[1].0),
+            "fan-out must share one materialized batch"
+        );
+        assert_eq!(appends[0].1, appends[1].1, "one round id per fan-out");
+        // The shared round is protocol-equivalent: a majority ack of
+        // that seq still commits.
+        let out = ack_all(&mut n, t(ET + 300), 1);
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, Output::Reply { op: 1, result: OpResult::WriteOk })));
     }
 
     #[test]

@@ -95,6 +95,43 @@ pub fn timeline_chart(labels: &[&str], series: &[Vec<f64>], bucket_ms: f64) -> S
     out
 }
 
+/// Write a machine-readable microbench trajectory (`BENCH_micro.json`):
+/// one `(name, ops_per_sec, ops_per_rep)` row per bench. Hand-rolled
+/// JSON (no serde offline); names are escaped minimally.
+pub fn write_bench_json(path: &Path, rows: &[(String, f64, u64)]) -> std::io::Result<()> {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut body = String::from("{\n  \"suite\": \"micro\",\n  \"results\": [\n");
+    for (i, (name, ops_per_sec, ops_per_rep)) in rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"name\": \"{}\", \"ops_per_sec\": {:.1}, \"ops_per_rep\": {}}}",
+            esc(name),
+            ops_per_sec,
+            ops_per_rep
+        );
+        body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ]\n}\n");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, body)
+}
+
 /// Format µs as a human latency string.
 pub fn fmt_us(us: i64) -> String {
     if us >= 1_000_000 {
@@ -144,6 +181,26 @@ mod tests {
     fn chart_has_one_row_per_series() {
         let s = timeline_chart(&["reads", "writes"], &[vec![0.0, 5.0, 10.0], vec![1.0, 1.0, 1.0]], 50.0);
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let p = std::env::temp_dir().join("leaseguard_test_bench.json");
+        write_bench_json(
+            &p,
+            &[
+                ("a \"quoted\" bench".to_string(), 1234.56, 99),
+                ("plain".to_string(), 7.0, 1),
+            ],
+        )
+        .unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("\"suite\": \"micro\""));
+        assert!(body.contains("\\\"quoted\\\""));
+        assert!(body.contains("\"ops_per_sec\": 1234.6"));
+        assert!(body.contains("\"ops_per_rep\": 99"));
+        assert!(body.trim_end().ends_with('}'));
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

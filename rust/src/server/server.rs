@@ -15,8 +15,8 @@ use crate::raft::{Message, Node, NodeConfig, Output, Role, TimerKind};
 use crate::runtime::{scalar_admission, EngineHandle};
 use crate::{Micros, NodeId};
 
-use super::transport::{read_frame, write_frame, DelayedSender};
-use super::wire::{self, ClientResp, Frame};
+use super::transport::{write_frame, DelayedSender, FrameReader};
+use super::wire::{self, ClientResp, Enc, Frame};
 
 /// Shared in-process apply log (real-mode linearizability input). All
 /// servers of an in-process cluster push (key, value, monotonic µs).
@@ -135,10 +135,13 @@ impl Server {
 }
 
 /// Decode frames off one inbound connection into the event channel.
-fn reader_loop(mut stream: TcpStream, conn: u64, tx: Sender<Ev>) {
+/// Buffered reads + a reusable body scratch: zero per-frame allocation
+/// on a warm connection (decode still owns its output).
+fn reader_loop(stream: TcpStream, conn: u64, tx: Sender<Ev>) {
+    let mut frames = FrameReader::new(stream);
     loop {
-        match read_frame(&mut stream) {
-            Ok(Some(body)) => match wire::decode(&body) {
+        match frames.next_frame() {
+            Ok(Some(body)) => match wire::decode(body) {
                 Ok(Frame::Raft { msg, .. }) => {
                     if tx.send(Ev::Peer(msg)).is_err() {
                         break;
@@ -165,6 +168,8 @@ struct Router {
     peers: HashMap<NodeId, DelayedSender>,
     op_conn: HashMap<u64, u64>,
     conns: HashMap<u64, TcpStream>,
+    /// Reusable frame-encode scratch for every outgoing frame.
+    enc: Enc,
 }
 
 fn kind_of(k: TimerKind) -> u8 {
@@ -185,6 +190,12 @@ fn kind_from(b: u8) -> TimerKind {
 
 impl Router {
     fn handle(&mut self, outs: Vec<Output>) {
+        // A replication fan-out arrives as Sends whose payloads repeat
+        // (shared EntryBatch + one round seq): encode once, hand every
+        // DelayedSender the same Arc'd bytes. Two slots so one lagging
+        // peer's catch-up frame interleaved mid-round doesn't evict the
+        // aligned majority's frame.
+        let mut encoded: Vec<(Message, Arc<[u8]>)> = Vec::with_capacity(2);
         for o in outs {
             match o {
                 Output::Send { to, msg } => {
@@ -196,7 +207,21 @@ impl Router {
                         }
                     }
                     if let Some(sender) = self.peers.get(&to) {
-                        let body = wire::encode(&Frame::Raft { from: self.cfg.id, msg });
+                        // Cheap compare: shared-batch views hit the
+                        // pointer-equality fast path.
+                        let body: Arc<[u8]> = match encoded.iter().find(|(m, _)| *m == msg) {
+                            Some((_, b)) => b.clone(),
+                            None => {
+                                self.enc.reset();
+                                wire::encode_raft_into(self.cfg.id, &msg, &mut self.enc);
+                                let b: Arc<[u8]> = Arc::from(&self.enc.buf[..]);
+                                if encoded.len() == 2 {
+                                    encoded.remove(0);
+                                }
+                                encoded.push((msg, b.clone()));
+                                b
+                            }
+                        };
                         if !sender.send(body) {
                             self.peers.remove(&to); // reconnect next send
                         }
@@ -214,7 +239,9 @@ impl Router {
                                 exec_us: RealClock::monotonic_us(),
                                 result,
                             });
-                            if write_frame(stream, &wire::encode(&resp)).is_err() {
+                            self.enc.reset();
+                            wire::encode_into(&resp, &mut self.enc);
+                            if write_frame(stream, &self.enc.buf).is_err() {
                                 self.conns.remove(&conn);
                             }
                         }
@@ -243,6 +270,7 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
         peers: HashMap::new(),
         op_conn: HashMap::new(),
         conns: HashMap::new(),
+        enc: Enc::new(),
     };
     router.handle(outs);
 
@@ -257,18 +285,25 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
 
     let mut read_batch: Vec<(u64, u32)> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
-        // Fire due timers.
+        // Fire due timers. Status publication is folded into the
+        // timer-fire branch: an idle loop iteration performs no atomic
+        // stores (the post-drain publish below covers event-driven
+        // changes).
         let now_us = RealClock::monotonic_us();
+        let mut timer_fired = false;
         while let Some(&std::cmp::Reverse((due, kb))) = router.timers.peek() {
             if due > now_us {
                 break;
             }
             router.timers.pop();
+            timer_fired = true;
             let now = clock.interval_now();
             let outs = node.on_timer(now, kind_from(kb));
             router.handle(outs);
         }
-        publish(&node, &status);
+        if timer_fired {
+            publish(&node, &status);
+        }
         // Wait for events until the next timer (bounded poll).
         let wait_us = router
             .timers
@@ -291,6 +326,7 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
                 break;
             }
         }
+        let had_events = !events.is_empty();
         read_batch.clear();
         for ev in events {
             match ev {
@@ -317,6 +353,10 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
                 }
                 Ev::ConnClosed(conn) => {
                     router.conns.remove(&conn);
+                    // Purge op→conn routes owned by the closed conn:
+                    // their replies have nowhere to go, and without this
+                    // the map grows without bound under client churn.
+                    router.op_conn.retain(|_, c| *c != conn);
                 }
             }
         }
@@ -335,7 +375,11 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
             });
             router.handle(outs);
         }
-        publish(&node, &status);
+        // Post-drain publish, skipped on idle iterations (recv timeout
+        // with no due timers) — those change no node state.
+        if had_events {
+            publish(&node, &status);
+        }
     }
 }
 
@@ -345,6 +389,6 @@ fn connect_peer(addr: &str, from: NodeId, delay: Duration) -> Option<DelayedSend
     let s = TcpStream::connect_timeout(&addr.parse().ok()?, Duration::from_millis(50)).ok()?;
     s.set_nodelay(true).ok();
     let ds = DelayedSender::new(s, delay);
-    ds.send(wire::encode(&Frame::HelloPeer { from }));
+    ds.send_vec(wire::encode(&Frame::HelloPeer { from }));
     Some(ds)
 }

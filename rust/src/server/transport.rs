@@ -1,51 +1,136 @@
 //! Framed TCP transport + WAN delay injection.
 //!
-//! Frames are u32-length-prefixed wire bodies. [`DelayedSender`] is the
-//! `tc netem` stand-in from the paper's §7.2 latency experiments: an
-//! outgoing queue thread that holds each frame for a configured one-way
-//! delay before writing it, preserving per-link FIFO order.
+//! Frames are u32-length-prefixed wire bodies. The hot path is
+//! allocation-light end to end:
+//!
+//! * [`write_frame`] coalesces the length prefix and body into a single
+//!   vectored write (one syscall per frame instead of two);
+//! * [`FrameReader`] wraps the socket in a buffered reader and decodes
+//!   bodies into a reusable scratch buffer — no per-frame allocation or
+//!   zero-fill once warmed up;
+//! * [`DelayedSender`] queues `Arc<[u8]>` bodies, so a broadcast frame
+//!   is encoded once and every peer link shares the same bytes.
+//!
+//! [`DelayedSender`] is the `tc netem` stand-in from the paper's §7.2
+//! latency experiments: an outgoing queue thread that holds each frame
+//! for a configured one-way delay before writing it, preserving
+//! per-link FIFO order.
 
-use std::io::{Read, Write};
+use std::io::{self, BufReader, IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Write one frame (length prefix + body).
-pub fn write_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+/// Refuse absurd frames (corrupt length prefix, protocol confusion).
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// [`FrameReader`] scratch retained across frames. One outsized frame
+/// must not pin up to [`MAX_FRAME_BYTES`] per connection forever.
+const SCRATCH_RETAIN_BYTES: usize = 256 << 10;
+
+/// Write one frame (length prefix + body) as a single coalesced
+/// vectored write. Loops only if the kernel takes a partial write.
+pub fn write_frame<W: Write>(stream: &mut W, body: &[u8]) -> io::Result<()> {
     let len = (body.len() as u32).to_le_bytes();
-    stream.write_all(&len)?;
-    stream.write_all(body)
+    let mut hdr = 0usize; // prefix bytes written
+    let mut done = 0usize; // body bytes written
+    while hdr < len.len() || done < body.len() {
+        let iov = [IoSlice::new(&len[hdr..]), IoSlice::new(&body[done..])];
+        match stream.write_vectored(&iov) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "write_frame: connection made no progress",
+                ))
+            }
+            Ok(n) => {
+                let h = n.min(len.len() - hdr);
+                hdr += h;
+                done += n - h;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
-/// Read one frame body. Returns None on clean EOF.
-pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<Option<Vec<u8>>> {
+/// Read one frame body into a fresh `Vec`. Returns None on clean EOF.
+/// One-shot/test convenience — connection loops use [`FrameReader`].
+pub fn read_frame(stream: &mut TcpStream) -> io::Result<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
     match stream.read_exact(&mut len) {
         Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
         Err(e) => return Err(e),
     }
     let n = u32::from_le_bytes(len) as usize;
-    if n > 64 << 20 {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
+    if n > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
     }
     let mut body = vec![0u8; n];
     stream.read_exact(&mut body)?;
     Ok(Some(body))
 }
 
+/// Per-connection frame reader: buffered socket reads + a reusable body
+/// scratch buffer. `next_frame` returns a borrow of the scratch, valid
+/// until the next call — decode before reading again.
+pub struct FrameReader {
+    inner: BufReader<TcpStream>,
+    scratch: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new(stream: TcpStream) -> Self {
+        FrameReader { inner: BufReader::with_capacity(64 << 10, stream), scratch: Vec::new() }
+    }
+
+    /// Read one frame body. Returns Ok(None) on clean EOF. The scratch
+    /// is reused across frames (newly grown capacity is the only
+    /// zero-fill), so a warm connection reads frames with zero
+    /// allocation; it shrinks back once an outsized frame has passed
+    /// so one 64 MiB body can't pin that memory for the connection's
+    /// lifetime.
+    pub fn next_frame(&mut self) -> io::Result<Option<&[u8]>> {
+        let mut len = [0u8; 4];
+        match self.inner.read_exact(&mut len) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e),
+        }
+        let n = u32::from_le_bytes(len) as usize;
+        if n > MAX_FRAME_BYTES {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
+        }
+        if self.scratch.len() > SCRATCH_RETAIN_BYTES && n <= SCRATCH_RETAIN_BYTES {
+            // Steadily large frames keep their buffer (n stays big);
+            // a one-off spike is released here.
+            self.scratch.truncate(SCRATCH_RETAIN_BYTES);
+            self.scratch.shrink_to_fit();
+        }
+        if self.scratch.len() < n {
+            self.scratch.resize(n, 0);
+        }
+        self.inner.read_exact(&mut self.scratch[..n])?;
+        Ok(Some(&self.scratch[..n]))
+    }
+}
+
 /// An outgoing link with an injected one-way delay. Send is non-blocking
 /// for the caller; a dedicated thread enforces the delay and writes in
-/// FIFO order. Dropping the handle closes the link.
+/// FIFO order. Dropping the handle closes the link. Bodies are shared
+/// `Arc<[u8]>`: a broadcast costs one encode + N refcount bumps.
 pub struct DelayedSender {
-    tx: Sender<(Instant, Vec<u8>)>,
+    tx: Sender<(Instant, Arc<[u8]>)>,
     _thread: JoinHandle<()>,
 }
 
 impl DelayedSender {
     pub fn new(mut stream: TcpStream, delay: Duration) -> Self {
-        let (tx, rx) = channel::<(Instant, Vec<u8>)>();
+        let (tx, rx) = channel::<(Instant, Arc<[u8]>)>();
         let thread = std::thread::spawn(move || {
             // netem-style: each frame departs `delay` after it was
             // enqueued; FIFO order is inherent to the channel.
@@ -63,9 +148,14 @@ impl DelayedSender {
         DelayedSender { tx, _thread: thread }
     }
 
-    /// Queue a frame; returns false if the link is down.
-    pub fn send(&self, body: Vec<u8>) -> bool {
+    /// Queue a shared frame body; returns false if the link is down.
+    pub fn send(&self, body: Arc<[u8]>) -> bool {
         self.tx.send((Instant::now(), body)).is_ok()
+    }
+
+    /// Queue an owned body (one-off frames like the peer hello).
+    pub fn send_vec(&self, body: Vec<u8>) -> bool {
+        self.send(Arc::from(body))
     }
 }
 
@@ -94,12 +184,46 @@ mod tests {
     }
 
     #[test]
+    fn frame_reader_reuses_scratch() {
+        let (mut a, b) = pair();
+        let mut r = FrameReader::new(b);
+        write_frame(&mut a, &[7u8; 2048]).unwrap();
+        write_frame(&mut a, b"tiny").unwrap();
+        write_frame(&mut a, &[]).unwrap();
+        assert_eq!(r.next_frame().unwrap().unwrap(), &[7u8; 2048][..]);
+        assert_eq!(r.next_frame().unwrap().unwrap(), b"tiny");
+        assert_eq!(r.next_frame().unwrap().unwrap(), b"");
+        drop(a);
+        assert!(r.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn scratch_shrinks_after_outsized_frame() {
+        let (mut a, b) = pair();
+        let mut r = FrameReader::new(b);
+        // Write from a thread: a 1 MiB frame overflows loopback socket
+        // buffers, so writer and reader must run concurrently.
+        let writer = std::thread::spawn(move || {
+            write_frame(&mut a, &vec![7u8; 1 << 20]).unwrap();
+            write_frame(&mut a, b"small").unwrap();
+        });
+        assert_eq!(r.next_frame().unwrap().unwrap().len(), 1 << 20);
+        assert_eq!(r.next_frame().unwrap().unwrap(), b"small");
+        writer.join().unwrap();
+        assert!(
+            r.scratch.len() <= SCRATCH_RETAIN_BYTES,
+            "outsized scratch must be released: {} bytes retained",
+            r.scratch.len()
+        );
+    }
+
+    #[test]
     fn delayed_sender_enforces_delay_and_order() {
         let (a, mut b) = pair();
         let tx = DelayedSender::new(a, Duration::from_millis(30));
         let t0 = Instant::now();
-        assert!(tx.send(b"one".to_vec()));
-        assert!(tx.send(b"two".to_vec()));
+        assert!(tx.send_vec(b"one".to_vec()));
+        assert!(tx.send_vec(b"two".to_vec()));
         assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"one");
         let elapsed = t0.elapsed();
         assert!(elapsed >= Duration::from_millis(28), "{elapsed:?}");
@@ -110,10 +234,25 @@ mod tests {
     }
 
     #[test]
+    fn shared_body_broadcast() {
+        // One Arc'd body through two links: both deliver, no copies made
+        // by the transport.
+        let (a1, mut b1) = pair();
+        let (a2, mut b2) = pair();
+        let tx1 = DelayedSender::new(a1, Duration::ZERO);
+        let tx2 = DelayedSender::new(a2, Duration::ZERO);
+        let body: Arc<[u8]> = Arc::from(&b"broadcast"[..]);
+        assert!(tx1.send(body.clone()));
+        assert!(tx2.send(body.clone()));
+        assert_eq!(read_frame(&mut b1).unwrap().unwrap(), b"broadcast");
+        assert_eq!(read_frame(&mut b2).unwrap().unwrap(), b"broadcast");
+    }
+
+    #[test]
     fn zero_delay_passthrough() {
         let (a, mut b) = pair();
         let tx = DelayedSender::new(a, Duration::ZERO);
-        tx.send(b"x".to_vec());
+        tx.send_vec(b"x".to_vec());
         assert_eq!(read_frame(&mut b).unwrap().unwrap(), b"x");
     }
 }

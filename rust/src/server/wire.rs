@@ -8,7 +8,7 @@ use crate::clock::TimeInterval;
 use crate::kv::Command;
 use crate::raft::log::Entry;
 use crate::raft::types::{FailReason, OpResult};
-use crate::raft::Message;
+use crate::raft::{EntryBatch, Message};
 use crate::NodeId;
 
 /// Top-level frame kinds.
@@ -50,6 +50,9 @@ pub enum Frame {
 
 // ---------------------------------------------------------------- encode
 
+/// Reusable encode buffer. Hot paths keep one per connection/router and
+/// call [`Enc::reset`] + [`encode_into`] instead of allocating a fresh
+/// `Vec` per frame.
 pub struct Enc {
     pub buf: Vec<u8>,
 }
@@ -57,6 +60,10 @@ pub struct Enc {
 impl Enc {
     pub fn new() -> Self {
         Enc { buf: Vec::with_capacity(256) }
+    }
+    /// Clear for reuse; capacity is retained.
+    pub fn reset(&mut self) {
+        self.buf.clear();
     }
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
@@ -130,53 +137,67 @@ impl Default for Enc {
     }
 }
 
-/// Encode a frame body (without the length prefix).
+/// Encode a frame body (without the length prefix) into a fresh `Vec`.
+/// Hot paths should prefer [`encode_into`] with a reused [`Enc`].
 pub fn encode(frame: &Frame) -> Vec<u8> {
     let mut e = Enc::new();
+    encode_into(frame, &mut e);
+    e.buf
+}
+
+/// Encode a Raft peer frame without constructing a [`Frame`] (the
+/// server's send path borrows the message instead of cloning it).
+pub fn encode_raft_into(from: NodeId, msg: &Message, e: &mut Enc) {
+    e.u8(FRAME_RAFT);
+    e.u32(from as u32);
+    match msg {
+        Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+            e.u8(0);
+            e.u64(*term);
+            e.u32(*candidate as u32);
+            e.u64(*last_log_index);
+            e.u64(*last_log_term);
+        }
+        Message::VoteReply { term, voter, granted } => {
+            e.u8(1);
+            e.u64(*term);
+            e.u32(*voter as u32);
+            e.u8(*granted as u8);
+        }
+        Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq } => {
+            e.u8(2);
+            e.u64(*term);
+            e.u32(*leader as u32);
+            e.u64(*prev_index);
+            e.u64(*prev_term);
+            e.u64(*leader_commit);
+            e.u64(*seq);
+            e.u32(entries.len() as u32);
+            for en in entries.iter() {
+                e.entry(en);
+            }
+        }
+        Message::AppendReply { term, from: f, success, match_index, seq } => {
+            e.u8(3);
+            e.u64(*term);
+            e.u32(*f as u32);
+            e.u8(*success as u8);
+            e.u64(*match_index);
+            e.u64(*seq);
+        }
+    }
+}
+
+/// Encode a frame body (without the length prefix) into a reused buffer.
+/// Appends to `e.buf`; callers [`Enc::reset`] between frames.
+pub fn encode_into(frame: &Frame, e: &mut Enc) {
     match frame {
         Frame::HelloPeer { from } => {
             e.u8(FRAME_HELLO_PEER);
             e.u32(*from as u32);
         }
         Frame::Raft { from, msg } => {
-            e.u8(FRAME_RAFT);
-            e.u32(*from as u32);
-            match msg {
-                Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
-                    e.u8(0);
-                    e.u64(*term);
-                    e.u32(*candidate as u32);
-                    e.u64(*last_log_index);
-                    e.u64(*last_log_term);
-                }
-                Message::VoteReply { term, voter, granted } => {
-                    e.u8(1);
-                    e.u64(*term);
-                    e.u32(*voter as u32);
-                    e.u8(*granted as u8);
-                }
-                Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq } => {
-                    e.u8(2);
-                    e.u64(*term);
-                    e.u32(*leader as u32);
-                    e.u64(*prev_index);
-                    e.u64(*prev_term);
-                    e.u64(*leader_commit);
-                    e.u64(*seq);
-                    e.u32(entries.len() as u32);
-                    for en in entries {
-                        e.entry(en);
-                    }
-                }
-                Message::AppendReply { term, from: f, success, match_index, seq } => {
-                    e.u8(3);
-                    e.u64(*term);
-                    e.u32(*f as u32);
-                    e.u8(*success as u8);
-                    e.u64(*match_index);
-                    e.u64(*seq);
-                }
-            }
+            encode_raft_into(*from, msg, e);
         }
         Frame::ClientReq(r) => {
             e.u8(FRAME_CLIENT_REQ);
@@ -198,7 +219,6 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             e.result(&r.result);
         }
     }
-    e.buf
 }
 
 // ---------------------------------------------------------------- decode
@@ -313,7 +333,15 @@ pub fn decode(b: &[u8]) -> R<Frame> {
                     for _ in 0..n {
                         entries.push(d.entry()?);
                     }
-                    Message::AppendEntries { term, leader, prev_index, prev_term, entries, leader_commit, seq }
+                    Message::AppendEntries {
+                        term,
+                        leader,
+                        prev_index,
+                        prev_term,
+                        entries: EntryBatch::from_vec(entries),
+                        leader_commit,
+                        seq,
+                    }
                 }
                 3 => Message::AppendReply {
                     term: d.u64()?,
@@ -384,7 +412,8 @@ mod tests {
                         written_at: TimeInterval::new(100, 180),
                     },
                     Entry { term: 4, command: Command::EndLease, written_at: TimeInterval::new(-5, 5) },
-                ],
+                ]
+                .into(),
                 leader_commit: 10,
                 seq: 42,
             },
@@ -393,6 +422,50 @@ mod tests {
             from: 2,
             msg: Message::AppendReply { term: 4, from: 2, success: false, match_index: 0, seq: 42 },
         });
+        // Empty entry batch (heartbeat frame).
+        roundtrip(Frame::Raft {
+            from: 1,
+            msg: Message::AppendEntries {
+                term: 5,
+                leader: 1,
+                prev_index: 7,
+                prev_term: 5,
+                entries: crate::raft::EntryBatch::empty(),
+                leader_commit: 7,
+                seq: 43,
+            },
+        });
+    }
+
+    #[test]
+    fn encode_into_reuse_matches_fresh_encode() {
+        let frames = [
+            Frame::HelloPeer { from: 1 },
+            Frame::Raft {
+                from: 0,
+                msg: Message::AppendEntries {
+                    term: 2,
+                    leader: 0,
+                    prev_index: 1,
+                    prev_term: 1,
+                    entries: vec![Entry {
+                        term: 2,
+                        command: Command::Put { key: 3, value: 9, payload_bytes: 64 },
+                        written_at: TimeInterval::new(1, 2),
+                    }]
+                    .into(),
+                    leader_commit: 1,
+                    seq: 5,
+                },
+            },
+            Frame::ClientResp(ClientResp { op: 4, exec_us: 12, result: OpResult::WriteOk }),
+        ];
+        let mut e = Enc::new();
+        for f in &frames {
+            e.reset();
+            encode_into(f, &mut e);
+            assert_eq!(e.buf, encode(f), "reused-buffer encoding must be byte-identical");
+        }
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! The network itself is policy-only — it decides *whether* and *when* a
 //! message arrives; the cluster harness owns the event queue and actually
 //! schedules the delivery. Keeping the two separate makes the policy unit
-//! -testable without running a simulation.
+//! -testable without running a simulation. It also keeps this layer
+//! payload-agnostic: message bodies (including Arc-backed shared entry
+//! batches) move through the event queue untouched, so delivery cost is
+//! independent of batch size.
 
 use crate::prob::{LogNormal, Rng};
 use crate::{Micros, NodeId};

@@ -1,0 +1,195 @@
+//! Wire-codec round-trip property tests (`decode(encode(f)) == f`) via
+//! the in-repo `testkit` property harness.
+//!
+//! Coverage contract (PR satellite): random frames over every
+//! [`Message`] variant, every [`FailReason`], empty entry batches, and
+//! zero-length payloads — the cases the `EntryBatch` refactor could
+//! plausibly have perturbed.
+
+use leaseguard::clock::TimeInterval;
+use leaseguard::kv::Command;
+use leaseguard::prob::Rng;
+use leaseguard::raft::log::Entry;
+use leaseguard::raft::types::{FailReason, OpResult};
+use leaseguard::raft::{EntryBatch, Message};
+use leaseguard::server::wire::{self, ClientReq, ClientResp, Frame};
+use leaseguard::testkit::{assert_prop, PropConfig};
+
+const FAIL_REASONS: [FailReason; 6] = [
+    FailReason::NotLeader,
+    FailReason::NoLease,
+    FailReason::LimboConflict,
+    FailReason::CommitGateClosed,
+    FailReason::MaybeCommitted,
+    FailReason::Timeout,
+];
+
+fn gen_command(rng: &mut Rng) -> Command {
+    match rng.below(3) {
+        0 => Command::Noop,
+        1 => Command::EndLease,
+        _ => Command::Put {
+            key: rng.next_u64() as u32,
+            value: rng.next_u64(),
+            payload_bytes: rng.below(1 << 20) as u32,
+        },
+    }
+}
+
+fn gen_entry(rng: &mut Rng) -> Entry {
+    let lo = rng.range_i64(-1_000, 5_000_000);
+    Entry {
+        term: rng.below(64),
+        command: gen_command(rng),
+        written_at: TimeInterval::new(lo, lo + rng.range_i64(0, 500)),
+    }
+}
+
+fn gen_batch(rng: &mut Rng) -> EntryBatch {
+    // Bias toward the edge cases: ~1/4 of batches are empty.
+    let n = if rng.chance(0.25) { 0 } else { rng.below(65) as usize };
+    (0..n).map(|_| gen_entry(rng)).collect::<Vec<_>>().into()
+}
+
+fn gen_result(rng: &mut Rng) -> OpResult {
+    match rng.below(3) {
+        0 => OpResult::WriteOk,
+        1 => {
+            let n = rng.below(16) as usize; // includes the empty read
+            OpResult::ReadOk((0..n).map(|_| rng.next_u64()).collect())
+        }
+        _ => OpResult::Failed(FAIL_REASONS[rng.below(6) as usize]),
+    }
+}
+
+fn gen_frame(rng: &mut Rng) -> Frame {
+    match rng.below(8) {
+        0 => Frame::HelloPeer { from: rng.below(16) as usize },
+        1 => Frame::Raft {
+            from: rng.below(8) as usize,
+            msg: Message::RequestVote {
+                term: rng.below(1000),
+                candidate: rng.below(8) as usize,
+                last_log_index: rng.next_u64() >> 20,
+                last_log_term: rng.below(1000),
+            },
+        },
+        2 => Frame::Raft {
+            from: rng.below(8) as usize,
+            msg: Message::VoteReply {
+                term: rng.below(1000),
+                voter: rng.below(8) as usize,
+                granted: rng.chance(0.5),
+            },
+        },
+        3 | 4 => Frame::Raft {
+            from: rng.below(8) as usize,
+            msg: Message::AppendEntries {
+                term: rng.below(1000),
+                leader: rng.below(8) as usize,
+                prev_index: rng.below(1 << 20),
+                prev_term: rng.below(1000),
+                entries: gen_batch(rng),
+                leader_commit: rng.below(1 << 20),
+                seq: rng.next_u64(),
+            },
+        },
+        5 => Frame::Raft {
+            from: rng.below(8) as usize,
+            msg: Message::AppendReply {
+                term: rng.below(1000),
+                from: rng.below(8) as usize,
+                success: rng.chance(0.5),
+                match_index: rng.below(1 << 20),
+                seq: rng.next_u64(),
+            },
+        },
+        6 => Frame::ClientReq(ClientReq {
+            op: rng.next_u64(),
+            key: rng.next_u64() as u32,
+            write_value: if rng.chance(0.5) { Some(rng.next_u64()) } else { None },
+            // Zero-length payloads are ~1/3 of the cases.
+            payload: if rng.chance(0.33) {
+                Vec::new()
+            } else {
+                (0..rng.below(2048)).map(|_| rng.next_u64() as u8).collect()
+            },
+        }),
+        _ => Frame::ClientResp(ClientResp {
+            op: rng.next_u64(),
+            exec_us: rng.range_i64(-10, 10_000_000),
+            result: gen_result(rng),
+        }),
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_random_frames() {
+    assert_prop(
+        PropConfig { cases: 2000, seed: 0x71BE, max_shrink_steps: 0 },
+        gen_frame,
+        |_| Vec::new(),
+        |f| {
+            let enc = wire::encode(f);
+            match wire::decode(&enc) {
+                Ok(dec) if dec == *f => Ok(()),
+                Ok(dec) => Err(format!("roundtrip mismatch:\n  in: {f:?}\n out: {dec:?}")),
+                Err(e) => Err(format!("decode failed: {e:?} for {f:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_truncation_never_panics() {
+    // Any prefix of a valid encoding must decode to a clean error (or a
+    // valid frame for the full length), never panic.
+    assert_prop(
+        PropConfig { cases: 300, seed: 0x7A11C, max_shrink_steps: 0 },
+        gen_frame,
+        |_| Vec::new(),
+        |f| {
+            let enc = wire::encode(f);
+            // Stride large frames so the debug-build cost stays bounded
+            // (every cut point is still exercised for small frames).
+            let step = 1 + enc.len() / 256;
+            for cut in (0..enc.len()).step_by(step) {
+                if wire::decode(&enc[..cut]).is_ok() {
+                    return Err(format!("truncated prefix {cut}/{} decoded", enc.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_fail_reason_roundtrips() {
+    for r in FAIL_REASONS {
+        let f = Frame::ClientResp(ClientResp {
+            op: 1,
+            exec_us: 0,
+            result: OpResult::Failed(r),
+        });
+        assert_eq!(wire::decode(&wire::encode(&f)).unwrap(), f, "{r:?}");
+    }
+}
+
+#[test]
+fn empty_batch_and_empty_payload_roundtrip() {
+    let hb = Frame::Raft {
+        from: 0,
+        msg: Message::AppendEntries {
+            term: 1,
+            leader: 0,
+            prev_index: 5,
+            prev_term: 1,
+            entries: EntryBatch::empty(),
+            leader_commit: 5,
+            seq: 77,
+        },
+    };
+    assert_eq!(wire::decode(&wire::encode(&hb)).unwrap(), hb);
+    let req = Frame::ClientReq(ClientReq { op: 2, key: 0, write_value: None, payload: vec![] });
+    assert_eq!(wire::decode(&wire::encode(&req)).unwrap(), req);
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Reproduce the perf trajectory with one command: runs the microbench
+# suite and writes BENCH_micro.json at the repo root.
+#
+#   scripts/bench.sh                 # cargo bench path (release profile)
+#   scripts/bench.sh --quick         # debug-built CLI path (slower code,
+#                                    # faster build; numbers not comparable)
+#
+# Record before/after numbers in CHANGES.md when a PR touches hot paths.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--quick" ]]; then
+    shift
+    cargo run --bin leaseguard -- bench --json BENCH_micro.json "$@"
+else
+    cargo bench --bench micro -- --json BENCH_micro.json "$@"
+fi
+
+echo "BENCH_micro.json written at $(pwd)/BENCH_micro.json"

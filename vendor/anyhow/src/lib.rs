@@ -1,0 +1,138 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build container has no crates.io access, so this vendored shim
+//! implements exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
+//! [`Context`] extension trait. Errors are flattened to their display
+//! string at conversion time — good enough for a CLI / test harness
+//! that only ever formats them.
+
+use std::fmt;
+
+/// `Result<T>` defaulting the error type to [`Error`] (the same alias
+/// trick the real crate uses, so `Result<T, E>` still works).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed dynamic error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands
+    /// to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` (the real crate's chain format) both print
+        // the flattened message here.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`,
+// which is what makes this blanket conversion coherent (mirroring the
+// real crate's specialization-free trick).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Context extension for `Result` and `Option` (message-prefixing only).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        let e: Error = io_err().into();
+        assert!(format!("{e}").contains("boom"));
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e:#}"), "x = 7");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(format!("{e:?}"), "plain");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "opening artifacts").unwrap_err();
+        assert!(format!("{e}").starts_with("opening artifacts: "));
+        let n: Option<u32> = None;
+        assert!(n.context("missing").is_err());
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope {}", 1);
+            }
+            Ok(3)
+        }
+        assert_eq!(f(false).unwrap(), 3);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "nope 1");
+    }
+}
