@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! leaseguard sim --param consistency=quorum --param seed=7
+//! leaseguard scenarios --json --param seed=3
 //! leaseguard figure 7 --out results/
 //! leaseguard serve --node 0 --listen 127.0.0.1:7100 --peers 127.0.0.1:7101,127.0.0.1:7102
 //! ```

@@ -63,6 +63,32 @@ impl SimClock {
         }
     }
 
+    /// Nemesis hook: inject a skew spike, shifting the local oscillator
+    /// phase by `offset_us`. The modelled clock-bound daemon *detects*
+    /// the step and widens its reported bound to cover it, so
+    /// correct-mode intervals still contain true time (the paper's
+    /// guarantee holds; the cost is availability — wider bounds age
+    /// leases faster). Pair with `broken = true` to model an undetected
+    /// spike instead.
+    pub fn inject_skew(&mut self, offset_us: Micros) {
+        self.offset_us += offset_us as f64;
+        self.cfg.max_error_us += offset_us.abs();
+    }
+
+    /// Nemesis hook: change this node's oscillator drift rate mid-run
+    /// (per-node drift divergence; the config value seeds all nodes
+    /// identically). The local reading is continuous at the switch: the
+    /// phase accumulated under the old rate is folded into the offset,
+    /// so only *future* time drifts at the new rate — without this, a
+    /// rate change would be an instantaneous phase step that the
+    /// reported error bound does not cover. Ongoing accumulation under
+    /// the new rate is covered by `raw_at`, whose reported half-width
+    /// always spans the true error even past the nominal `max_error`.
+    pub fn set_drift(&mut self, true_now: Micros, drift: f64) {
+        self.offset_us += true_now as f64 * (self.cfg.drift - drift);
+        self.cfg.drift = drift;
+    }
+
     /// Read the clock at true (virtual) time `true_now`.
     pub fn at(&mut self, true_now: Micros) -> TimeInterval {
         let iv = self.raw_at(true_now);
@@ -84,8 +110,12 @@ impl SimClock {
         let local = true_now as f64 * (1.0 + self.cfg.drift) + self.offset_us;
         // The daemon's reported error always covers |local - true| in
         // correct mode; we sample the reported half-width in
-        // [|local-true|, max_error].
-        let skew = (local - true_now as f64).abs().min(e as f64);
+        // [|local-true|, max_error]. No clamp to max_error: when
+        // accumulated drift (or an injected rate change) pushes the
+        // true error past the nominal bound, a correct daemon widens
+        // its report rather than lie — otherwise long runs would
+        // silently violate the containment guarantee §4.3 is about.
+        let skew = (local - true_now as f64).abs();
         if self.cfg.broken {
             // Report an interval that confidently excludes the true
             // time, wrong by 2-4x max_error. The direction is a stable
@@ -153,6 +183,61 @@ mod tests {
             assert!(iv.earliest >= prev.earliest && iv.latest >= prev.latest);
             prev = iv;
         }
+    }
+
+    #[test]
+    fn skew_spike_widens_bounds_but_stays_correct() {
+        let mut c = SimClock::new(
+            SimClockConfig { max_error_us: 50, drift: 0.0, broken: false },
+            &mut Rng::new(7),
+        );
+        let _ = c.at(100_000);
+        c.inject_skew(300_000); // 300ms forward spike, detected
+        for t in (200_000..2_000_000).step_by(97_003) {
+            let iv = c.at(t);
+            assert!(
+                iv.earliest <= t && t <= iv.latest,
+                "detected spike must keep bounds correct: t {t} outside {iv:?}"
+            );
+        }
+        // The reported uncertainty grew to cover the spike.
+        let iv = c.at(2_100_000);
+        assert!(iv.uncertainty() > 250_000, "bounds should widen: {iv:?}");
+    }
+
+    #[test]
+    fn drift_change_applies_midrun_without_phase_step() {
+        let mut c = SimClock::new(
+            SimClockConfig { max_error_us: 5_000, drift: 1e-5, broken: false },
+            &mut Rng::new(8),
+        );
+        // Accumulate phase under the old rate first: a naive rate swap
+        // here would step the local reading by t*(new-old) ≈ 2ms and
+        // push the "correct" interval off true time.
+        let _ = c.at(2_000_000);
+        c.set_drift(2_000_000, 1e-3); // 1000 ppm from here on
+        for t in (2_000_000..4_000_000).step_by(211_001) {
+            let iv = c.at(t);
+            assert!(iv.earliest <= t && t <= iv.latest, "t {t} outside {iv:?}");
+        }
+    }
+
+    #[test]
+    fn drift_past_nominal_bound_still_contained() {
+        // Accumulated drift beyond the nominal max_error must widen the
+        // reported bound, not silently exclude true time.
+        let mut c = SimClock::new(
+            SimClockConfig { max_error_us: 50, drift: 0.0, broken: false },
+            &mut Rng::new(9),
+        );
+        let _ = c.at(0);
+        c.set_drift(0, 1e-3); // accumulates ~2ms over the run, >> 50µs
+        for t in (0..2_000_000).step_by(133_001) {
+            let iv = c.at(t);
+            assert!(iv.earliest <= t && t <= iv.latest, "t {t} outside {iv:?}");
+        }
+        let iv = c.at(2_100_000);
+        assert!(iv.uncertainty() > 2_000, "bound must widen with drift: {iv:?}");
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //!
 //! Experiment shape (matching §6.5): bootstrap until a first leader has
 //! committed its term-start no-op (that instant is the experiment's
-//! *origin* `t0`), then run the workload; optionally crash the leader at
-//! `t0 + crash_leader_at_us` (and restart it later); finally drain, fail
-//! leftover operations as timeouts, and return a [`RunReport`].
+//! *origin* `t0`), then run the workload under the installed
+//! [`NemesisSchedule`] (the legacy single-fault `Params` knobs compile
+//! onto the same rails); finally drain, fail leftover operations as
+//! timeouts, and return a [`RunReport`].
 
 use std::collections::HashMap;
 
@@ -19,7 +20,7 @@ use crate::metrics::{Histogram, TimeSeries};
 use crate::prob::Rng;
 use crate::raft::{FailReason, Message, Node, NodeConfig, OpId, OpResult, Output, Role, TimerKind};
 use crate::sim::network::{Delivery, NetConfig};
-use crate::sim::{EventQueue, SimNetwork};
+use crate::sim::{EventQueue, Fault, NemesisSchedule, SimNetwork, TimedFault};
 use crate::workload::{OpSpec, Workload};
 use crate::{Micros, NodeId};
 
@@ -31,16 +32,26 @@ use crate::{Micros, NodeId};
 /// one entry allocation — the simulator pays no per-delivery deep copy.
 #[derive(Debug)]
 enum Event {
-    Deliver { to: NodeId, msg: Message },
-    Timer { node: NodeId, kind: TimerKind },
+    /// `epoch` is the destination's crash epoch at send time; a delivery
+    /// queued before the destination's crash is dropped at delivery time
+    /// (a rebooted process never receives its predecessor's packets).
+    Deliver { to: NodeId, msg: Message, epoch: u64 },
+    /// Timers carry the same crash-epoch stamp: a timer armed by the
+    /// pre-crash incarnation must not fire on the restarted one (each
+    /// leaked election-timer chain re-arms itself forever).
+    Timer { node: NodeId, kind: TimerKind, epoch: u64 },
     ClientOp(OpSpec),
     OpTimeout(OpId),
-    CrashLeader,
-    PartitionLeader,
-    Heal,
+    /// A Nemesis fault fires (role-relative faults resolve now).
+    Fault(Fault),
     Restart(NodeId),
     End,
 }
+
+/// How long after a node crash its in-flight client ops fail (the
+/// client's broken-connection detection, same scale as the 1ms
+/// connection-refused fast-fail).
+const CRASH_DETECT_US: Micros = 1000;
 
 /// An operation in flight from the client's perspective.
 #[derive(Debug)]
@@ -66,6 +77,9 @@ pub struct RunReport {
     /// Limbo-region length observed on the post-crash leader (paper
     /// Fig 9 reports 37).
     pub limbo_len: u64,
+    /// Nemesis faults that actually fired (role-relative faults that
+    /// found no live target still count as fired).
+    pub faults_injected: u64,
 }
 
 pub struct Cluster {
@@ -96,7 +110,9 @@ pub struct Cluster {
     history: History,
     elections: u64,
     limbo_len: u64,
-    crashed: Option<NodeId>,
+    faults_injected: u64,
+    /// Fault schedule (relative to t0), installed via [`Self::with_nemesis`].
+    nemesis: NemesisSchedule,
 }
 
 impl Cluster {
@@ -128,7 +144,8 @@ impl Cluster {
             clocks.push(clock);
             for o in outs {
                 if let Output::SetTimer { kind, after } = o {
-                    queue.schedule_in(after, Event::Timer { node: id, kind });
+                    let epoch = net.epoch(id);
+                    queue.schedule_in(after, Event::Timer { node: id, kind, epoch });
                 }
             }
         }
@@ -153,8 +170,17 @@ impl Cluster {
             history: History::new(),
             elections: 0,
             limbo_len: 0,
-            crashed: None,
+            faults_injected: 0,
+            nemesis: NemesisSchedule::new(),
         }
+    }
+
+    /// Install a Nemesis fault schedule (times relative to t0). Runs on
+    /// top of — and after, at equal instants — whatever the legacy
+    /// single-fault `Params` knobs schedule.
+    pub fn with_nemesis(mut self, schedule: NemesisSchedule) -> Self {
+        self.nemesis = schedule;
+        self
     }
 
     /// Run the full experiment and return the report.
@@ -174,19 +200,27 @@ impl Cluster {
         for op in ops {
             self.queue.schedule(self.t0 + op.at, Event::ClientOp(op));
         }
+        // Fault schedule: the legacy single-fault knobs compile onto the
+        // same Nemesis rails as installed schedules.
+        let mut schedule = NemesisSchedule::new();
         if self.params.crash_leader_at_us > 0 {
-            self.queue
-                .schedule(self.t0 + self.params.crash_leader_at_us, Event::CrashLeader);
+            let restart_after_us =
+                (self.params.restart_after_us > 0).then_some(self.params.restart_after_us);
+            schedule = schedule
+                .at(self.params.crash_leader_at_us, Fault::CrashLeader { restart_after_us });
         }
         if self.params.partition_leader_at_us > 0 {
-            self.queue
-                .schedule(self.t0 + self.params.partition_leader_at_us, Event::PartitionLeader);
+            schedule = schedule.at(self.params.partition_leader_at_us, Fault::PartitionLeader);
             if self.params.heal_after_us > 0 {
-                self.queue.schedule(
-                    self.t0 + self.params.partition_leader_at_us + self.params.heal_after_us,
-                    Event::Heal,
+                schedule = schedule.at(
+                    self.params.partition_leader_at_us + self.params.heal_after_us,
+                    Fault::Heal,
                 );
             }
+        }
+        schedule.events.extend(std::mem::take(&mut self.nemesis).events);
+        for TimedFault { at, fault } in schedule.events {
+            self.queue.schedule(self.t0 + at, Event::Fault(fault));
         }
         self.queue.schedule(self.t0 + self.params.duration_us, Event::End);
 
@@ -199,9 +233,11 @@ impl Cluster {
             self.handle(ev);
         }
 
-        // Drain: remaining in-flight ops are client timeouts.
+        // Drain: remaining in-flight ops are client timeouts. Sorted so
+        // the history tail is independent of HashMap iteration order.
         let now = self.queue.now();
-        let pending: Vec<OpId> = self.pending.keys().copied().collect();
+        let mut pending: Vec<OpId> = self.pending.keys().copied().collect();
+        pending.sort_unstable();
         for op in pending {
             self.finish_op(op, OpResult::Failed(FailReason::Timeout), now);
         }
@@ -216,6 +252,7 @@ impl Cluster {
             events_processed: self.queue.processed(),
             node_stats: self.nodes.iter().map(|n| n.stats).collect(),
             limbo_len: self.limbo_len,
+            faults_injected: self.faults_injected,
         }
     }
 
@@ -232,16 +269,18 @@ impl Cluster {
 
     fn handle(&mut self, ev: Event) {
         match ev {
-            Event::Deliver { to, msg } => {
-                if !self.net.is_up(to) {
+            Event::Deliver { to, msg, epoch } => {
+                // Crash-epoch check: `is_up` alone would happily deliver
+                // a pre-crash message to the restarted incarnation.
+                if !self.net.is_up(to) || self.net.epoch(to) != epoch {
                     return;
                 }
                 let now = self.now_interval(to);
                 let outs = self.nodes[to].on_message(now, msg);
                 self.process_outputs(to, outs);
             }
-            Event::Timer { node, kind } => {
-                if !self.net.is_up(node) {
+            Event::Timer { node, kind, epoch } => {
+                if !self.net.is_up(node) || self.net.epoch(node) != epoch {
                     return;
                 }
                 let now = self.now_interval(node);
@@ -255,22 +294,7 @@ impl Cluster {
                     self.finish_op(op, OpResult::Failed(FailReason::Timeout), now);
                 }
             }
-            Event::CrashLeader => self.crash_leader(),
-            Event::PartitionLeader => {
-                // Isolate the active leader from its peers; clients can
-                // still reach it (the §1 deposed-leader scenario).
-                let victim = self
-                    .nodes
-                    .iter()
-                    .enumerate()
-                    .filter(|(i, n)| n.role() == Role::Leader && self.net.is_up(*i))
-                    .max_by_key(|(_, n)| n.term())
-                    .map(|(i, _)| i);
-                if let Some(v) = victim {
-                    self.net.partition(&[v]);
-                }
-            }
-            Event::Heal => self.net.heal(),
+            Event::Fault(f) => self.apply_fault(f),
             Event::Restart(node) => {
                 self.net.restart(node);
                 let now = self.now_interval(node);
@@ -285,12 +309,25 @@ impl Cluster {
         let now = self.queue.now();
         for o in outs {
             match o {
-                Output::Send { to, msg } => match self.net.send(from, to) {
-                    Delivery::After(d) => self.queue.schedule(now + d, Event::Deliver { to, msg }),
-                    Delivery::Dropped => {}
-                },
+                Output::Send { to, msg } => {
+                    let epoch = self.net.epoch(to);
+                    match self.net.send(from, to) {
+                        Delivery::After(d) => {
+                            self.queue.schedule(now + d, Event::Deliver { to, msg, epoch });
+                        }
+                        Delivery::Twice(d1, d2) => {
+                            // Duplication window: two copies, O(1) clone
+                            // (entry batches are Arc-backed views).
+                            self.queue
+                                .schedule(now + d1, Event::Deliver { to, msg: msg.clone(), epoch });
+                            self.queue.schedule(now + d2, Event::Deliver { to, msg, epoch });
+                        }
+                        Delivery::Dropped => {}
+                    }
+                }
                 Output::SetTimer { kind, after } => {
-                    self.queue.schedule(now + after, Event::Timer { node: from, kind });
+                    let epoch = self.net.epoch(from);
+                    self.queue.schedule(now + after, Event::Timer { node: from, kind, epoch });
                 }
                 Output::Reply { op, result } => self.finish_op(op, result, now),
                 Output::Applied { key, value } => self.history.applies.record(key, value, now),
@@ -432,21 +469,124 @@ impl Cluster {
 
     // ------------------------------------------------------------ faults
 
-    fn crash_leader(&mut self) {
-        // Crash the highest-term live leader (the active one).
-        let victim = self
-            .nodes
+    /// The highest-term live leader (the active one), if any.
+    fn live_leader(&self) -> Option<NodeId> {
+        self.nodes
             .iter()
             .enumerate()
             .filter(|(i, n)| n.role() == Role::Leader && self.net.is_up(*i))
             .max_by_key(|(_, n)| n.term())
-            .map(|(i, _)| i);
-        let Some(v) = victim else { return };
+            .map(|(i, _)| i)
+    }
+
+    /// Schedule-author guard: a node-addressed fault naming a node this
+    /// cluster doesn't have is a scenario bug — flag it loudly in debug
+    /// builds, skip it (rather than panic mid-matrix) in release.
+    fn valid_node(&self, node: NodeId) -> bool {
+        debug_assert!(
+            node < self.params.nodes,
+            "fault addresses node {node}, cluster has {}",
+            self.params.nodes
+        );
+        node < self.params.nodes
+    }
+
+    /// The lowest-id live non-leader, if any.
+    fn live_follower(&self) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .find(|(i, n)| n.role() != Role::Leader && self.net.is_up(*i))
+            .map(|(i, _)| i)
+    }
+
+    fn apply_fault(&mut self, fault: Fault) {
+        self.faults_injected += 1;
+        match fault {
+            Fault::CrashLeader { restart_after_us } => {
+                if let Some(v) = self.live_leader() {
+                    self.crash_node(v, restart_after_us);
+                }
+            }
+            Fault::CrashFollower { restart_after_us } => {
+                if let Some(v) = self.live_follower() {
+                    self.crash_node(v, restart_after_us);
+                }
+            }
+            Fault::CrashNode { node, restart_after_us } => {
+                if self.valid_node(node) && self.net.is_up(node) {
+                    self.crash_node(node, restart_after_us);
+                }
+            }
+            Fault::PartitionLeader => {
+                // Isolate the active leader from its peers; clients can
+                // still reach it (the §1 deposed-leader scenario).
+                if let Some(v) = self.live_leader() {
+                    self.net.partition(&[v]);
+                }
+            }
+            Fault::PartitionNodes(nodes) => self.net.partition(&nodes),
+            Fault::CutLeaderInbound => {
+                if let Some(v) = self.live_leader() {
+                    for p in 0..self.params.nodes {
+                        if p != v {
+                            self.net.cut_link(p, v);
+                        }
+                    }
+                }
+            }
+            Fault::Heal => self.net.heal(),
+            Fault::SetDuplicate(p) => self.net.set_duplicate(p),
+            Fault::SetLoss(p) => self.net.set_loss(p),
+            Fault::SetReorder(us) => self.net.set_reorder(us),
+            Fault::ClearChaos => self.net.clear_chaos(),
+            Fault::LeaderClockSkew(offset_us) => {
+                if let Some(v) = self.live_leader() {
+                    self.clocks[v].inject_skew(offset_us);
+                }
+            }
+            Fault::NodeClockSkew { node, offset_us } => {
+                if self.valid_node(node) {
+                    self.clocks[node].inject_skew(offset_us);
+                }
+            }
+            Fault::SetNodeDrift { node, drift } => {
+                if self.valid_node(node) {
+                    let now = self.queue.now();
+                    self.clocks[node].set_drift(now, drift);
+                }
+            }
+            Fault::PlannedHandover => {
+                if let Some(v) = self.live_leader() {
+                    let now = self.now_interval(v);
+                    let outs = self.nodes[v].begin_stepdown(now);
+                    self.process_outputs(v, outs);
+                }
+            }
+        }
+    }
+
+    /// Crash `v`: cut it off (bumping its crash epoch), fail its
+    /// in-flight client ops promptly — a crashed node can never answer,
+    /// and letting them ride the full client timeout skews every
+    /// availability/latency stat — and optionally schedule the reboot.
+    /// Any number of nodes may be down at once: liveness is per-node in
+    /// `SimNetwork` (`up` + crash epochs), with no single-victim state.
+    fn crash_node(&mut self, v: NodeId, restart_after_us: Option<Micros>) {
         self.net.crash(v);
-        self.crashed = Some(v);
-        if self.params.restart_after_us > 0 {
-            self.queue
-                .schedule_in(self.params.restart_after_us, Event::Restart(v));
+        let now = self.queue.now();
+        let mut dead: Vec<OpId> = self
+            .last_target_for
+            .iter()
+            .filter(|&(op, &t)| t == v && self.pending.contains_key(op))
+            .map(|(&op, _)| op)
+            .collect();
+        dead.sort_unstable(); // HashMap order is not deterministic
+        for op in dead {
+            self.queue.schedule(now + CRASH_DETECT_US, Event::OpTimeout(op));
+        }
+        if let Some(after) = restart_after_us {
+            self.queue.schedule_in(after, Event::Restart(v));
         }
     }
 
@@ -506,6 +646,62 @@ mod tests {
         // inherited leases: some reads between election and lease expiry.
         let post = rep.series.window_totals(true, 1_000_000, 1_500_000);
         assert!(post.ok > 0, "inherited lease reads should succeed: {post:?}");
+    }
+
+    #[test]
+    fn stale_precrash_delivery_dropped_after_restart() {
+        // Satellite regression: a message queued for delivery before a
+        // node's crash must not be delivered after it restarts — the
+        // crash-epoch check, not just `is_up`, decides.
+        let mut c = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 42));
+        while !c.stable_leader_exists() {
+            let Some((_, ev)) = c.queue.pop() else { panic!("bootstrap starved") };
+            c.handle(ev);
+        }
+        let victim = 0;
+        let old_epoch = c.net.epoch(victim);
+        let term_before = c.nodes[victim].term();
+        // The poison message was queued before the crash...
+        c.net.crash(victim);
+        c.net.restart(victim);
+        // ...and would arrive after the reboot. `is_up` alone says yes;
+        // the epoch check must say no.
+        let poison = Message::RequestVote {
+            term: 99,
+            candidate: 1,
+            last_log_index: u64::MAX,
+            last_log_term: 99,
+        };
+        c.handle(Event::Deliver { to: victim, msg: poison.clone(), epoch: old_epoch });
+        assert_eq!(
+            c.nodes[victim].term(),
+            term_before,
+            "stale pre-crash delivery reached the restarted node"
+        );
+        // A fresh post-restart send is delivered normally.
+        let epoch = c.net.epoch(victim);
+        c.handle(Event::Deliver { to: victim, msg: poison, epoch });
+        assert_eq!(c.nodes[victim].term(), 99);
+    }
+
+    #[test]
+    fn concurrent_crashes_tracked_independently() {
+        // Satellite regression: two nodes down at once; both restarts
+        // must be honored (the old `crashed: Option<NodeId>` overwrote
+        // the first victim on the second crash).
+        let mut p = base_params(ConsistencyMode::LeaseGuard, 19);
+        p.nodes = 5;
+        p.duration_us = 3_000_000;
+        let sched = NemesisSchedule::new()
+            .at(600_000, Fault::CrashFollower { restart_after_us: Some(500_000) })
+            .at(600_000, Fault::CrashFollower { restart_after_us: Some(500_000) });
+        let rep = Cluster::new(p).with_nemesis(sched).run();
+        assert_eq!(rep.faults_injected, 2);
+        crate::linearizability::assert_linearizable(&rep.history);
+        // Quorum held throughout (leader + 2 live of 5): reads keep
+        // flowing during the double outage.
+        let during = rep.series.window_totals(true, 700_000, 1_000_000);
+        assert!(during.ok > 100, "quorum survived the double crash: {during:?}");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! leaseguard sim      [--param k=v ...]          one simulated run + report
+//! leaseguard scenarios [--json [PATH]]           Nemesis fault matrix × consistency modes
 //! leaseguard figure N [--scale 0.5] [--out DIR]  regenerate paper figure N (5-11)
 //! leaseguard serve    --node I --listen ADDR --peers A,B,C [--param k=v ...]
 //! leaseguard bench-cluster [--param k=v ...]     in-process real cluster + open-loop client
@@ -18,7 +19,8 @@ use leaseguard::cluster::Cluster;
 use leaseguard::config::Params;
 use leaseguard::figures::{run_figure, Scale};
 use leaseguard::linearizability;
-use leaseguard::report::{fmt_us, timeline_chart};
+use leaseguard::report::{fmt_us, timeline_chart, write_scenarios_json, Table};
+use leaseguard::sim::scenario;
 use leaseguard::runtime::{hash_key, scalar_admission, AdmissionEngine, AdmissionInputs, EngineHandle};
 use leaseguard::server::server::{Server, ServerConfig};
 
@@ -41,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
     args.apply_params(&mut params).map_err(|e| anyhow!(e))?;
     match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(params),
+        Some("scenarios") => cmd_scenarios(args, params),
         Some("figure") => {
             let n: u32 = args
                 .positionals
@@ -72,8 +75,13 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: leaseguard <sim|figure|serve|bench|bench-cluster|check|params> [--param k=v ...]
+const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|bench|bench-cluster|check|params> [--param k=v ...]
   sim                     one simulated run (availability timeline + latency + linearizability)
+  scenarios               Nemesis fault matrix: every scenario x {leaseguard,quorum,inconsistent},
+                          linearizability-checked (--json [PATH] writes SCENARIOS.json).
+                          --param overrides apply to every run; a knob left at (or explicitly
+                          set to) its global default gets the matrix's workload shape instead,
+                          and per-scenario tunes always win
   figure <5..11>          regenerate a paper figure (--scale F, --out DIR)
   serve                   one real server (--node I --listen ADDR --peers A,B,C)
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
@@ -115,6 +123,68 @@ fn cmd_sim(params: Params) -> Result<()> {
         }
         bail!("history not linearizable");
     }
+    Ok(())
+}
+
+fn cmd_scenarios(args: &Args, params: Params) -> Result<()> {
+    let seed = params.seed;
+    println!("# Nemesis scenario matrix (seed {seed})");
+    // `--param` overrides flow into every run (scenario tunes win).
+    let rows = scenario::run_matrix_from(&params);
+    let mut t = Table::new([
+        "scenario",
+        "mode",
+        "linearizable",
+        "reads ok/fail",
+        "writes ok/fail",
+        "read p99",
+        "write p99",
+        "elections",
+        "faults",
+    ]);
+    for r in &rows {
+        let verdict = if r.violations == 0 {
+            "OK".to_string()
+        } else if r.expect_linearizable {
+            format!("{} VIOLATIONS", r.violations)
+        } else {
+            format!("{} (allowed)", r.violations)
+        };
+        t.row([
+            r.scenario.clone(),
+            r.mode.to_string(),
+            verdict,
+            format!("{}/{}", r.reads_ok, r.reads_failed),
+            format!("{}/{}", r.writes_ok, r.writes_failed),
+            fmt_us(r.read_p99_us),
+            fmt_us(r.write_p99_us),
+            r.elections.to_string(),
+            r.faults_injected.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if let Some(v) = args.get("json") {
+        // `--json` alone parses as the boolean "true" → default path.
+        let path = if v == "true" { "SCENARIOS.json" } else { v };
+        write_scenarios_json(std::path::Path::new(path), seed, &rows)?;
+        println!("wrote {path}");
+    }
+    let broken: Vec<&scenario::ScenarioOutcome> = rows.iter().filter(|r| !r.ok()).collect();
+    if !broken.is_empty() {
+        for r in &broken {
+            eprintln!(
+                "FAIL {} / {}: {} violations where the mode promises linearizability",
+                r.scenario, r.mode, r.violations
+            );
+        }
+        bail!("{} scenario run(s) violated a promised guarantee", broken.len());
+    }
+    println!(
+        "all {} runs honor their mode's guarantee ({} scenarios x {} modes)",
+        rows.len(),
+        scenario::catalog().len(),
+        scenario::MATRIX_MODES.len()
+    );
     Ok(())
 }
 

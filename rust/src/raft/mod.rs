@@ -25,5 +25,5 @@ pub mod types;
 pub use batch::EntryBatch;
 pub use log::{Entry, Log};
 pub use message::Message;
-pub use node::{Node, NodeConfig, Output};
+pub use node::{DurableState, Node, NodeConfig, Output};
 pub use types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind};

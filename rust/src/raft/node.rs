@@ -120,12 +120,36 @@ pub struct NodeStats {
     pub append_entries_sent: u64,
 }
 
+/// Raft's durable state — what a node persists and recovers after a
+/// crash (Raft §5: `currentTerm`, `votedFor`, `log[]`). Everything else
+/// in [`Node`] is volatile by construction: both cold boot and crash
+/// recovery funnel through [`Node::boot`], which takes exactly this
+/// struct, so a field can only survive a restart by being carried here.
+///
+/// The split encodes two safety obligations at the type level:
+///
+/// * `voted_for` **must** survive — forgetting it lets a restarted node
+///   grant a second vote in the same term (double vote ⇒ two leaders in
+///   one term ⇒ Election Safety violated).
+/// * lease state (`lease`, `ongaro`, `heard_leader_at`) **must not**
+///   survive — a rebooted node cannot trust pre-crash wall-clock
+///   promises; in LeaseGuard the timestamped log *is* the lease, so
+///   recovering the log is what re-derives lease state on the next
+///   election (§3).
+#[derive(Debug, Default)]
+pub struct DurableState {
+    pub current_term: Term,
+    pub voted_for: Option<NodeId>,
+    pub log: Log,
+}
+
 #[derive(Debug)]
 pub struct Node {
     pub cfg: NodeConfig,
     rng: Rng,
 
-    // ---- persistent state (survives crash/restart) ----
+    // ---- persistent state (mirrors [`DurableState`]; survives
+    // crash/restart via [`Node::restart`]) ----
     current_term: Term,
     voted_for: Option<NodeId>,
     log: Log,
@@ -162,13 +186,28 @@ pub struct Node {
 impl Node {
     /// Create a fresh node. Returns the initial timer requests.
     pub fn new(cfg: NodeConfig, seed: u64, now: TimeInterval) -> (Self, Vec<Output>) {
+        let rng = Rng::new(seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        Self::boot(cfg, rng, DurableState::default(), now)
+    }
+
+    /// Construct a node from its durable state, with every volatile
+    /// field at its zero value. Cold boot ([`Self::new`]) and crash
+    /// recovery ([`Self::restart`]) both funnel through here — the
+    /// durable/volatile split is enforced by this signature, not by a
+    /// field-by-field reset that can silently miss one.
+    fn boot(
+        cfg: NodeConfig,
+        rng: Rng,
+        durable: DurableState,
+        now: TimeInterval,
+    ) -> (Self, Vec<Output>) {
         let n = cfg.n;
         let mut node = Node {
-            rng: Rng::new(seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            rng,
             cfg,
-            current_term: 0,
-            voted_for: None,
-            log: Log::new(),
+            current_term: durable.current_term,
+            voted_for: durable.voted_for,
+            log: durable.log,
             role: Role::Follower,
             commit_index: 0,
             leader_hint: None,
@@ -1039,29 +1078,26 @@ impl Node {
 
     // -------------------------------------------------- crash / restart
 
-    /// Crash recovery: volatile state is lost; persistent (term, vote,
-    /// log) survives. The driver isolates a crashed node via the
-    /// network; this models the reboot.
+    /// Crash recovery: rebuild the node from its [`DurableState`] alone
+    /// (term, vote, log survive the reboot; everything volatile —
+    /// commit index, applied store, lease/Ongaro state, replication
+    /// windows, pending client ops — is reconstructed from zero by
+    /// [`Self::boot`]). The driver isolates a crashed node via the
+    /// network; this models the reboot itself.
     pub fn restart(&mut self, now: TimeInterval) -> Vec<Output> {
-        let mut out = Vec::new();
-        self.role = Role::Follower;
-        self.commit_index = 0;
-        self.leader_hint = None;
-        self.store.reset();
-        self.votes.clear();
-        self.pending_writes.clear();
-        self.pending_reads.clear();
-        self.lease = None;
-        self.ongaro = None;
-        self.batch_cache = None;
-        self.heard_leader_at = Micros::MIN;
-        for p in 0..self.cfg.n {
-            self.next_index[p] = 1;
-            self.match_index[p] = 0;
-            self.inflight[p] = false;
-            self.last_ack_seq[p] = 0;
-        }
-        self.reset_election_deadline(now, &mut out);
+        let durable = DurableState {
+            current_term: self.current_term,
+            voted_for: self.voted_for,
+            log: std::mem::take(&mut self.log),
+        };
+        // The RNG stream continues across the reboot (a fresh seed would
+        // replay the pre-crash jitter sequence); stats are per-run
+        // observability, not node state, and keep accumulating.
+        let rng = self.rng.clone();
+        let stats = self.stats;
+        let (node, out) = Self::boot(self.cfg.clone(), rng, durable, now);
+        *self = node;
+        self.stats = stats;
         out
     }
 
@@ -1563,6 +1599,82 @@ mod tests {
         assert_eq!(n.log().last_index(), log_len);
         assert_eq!(n.term(), 1);
         assert_eq!(n.store().applied(), 0);
+    }
+
+    #[test]
+    fn restart_cannot_double_vote_in_same_term() {
+        // Election Safety regression: votedFor is durable. A node that
+        // granted its term-3 vote, crashed, and restarted must refuse a
+        // rival candidate in the same term.
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 2, t(0));
+        let out = f.on_message(
+            t(10),
+            Message::RequestVote { term: 3, candidate: 0, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+        ));
+        f.restart(t(20));
+        assert_eq!(f.term(), 3, "currentTerm is durable");
+        let out = f.on_message(
+            t(30),
+            Message::RequestVote { term: 3, candidate: 2, last_log_index: 9, last_log_term: 3 },
+        );
+        assert!(
+            matches!(
+                out.last(),
+                Some(Output::Send { msg: Message::VoteReply { granted: false, .. }, .. })
+            ),
+            "restarted node granted a second vote in term 3: {out:?}"
+        );
+        // Re-granting the original candidate stays legal (idempotent).
+        let out = f.on_message(
+            t(40),
+            Message::RequestVote { term: 3, candidate: 0, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(matches!(
+            out.last(),
+            Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+        ));
+    }
+
+    #[test]
+    fn restart_never_preserves_lease_or_ongaro_state() {
+        // A rebooted node cannot trust pre-crash wall-clock promises:
+        // lease state must be re-derived from the (durable) log at the
+        // next election, never carried across the crash.
+        let mut n = failover_leader(ConsistencyMode::LeaseGuard);
+        assert!(n.lease_state().is_some());
+        n.restart(t(1_200_000));
+        assert!(n.lease_state().is_none(), "lease survived a reboot");
+        assert_eq!(n.role(), Role::Follower);
+        assert_eq!(n.commit_index(), 0, "commitIndex is volatile");
+        assert_eq!(n.store().applied(), 0, "state machine is volatile");
+
+        // Ongaro mode: vote-withholding memory (heard_leader_at) must
+        // also die with the process — a restarted follower may vote
+        // immediately, exactly as a freshly booted one.
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::OngaroLease), 5, t(0));
+        f.on_message(
+            t(100_000),
+            Message::AppendEntries {
+                term: 1, leader: 0, prev_index: 0, prev_term: 0,
+                entries: EntryBatch::empty(), leader_commit: 0, seq: 1,
+            },
+        );
+        f.restart(t(150_000));
+        let out = f.on_message(
+            t(200_000),
+            Message::RequestVote { term: 2, candidate: 2, last_log_index: 0, last_log_term: 0 },
+        );
+        assert!(
+            matches!(
+                out.last(),
+                Some(Output::Send { msg: Message::VoteReply { granted: true, .. }, .. })
+            ),
+            "withholding state must not survive restart: {out:?}"
+        );
     }
 
     #[test]

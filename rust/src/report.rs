@@ -95,23 +95,24 @@ pub fn timeline_chart(labels: &[&str], series: &[Vec<f64>], bucket_ms: f64) -> S
     out
 }
 
-/// Write a machine-readable microbench trajectory (`BENCH_micro.json`):
-/// one `(name, ops_per_sec, ops_per_rep)` row per bench. Hand-rolled
-/// JSON (no serde offline); names are escaped minimally.
-pub fn write_bench_json(path: &Path, rows: &[(String, f64, u64)]) -> std::io::Result<()> {
-    fn esc(s: &str) -> String {
-        let mut out = String::with_capacity(s.len());
-        for c in s.chars() {
-            match c {
-                '"' => out.push_str("\\\""),
-                '\\' => out.push_str("\\\\"),
-                '\n' => out.push_str("\\n"),
-                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-                c => out.push(c),
-            }
+/// Minimal JSON string escaping (hand-rolled JSON; no serde offline).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
         }
-        out
     }
+    out
+}
+
+/// Write a machine-readable microbench trajectory (`BENCH_micro.json`):
+/// one `(name, ops_per_sec, ops_per_rep)` row per bench.
+pub fn write_bench_json(path: &Path, rows: &[(String, f64, u64)]) -> std::io::Result<()> {
     let mut body = String::from("{\n  \"suite\": \"micro\",\n  \"results\": [\n");
     for (i, (name, ops_per_sec, ops_per_rep)) in rows.iter().enumerate() {
         let _ = write!(
@@ -120,6 +121,54 @@ pub fn write_bench_json(path: &Path, rows: &[(String, f64, u64)]) -> std::io::Re
             esc(name),
             ops_per_sec,
             ops_per_rep
+        );
+        body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ]\n}\n");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, body)
+}
+
+/// Write the Nemesis scenario matrix (`SCENARIOS.json`): one row per
+/// (scenario, consistency mode) with the linearizability verdict and
+/// availability/latency stats. Deterministic per seed — commit the file
+/// to track the matrix across PRs (like `BENCH_micro.json`).
+pub fn write_scenarios_json(
+    path: &Path,
+    seed: u64,
+    rows: &[crate::sim::scenario::ScenarioOutcome],
+) -> std::io::Result<()> {
+    let mut body = String::new();
+    let _ = write!(body, "{{\n  \"suite\": \"scenarios\",\n  \"seed\": {seed},\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"scenario\": \"{}\", \"mode\": \"{}\", \
+             \"expect_linearizable\": {}, \"violations\": {}, \
+             \"reads_ok\": {}, \"reads_failed\": {}, \
+             \"writes_ok\": {}, \"writes_failed\": {}, \
+             \"read_p50_us\": {}, \"read_p99_us\": {}, \
+             \"write_p50_us\": {}, \"write_p99_us\": {}, \
+             \"elections\": {}, \"faults_injected\": {}, \"events\": {}}}",
+            esc(&r.scenario),
+            r.mode,
+            r.expect_linearizable,
+            r.violations,
+            r.reads_ok,
+            r.reads_failed,
+            r.writes_ok,
+            r.writes_failed,
+            r.read_p50_us,
+            r.read_p99_us,
+            r.write_p50_us,
+            r.write_p99_us,
+            r.elections,
+            r.faults_injected,
+            r.events_processed,
         );
         body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
@@ -199,6 +248,39 @@ mod tests {
         assert!(body.contains("\\\"quoted\\\""));
         assert!(body.contains("\"ops_per_sec\": 1234.6"));
         assert!(body.contains("\"ops_per_rep\": 99"));
+        assert!(body.trim_end().ends_with('}'));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn scenarios_json_shape() {
+        use crate::config::ConsistencyMode;
+        use crate::sim::scenario::ScenarioOutcome;
+        let row = ScenarioOutcome {
+            scenario: "leader-crash-restart".to_string(),
+            mode: ConsistencyMode::LeaseGuard,
+            expect_linearizable: true,
+            violations: 0,
+            reads_ok: 100,
+            reads_failed: 5,
+            writes_ok: 50,
+            writes_failed: 2,
+            read_p50_us: 120,
+            read_p99_us: 900,
+            write_p50_us: 500,
+            write_p99_us: 1500,
+            elections: 2,
+            faults_injected: 1,
+            events_processed: 12345,
+        };
+        let p = std::env::temp_dir().join("leaseguard_test_scenarios.json");
+        write_scenarios_json(&p, 7, &[row]).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("\"suite\": \"scenarios\""));
+        assert!(body.contains("\"seed\": 7"));
+        assert!(body.contains("\"scenario\": \"leader-crash-restart\""));
+        assert!(body.contains("\"mode\": \"leaseguard\""));
+        assert!(body.contains("\"violations\": 0"));
         assert!(body.trim_end().ends_with('}'));
         let _ = std::fs::remove_file(&p);
     }

@@ -245,6 +245,25 @@ impl<'a> Dec<'a> {
         self.pos += n;
         Ok(s)
     }
+    /// Bytes left in the frame body.
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+    /// Read an untrusted element count and validate it against the
+    /// bytes actually left in the frame (each element occupies at
+    /// least `min_bytes` on the wire), so a tiny corrupt frame cannot
+    /// force a multi-GB `Vec::with_capacity` before per-element
+    /// decoding hits Eof.
+    fn count(&mut self, min_bytes: usize) -> R<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_bytes) > self.remaining() {
+            return Err(DecodeError(format!(
+                "count {n} x >={min_bytes}B exceeds remaining {} bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
     fn u8(&mut self) -> R<u8> {
         Ok(self.take(1)?[0])
     }
@@ -285,7 +304,7 @@ impl<'a> Dec<'a> {
         Ok(match self.u8()? {
             0 => OpResult::WriteOk,
             1 => {
-                let n = self.u32()? as usize;
+                let n = self.count(8)?; // 8 bytes per u64 value
                 let mut v = Vec::with_capacity(n);
                 for _ in 0..n {
                     v.push(self.u64()?);
@@ -328,7 +347,9 @@ pub fn decode(b: &[u8]) -> R<Frame> {
                     let prev_term = d.u64()?;
                     let leader_commit = d.u64()?;
                     let seq = d.u64()?;
-                    let n = d.u32()? as usize;
+                    // 25 = u64 term + 1-byte command tag + two i64 interval
+                    // bounds: the smallest wire entry (a Noop).
+                    let n = d.count(25)?;
                     let mut entries = Vec::with_capacity(n);
                     for _ in 0..n {
                         entries.push(d.entry()?);
@@ -466,6 +487,35 @@ mod tests {
             encode_into(f, &mut e);
             assert_eq!(e.buf, encode(f), "reused-buffer encoding must be byte-identical");
         }
+    }
+
+    #[test]
+    fn corrupt_entry_count_rejected_without_allocating() {
+        // A tiny frame claiming u32::MAX AppendEntries entries must be
+        // rejected by the count-vs-remaining-bytes check, not attempt a
+        // ~200 GB Vec::with_capacity.
+        let mut b = Vec::new();
+        b.push(FRAME_RAFT);
+        b.extend_from_slice(&0u32.to_le_bytes()); // from
+        b.push(2); // AppendEntries tag
+        b.extend_from_slice(&1u64.to_le_bytes()); // term
+        b.extend_from_slice(&0u32.to_le_bytes()); // leader
+        b.extend_from_slice(&0u64.to_le_bytes()); // prev_index
+        b.extend_from_slice(&0u64.to_le_bytes()); // prev_term
+        b.extend_from_slice(&0u64.to_le_bytes()); // leader_commit
+        b.extend_from_slice(&1u64.to_le_bytes()); // seq
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // poison count
+        let err = decode(&b).unwrap_err();
+        assert!(err.0.contains("exceeds remaining"), "{err:?}");
+        // Same guard on ReadOk value counts.
+        let mut b = Vec::new();
+        b.push(FRAME_CLIENT_RESP);
+        b.extend_from_slice(&7u64.to_le_bytes()); // op
+        b.extend_from_slice(&0i64.to_le_bytes()); // exec_us
+        b.push(1); // ReadOk tag
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // poison count
+        let err = decode(&b).unwrap_err();
+        assert!(err.0.contains("exceeds remaining"), "{err:?}");
     }
 
     #[test]

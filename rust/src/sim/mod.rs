@@ -5,12 +5,19 @@
 //! stable tie-break, so a run is a pure function of (parameters, seed) —
 //! the reproducibility the paper "carefully engineered ... to ease
 //! debugging and analysis". [`network::SimNetwork`] samples per-message
-//! lognormal delays and models partitions, message loss, and node
-//! crashes. The replica-set harness that drives Raft nodes over this
-//! substrate lives in [`crate::cluster`].
+//! lognormal delays and models partitions (symmetric and asymmetric),
+//! message loss/duplication/reordering, and node crashes with restart
+//! epochs. [`nemesis::NemesisSchedule`] composes those faults into
+//! deterministic timed schedules, and [`scenario`] keeps the standing
+//! catalog the `leaseguard scenarios` matrix runs. The replica-set
+//! harness that drives Raft nodes over this substrate lives in
+//! [`crate::cluster`].
 
 pub mod event_loop;
+pub mod nemesis;
 pub mod network;
+pub mod scenario;
 
 pub use event_loop::EventQueue;
+pub use nemesis::{Fault, NemesisSchedule, TimedFault};
 pub use network::SimNetwork;

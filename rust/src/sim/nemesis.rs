@@ -1,0 +1,135 @@
+//! Nemesis: a deterministic, composable fault-injection schedule.
+//!
+//! Named for Jepsen's fault-injecting process of the same role, but
+//! fully deterministic: a [`NemesisSchedule`] is a plain list of
+//! [`TimedFault`]s relative to the experiment origin `t0` (the first
+//! committed no-op). The cluster harness turns each into a timed event
+//! on the same virtual-time [`crate::sim::EventQueue`] that drives the
+//! protocol, so a run with a schedule is still a pure function of
+//! `(params, schedule, seed)` — byte-identical on replay.
+//!
+//! Faults that name a *role* rather than a node id (`CrashLeader`,
+//! `PartitionLeader`, `CutLeaderInbound`, …) resolve against live
+//! cluster state at fire time — the leader at 1.5 s may not be the
+//! leader that existed when the schedule was written, and repeated
+//! leader-targeting faults chase whoever currently leads.
+//!
+//! The taxonomy (see DESIGN.md "Nemesis" for the full table):
+//!
+//! * **process** — crash + optional restart, of the leader or a
+//!   follower; planned §5.1 handover;
+//! * **network** — symmetric partitions, *asymmetric* directed link
+//!   cuts, and chaos windows (duplication, burst loss, reorder jitter)
+//!   applied/cleared as paired events;
+//! * **clock** — per-node skew spikes and drift changes via
+//!   [`crate::clock::sim::SimClock`].
+
+use crate::{Micros, NodeId};
+
+/// One injectable fault. Role-relative variants resolve at fire time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Crash the current (highest-term live) leader; optionally restart
+    /// it after a delay. No-op if no live leader exists at fire time.
+    CrashLeader { restart_after_us: Option<Micros> },
+    /// Crash the lowest-id live non-leader; optional restart. Two such
+    /// faults at the same instant crash two distinct followers.
+    CrashFollower { restart_after_us: Option<Micros> },
+    /// Crash a specific node (no-op if already down); optional restart.
+    CrashNode { node: NodeId, restart_after_us: Option<Micros> },
+    /// Symmetric partition: isolate the current leader from all peers.
+    /// Clients still reach it — the §1 deposed-leader scenario.
+    PartitionLeader,
+    /// Symmetric partition: isolate this node set from the rest.
+    PartitionNodes(Vec<NodeId>),
+    /// Asymmetric partition: cut every peer→leader link, leaving
+    /// leader→peer delivery intact. The leader keeps replicating (so no
+    /// election fires) but can never observe an ack.
+    CutLeaderInbound,
+    /// Heal all partitions and directed link cuts.
+    Heal,
+    /// Begin a message-duplication window (probability per message).
+    SetDuplicate(f64),
+    /// Begin a burst-loss window (extra drop probability per message).
+    SetLoss(f64),
+    /// Begin a reorder window: uniform extra delay in `[0, extra_us]`
+    /// per message, enough to reorder back-to-back sends on a link.
+    SetReorder(Micros),
+    /// End every chaos window (duplication, loss, reorder).
+    ClearChaos,
+    /// Skew-spike the current leader's clock by `offset_us` (detected
+    /// by the clock daemon: bounds widen, stay correct — §4.3's
+    /// *undetected* variant is `Params::clock_broken`).
+    LeaderClockSkew(Micros),
+    /// Skew-spike a specific node's clock.
+    NodeClockSkew { node: NodeId, offset_us: Micros },
+    /// Change a specific node's oscillator drift rate (per-node drift
+    /// divergence).
+    SetNodeDrift { node: NodeId, drift: f64 },
+    /// §5.1 planned handover: the current leader commits an end-lease
+    /// entry and steps down once it commits.
+    PlannedHandover,
+}
+
+/// A fault at an instant relative to the experiment origin `t0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedFault {
+    pub at: Micros,
+    pub fault: Fault,
+}
+
+/// An ordered fault schedule (builder-style construction).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NemesisSchedule {
+    pub events: Vec<TimedFault>,
+}
+
+impl NemesisSchedule {
+    pub fn new() -> Self {
+        NemesisSchedule::default()
+    }
+
+    /// Append `fault` at `at` (µs after t0).
+    pub fn at(mut self, at: Micros, fault: Fault) -> Self {
+        self.events.push(TimedFault { at, fault });
+        self
+    }
+
+    /// Chaos-window helper: apply `fault` at `from`, clear every chaos
+    /// knob at `to`.
+    pub fn window(self, from: Micros, to: Micros, fault: Fault) -> Self {
+        self.at(from, fault).at(to, Fault::ClearChaos)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_orders_and_windows() {
+        let s = NemesisSchedule::new()
+            .at(500_000, Fault::CrashLeader { restart_after_us: Some(400_000) })
+            .window(300_000, 1_800_000, Fault::SetLoss(0.3));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.events[0].at, 500_000);
+        assert_eq!(s.events[1].fault, Fault::SetLoss(0.3));
+        assert_eq!(s.events[2], TimedFault { at: 1_800_000, fault: Fault::ClearChaos });
+    }
+
+    #[test]
+    fn schedules_compare_structurally() {
+        let a = NemesisSchedule::new().at(1, Fault::Heal);
+        let b = NemesisSchedule::new().at(1, Fault::Heal);
+        assert_eq!(a, b);
+        assert!(NemesisSchedule::new().is_empty());
+    }
+}

@@ -9,6 +9,18 @@
 //! payload-agnostic: message bodies (including Arc-backed shared entry
 //! batches) move through the event queue untouched, so delivery cost is
 //! independent of batch size.
+//!
+//! Fault surface (driven by [`crate::sim::nemesis`]):
+//!
+//! * **Directed link cuts** — a per-link `blocked` matrix, so partitions
+//!   can be *asymmetric* (A reaches B while B cannot reach A), the fault
+//!   shape symmetric group-based models can never produce.
+//! * **Chaos windows** — extra burst loss, message duplication, and
+//!   reorder jitter, each toggled independently.
+//! * **Crash epochs** — every crash bumps the node's epoch. The harness
+//!   stamps each queued delivery with the destination's epoch at send
+//!   time and drops stale ones at delivery time, so a message queued
+//!   before a crash can never arrive after the restart.
 
 use crate::prob::{LogNormal, Rng};
 use crate::{Micros, NodeId};
@@ -58,6 +70,8 @@ impl NetConfig {
 pub enum Delivery {
     /// Deliver after this one-way delay (µs).
     After(Micros),
+    /// Duplication window: deliver two copies, one per delay.
+    Twice(Micros, Micros),
     /// Silently dropped (partition, crash, or random loss).
     Dropped,
 }
@@ -67,10 +81,20 @@ pub struct SimNetwork {
     cfg: NetConfig,
     dist: LogNormal,
     rng: Rng,
-    /// Partition group id per node; messages cross groups only if healed.
-    group: Vec<u8>,
+    n: usize,
+    /// Directed link cuts: `blocked[from * n + to]` drops from→to only.
+    blocked: Vec<bool>,
     /// Node liveness — a crashed node neither sends nor receives.
     up: Vec<bool>,
+    /// Crash epoch per node, bumped on every crash. Deliveries queued
+    /// under an older epoch are stale and must be dropped.
+    epoch: Vec<u64>,
+    /// Chaos windows (all zero outside a Nemesis window; when zero the
+    /// RNG draw sequence is identical to the pre-chaos implementation,
+    /// preserving byte-for-byte determinism of existing seeds).
+    dup_prob: f64,
+    extra_loss: f64,
+    reorder_extra_us: Micros,
 }
 
 impl SimNetwork {
@@ -79,7 +103,18 @@ impl SimNetwork {
             cfg.one_way_mean_us.max(1.0),
             cfg.one_way_variance_us2.max(0.0),
         );
-        SimNetwork { cfg, dist, rng: rng.fork(), group: vec![0; n], up: vec![true; n] }
+        SimNetwork {
+            cfg,
+            dist,
+            rng: rng.fork(),
+            n,
+            blocked: vec![false; n * n],
+            up: vec![true; n],
+            epoch: vec![0; n],
+            dup_prob: 0.0,
+            extra_loss: 0.0,
+            reorder_extra_us: 0,
+        }
     }
 
     /// Decide the fate of one message from `from` to `to`.
@@ -87,33 +122,78 @@ impl SimNetwork {
         if !self.up[from] || !self.up[to] {
             return Delivery::Dropped;
         }
-        if self.group[from] != self.group[to] {
+        if self.blocked[from * self.n + to] {
             return Delivery::Dropped;
         }
         if self.cfg.loss > 0.0 && self.rng.chance(self.cfg.loss) {
             return Delivery::Dropped;
         }
-        let d = self.dist.sample(&mut self.rng) as Micros;
-        Delivery::After(d.max(self.cfg.min_delay_us))
+        if self.extra_loss > 0.0 && self.rng.chance(self.extra_loss) {
+            return Delivery::Dropped;
+        }
+        let d = self.sample_delay();
+        if self.dup_prob > 0.0 && self.rng.chance(self.dup_prob) {
+            return Delivery::Twice(d, self.sample_delay());
+        }
+        Delivery::After(d)
+    }
+
+    fn sample_delay(&mut self) -> Micros {
+        let mut d = (self.dist.sample(&mut self.rng) as Micros).max(self.cfg.min_delay_us);
+        if self.reorder_extra_us > 0 {
+            // Uniform extra jitter ≥ the base spread ⇒ frequent pairwise
+            // reordering of back-to-back messages on the same link.
+            d += self.rng.below(self.reorder_extra_us as u64 + 1) as Micros;
+        }
+        d
     }
 
     /// Partition the cluster: nodes in `minority` lose contact with the
-    /// rest (e.g. an old leader on the wrong side of a partition, §1).
+    /// rest, both directions (e.g. an old leader on the wrong side of a
+    /// partition, §1).
     pub fn partition(&mut self, minority: &[NodeId]) {
-        for &n in minority {
-            self.group[n] = 1;
+        for a in 0..self.n {
+            for b in 0..self.n {
+                if minority.contains(&a) != minority.contains(&b) {
+                    self.blocked[a * self.n + b] = true;
+                }
+            }
         }
     }
 
-    /// Heal all partitions.
+    /// Cut one directed link: messages from→to are dropped; to→from is
+    /// untouched (asymmetric/partial partition).
+    pub fn cut_link(&mut self, from: NodeId, to: NodeId) {
+        self.blocked[from * self.n + to] = true;
+    }
+
+    /// Heal all partitions and directed link cuts.
     pub fn heal(&mut self) {
-        for g in self.group.iter_mut() {
-            *g = 0;
+        for b in self.blocked.iter_mut() {
+            *b = false;
         }
+    }
+
+    /// Chaos-window knobs (Nemesis).
+    pub fn set_duplicate(&mut self, prob: f64) {
+        self.dup_prob = prob;
+    }
+    pub fn set_loss(&mut self, prob: f64) {
+        self.extra_loss = prob;
+    }
+    pub fn set_reorder(&mut self, extra_us: Micros) {
+        self.reorder_extra_us = extra_us.max(0);
+    }
+    /// End every chaos window (duplication, burst loss, reordering).
+    pub fn clear_chaos(&mut self) {
+        self.dup_prob = 0.0;
+        self.extra_loss = 0.0;
+        self.reorder_extra_us = 0;
     }
 
     pub fn crash(&mut self, node: NodeId) {
         self.up[node] = false;
+        self.epoch[node] += 1;
     }
 
     pub fn restart(&mut self, node: NodeId) {
@@ -122,6 +202,13 @@ impl SimNetwork {
 
     pub fn is_up(&self, node: NodeId) -> bool {
         self.up[node]
+    }
+
+    /// Current crash epoch of `node` (see module docs). A delivery
+    /// stamped with an older epoch was queued before the node's latest
+    /// crash and must not be delivered.
+    pub fn epoch(&self, node: NodeId) -> u64 {
+        self.epoch[node]
     }
 }
 
@@ -144,7 +231,7 @@ mod tests {
                     assert!(d >= 20);
                     sum += d;
                 }
-                Delivery::Dropped => panic!("no loss configured"),
+                _ => panic!("no loss or duplication configured"),
             }
         }
         let mean = sum as f64 / k as f64;
@@ -163,6 +250,17 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_cut_is_one_directional() {
+        let mut n = net(NetConfig::default());
+        n.cut_link(0, 1);
+        assert_eq!(n.send(0, 1), Delivery::Dropped);
+        assert!(matches!(n.send(1, 0), Delivery::After(_)), "reverse direction open");
+        assert!(matches!(n.send(0, 2), Delivery::After(_)), "other links open");
+        n.heal();
+        assert!(matches!(n.send(0, 1), Delivery::After(_)));
+    }
+
+    #[test]
     fn crashed_node_isolated() {
         let mut n = net(NetConfig::default());
         n.crash(1);
@@ -170,6 +268,19 @@ mod tests {
         assert_eq!(n.send(1, 0), Delivery::Dropped);
         n.restart(1);
         assert!(matches!(n.send(0, 1), Delivery::After(_)));
+    }
+
+    #[test]
+    fn crash_bumps_epoch_restart_does_not() {
+        let mut n = net(NetConfig::default());
+        assert_eq!(n.epoch(1), 0);
+        n.crash(1);
+        assert_eq!(n.epoch(1), 1);
+        n.restart(1);
+        assert_eq!(n.epoch(1), 1, "epoch identifies the incarnation's crash count");
+        n.crash(1);
+        assert_eq!(n.epoch(1), 2);
+        assert_eq!(n.epoch(0), 0, "other nodes unaffected");
     }
 
     #[test]
@@ -186,6 +297,65 @@ mod tests {
         }
         let rate = dropped as f64 / k as f64;
         assert!((rate - 0.25).abs() < 0.02, "loss rate {rate}");
+    }
+
+    #[test]
+    fn burst_loss_window_compounds_and_clears() {
+        let mut n = net(NetConfig::default());
+        n.set_loss(0.5);
+        let k = 20_000;
+        let dropped = (0..k).filter(|_| n.send(0, 1) == Delivery::Dropped).count();
+        let rate = dropped as f64 / k as f64;
+        assert!((rate - 0.5).abs() < 0.03, "window loss rate {rate}");
+        n.clear_chaos();
+        for _ in 0..2000 {
+            assert!(matches!(n.send(0, 1), Delivery::After(_)));
+        }
+    }
+
+    #[test]
+    fn duplication_window_emits_two_copies() {
+        let mut n = net(NetConfig::default());
+        n.set_duplicate(0.3);
+        let k = 20_000;
+        let mut dups = 0;
+        for _ in 0..k {
+            match n.send(0, 1) {
+                Delivery::Twice(a, b) => {
+                    assert!(a >= 20 && b >= 20);
+                    dups += 1;
+                }
+                Delivery::After(_) => {}
+                Delivery::Dropped => panic!("no loss configured"),
+            }
+        }
+        let rate = dups as f64 / k as f64;
+        assert!((rate - 0.3).abs() < 0.02, "dup rate {rate}");
+        n.clear_chaos();
+        assert!(matches!(n.send(0, 1), Delivery::After(_)));
+    }
+
+    #[test]
+    fn reorder_window_adds_bounded_jitter() {
+        let mut base = net(NetConfig::default());
+        let mut jittered = net(NetConfig::default());
+        jittered.set_reorder(10_000);
+        let k = 10_000;
+        let sum = |n: &mut SimNetwork| -> i64 {
+            (0..k)
+                .map(|_| match n.send(0, 1) {
+                    Delivery::After(d) => d,
+                    _ => 0,
+                })
+                .sum()
+        };
+        let mean_base = sum(&mut base) as f64 / k as f64;
+        let mean_jit = sum(&mut jittered) as f64 / k as f64;
+        // Uniform [0, 10ms] adds ~5ms on average.
+        assert!(
+            (mean_jit - mean_base - 5_000.0).abs() < 500.0,
+            "base {mean_base} jittered {mean_jit}"
+        );
     }
 
     #[test]

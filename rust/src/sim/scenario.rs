@@ -1,0 +1,279 @@
+//! The Nemesis scenario matrix: a standing catalog of fault scenarios,
+//! each run against every consistency mode the matrix covers and
+//! linearizability-checked (`leaseguard scenarios --json`).
+//!
+//! This is the machinery behind the ROADMAP's "as many scenarios as you
+//! can imagine": a scenario is just a name + a [`NemesisSchedule`] + a
+//! parameter tweak, so adding one is a three-line edit to [`catalog`]
+//! (see DESIGN.md "Nemesis" for the recipe). Every scenario runs under
+//! {LeaseGuard, Quorum, Inconsistent}: the first two *promise*
+//! linearizability and the matrix fails loudly if a history violates
+//! it; Inconsistent is the control — the checker reports whatever the
+//! fault shape manages to expose.
+//!
+//! Determinism: a scenario run is a pure function of
+//! `(scenario, mode, seed)` — same inputs, byte-identical history
+//! (guarded by `nemesis_determinism_*` in `rust/tests/integration_sim.rs`).
+
+use crate::cluster::{Cluster, RunReport};
+use crate::config::{ConsistencyMode, Params};
+use crate::linearizability;
+use crate::sim::nemesis::{Fault, NemesisSchedule};
+
+/// One catalog entry: a named fault schedule plus parameter overrides.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub schedule: NemesisSchedule,
+    /// Overrides applied on top of the matrix base parameters.
+    pub tune: fn(&mut Params),
+}
+
+/// Consistency modes every scenario runs under. The first two promise
+/// linearizability under any fault schedule; Inconsistent does not.
+pub const MATRIX_MODES: [ConsistencyMode; 3] = [
+    ConsistencyMode::LeaseGuard,
+    ConsistencyMode::Quorum,
+    ConsistencyMode::Inconsistent,
+];
+
+fn no_tune(_: &mut Params) {}
+
+/// The standing scenario catalog. Keep entries deterministic and short
+/// enough that the whole matrix stays test-suite friendly.
+pub fn catalog() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "leader-crash-restart",
+            description: "leader crashes at 500ms, reboots 400ms later",
+            schedule: NemesisSchedule::new()
+                .at(500_000, Fault::CrashLeader { restart_after_us: Some(400_000) }),
+            tune: no_tune,
+        },
+        Scenario {
+            name: "repeated-leader-crash",
+            description: "two leader crashes in one run; each victim reboots",
+            schedule: NemesisSchedule::new()
+                .at(400_000, Fault::CrashLeader { restart_after_us: Some(700_000) })
+                .at(1_800_000, Fault::CrashLeader { restart_after_us: Some(700_000) }),
+            tune: |p| p.duration_us = 3_200_000,
+        },
+        Scenario {
+            name: "crash-quick-restart",
+            description: "leader reboots faster than the election that replaces it",
+            schedule: NemesisSchedule::new()
+                .at(500_000, Fault::CrashLeader { restart_after_us: Some(150_000) }),
+            tune: no_tune,
+        },
+        Scenario {
+            name: "double-follower-crash",
+            description: "5 nodes; two followers crash at the same instant",
+            schedule: NemesisSchedule::new()
+                .at(600_000, Fault::CrashFollower { restart_after_us: Some(700_000) })
+                .at(600_000, Fault::CrashFollower { restart_after_us: Some(700_000) }),
+            tune: |p| {
+                p.nodes = 5;
+                p.duration_us = 3_000_000;
+            },
+        },
+        Scenario {
+            name: "leader-partition-heal",
+            description: "leader isolated from peers (clients still reach it), heals at 1.8s",
+            schedule: NemesisSchedule::new()
+                .at(500_000, Fault::PartitionLeader)
+                .at(1_800_000, Fault::Heal),
+            tune: |p| {
+                p.client_stray_prob = 0.1;
+                p.op_timeout_us = 300_000;
+                p.duration_us = 3_000_000;
+            },
+        },
+        Scenario {
+            name: "minority-follower-partition",
+            description: "node 2 partitioned away; rejoins with an inflated term at 1.6s",
+            schedule: NemesisSchedule::new()
+                .at(400_000, Fault::PartitionNodes(vec![2]))
+                .at(1_600_000, Fault::Heal),
+            tune: |p| p.duration_us = 3_000_000,
+        },
+        Scenario {
+            name: "asymmetric-inbound-cut",
+            description: "peers can hear the leader but the leader hears no acks",
+            schedule: NemesisSchedule::new()
+                .at(500_000, Fault::CutLeaderInbound)
+                .at(1_500_000, Fault::Heal),
+            tune: |p| p.op_timeout_us = 400_000,
+        },
+        Scenario {
+            name: "dup-reorder-storm",
+            description: "15% duplication + up-to-10ms reorder jitter for 1.5s",
+            schedule: NemesisSchedule::new()
+                .at(300_000, Fault::SetDuplicate(0.15))
+                .window(300_000, 1_800_000, Fault::SetReorder(10_000)),
+            tune: no_tune,
+        },
+        Scenario {
+            name: "burst-loss",
+            description: "30% message loss window during steady state",
+            schedule: NemesisSchedule::new().window(500_000, 1_500_000, Fault::SetLoss(0.3)),
+            tune: no_tune,
+        },
+        Scenario {
+            name: "leader-clock-skew-spike",
+            description: "leader's clock jumps +300ms (detected: bounds widen, stay correct)",
+            schedule: NemesisSchedule::new().at(600_000, Fault::LeaderClockSkew(300_000)),
+            tune: no_tune,
+        },
+        Scenario {
+            name: "planned-handover",
+            description: "§5.1 drain: leader commits end-lease and steps down",
+            schedule: NemesisSchedule::new().at(800_000, Fault::PlannedHandover),
+            tune: no_tune,
+        },
+    ]
+}
+
+/// Matrix base parameters: start from the caller's `Params` (CLI
+/// `--param` overrides included), then apply the matrix's standard
+/// workload shape — short but failure-rich runs — to any knob the
+/// caller left at its global default. Scenario `tune` functions apply
+/// on top of this and always win.
+fn matrix_base(user: &Params, mode: ConsistencyMode) -> Params {
+    let d = Params::default();
+    let mut p = user.clone();
+    p.consistency = mode;
+    if p.duration_us == d.duration_us {
+        p.duration_us = 2_500_000;
+    }
+    if p.interarrival_us == d.interarrival_us {
+        p.interarrival_us = 500.0;
+    }
+    if p.op_timeout_us == d.op_timeout_us {
+        p.op_timeout_us = 1_000_000;
+    }
+    p
+}
+
+/// Effective parameters for one (scenario, mode) run.
+fn scenario_params(sc: &Scenario, user: &Params, mode: ConsistencyMode) -> Params {
+    let mut p = matrix_base(user, mode);
+    (sc.tune)(&mut p);
+    p
+}
+
+/// Per-(scenario, mode) results — availability, latency, and the
+/// checker's verdict against what the mode promises.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub mode: ConsistencyMode,
+    pub expect_linearizable: bool,
+    pub violations: usize,
+    pub reads_ok: u64,
+    pub reads_failed: u64,
+    pub writes_ok: u64,
+    pub writes_failed: u64,
+    pub read_p50_us: i64,
+    pub read_p99_us: i64,
+    pub write_p50_us: i64,
+    pub write_p99_us: i64,
+    pub elections: u64,
+    pub faults_injected: u64,
+    pub events_processed: u64,
+}
+
+impl ScenarioOutcome {
+    /// Did this run honor its mode's promise? (Inconsistent promises
+    /// nothing, so it can never fail the matrix.)
+    pub fn ok(&self) -> bool {
+        !self.expect_linearizable || self.violations == 0
+    }
+}
+
+/// Run one scenario under one mode and return the full report (the
+/// determinism guards compare raw histories across repeat runs).
+pub fn run_report(sc: &Scenario, mode: ConsistencyMode, seed: u64) -> RunReport {
+    let mut user = Params::default();
+    user.seed = seed;
+    run_report_from(sc, &user, mode)
+}
+
+/// As [`run_report`], honoring caller parameter overrides.
+pub fn run_report_from(sc: &Scenario, user: &Params, mode: ConsistencyMode) -> RunReport {
+    let p = scenario_params(sc, user, mode);
+    Cluster::new(p).with_nemesis(sc.schedule.clone()).run()
+}
+
+/// Run one scenario under one mode, linearizability-checked.
+pub fn run_one(sc: &Scenario, mode: ConsistencyMode, seed: u64) -> ScenarioOutcome {
+    let mut user = Params::default();
+    user.seed = seed;
+    run_one_from(sc, &user, mode)
+}
+
+/// As [`run_one`], honoring caller parameter overrides.
+pub fn run_one_from(sc: &Scenario, user: &Params, mode: ConsistencyMode) -> ScenarioOutcome {
+    let rep = run_report_from(sc, user, mode);
+    let violations = linearizability::check(&rep.history).len();
+    let reads = rep.series.window_totals(true, 0, i64::MAX);
+    let writes = rep.series.window_totals(false, 0, i64::MAX);
+    ScenarioOutcome {
+        scenario: sc.name.to_string(),
+        mode,
+        expect_linearizable: mode != ConsistencyMode::Inconsistent,
+        violations,
+        reads_ok: reads.ok,
+        reads_failed: reads.failed,
+        writes_ok: writes.ok,
+        writes_failed: writes.failed,
+        read_p50_us: rep.read_latency.p50(),
+        read_p99_us: rep.read_latency.p99(),
+        write_p50_us: rep.write_latency.p50(),
+        write_p99_us: rep.write_latency.p99(),
+        elections: rep.elections,
+        faults_injected: rep.faults_injected,
+        events_processed: rep.events_processed,
+    }
+}
+
+/// The full matrix: every catalog scenario × every matrix mode, in
+/// deterministic order.
+pub fn run_matrix(seed: u64) -> Vec<ScenarioOutcome> {
+    let mut user = Params::default();
+    user.seed = seed;
+    run_matrix_from(&user)
+}
+
+/// As [`run_matrix`], honoring caller parameter overrides (the CLI's
+/// `--param k=v` flags flow through here).
+pub fn run_matrix_from(user: &Params) -> Vec<ScenarioOutcome> {
+    let mut out = Vec::new();
+    for sc in &catalog() {
+        for &mode in MATRIX_MODES.iter() {
+            out.push(run_one_from(sc, user, mode));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_unique_and_plentiful() {
+        let cat = catalog();
+        assert!(cat.len() >= 8, "matrix needs >= 8 distinct fault scenarios");
+        let mut names: Vec<&str> = cat.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), cat.len(), "scenario names must be unique");
+        for sc in &cat {
+            assert!(!sc.schedule.is_empty(), "{}: empty schedule", sc.name);
+            scenario_params(sc, &Params::default(), ConsistencyMode::LeaseGuard)
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: bad tuned params: {e}", sc.name));
+        }
+    }
+}

@@ -1,9 +1,11 @@
 //! Simulator integration tests: whole-protocol runs with fault
-//! injection, across every consistency mode the paper evaluates.
+//! injection, across every consistency mode the paper evaluates, plus
+//! the Nemesis scenario-matrix regression suite.
 
 use leaseguard::cluster::Cluster;
 use leaseguard::config::{ConsistencyMode, Params};
 use leaseguard::linearizability;
+use leaseguard::sim::scenario::{self, MATRIX_MODES};
 
 fn base(mode: ConsistencyMode, seed: u64) -> Params {
     let mut p = Params::default();
@@ -213,6 +215,80 @@ fn determinism_guard_zero_copy_refactor() {
         "history diverged under a fixed seed"
     );
     assert!(a.elections >= 2, "scenario must actually fail over");
+}
+
+#[test]
+fn nemesis_matrix_linearizable_where_promised() {
+    // The standing scenario-matrix regression: every catalog scenario x
+    // every matrix mode. LeaseGuard and Quorum promise linearizability
+    // under ANY fault schedule; Inconsistent is the control.
+    let rows = scenario::run_matrix(1);
+    assert_eq!(rows.len(), scenario::catalog().len() * MATRIX_MODES.len());
+    for r in &rows {
+        assert!(
+            r.ok(),
+            "{}/{}: {} violations where the mode promises linearizability",
+            r.scenario,
+            r.mode,
+            r.violations
+        );
+        assert!(
+            r.reads_ok + r.writes_ok > 0,
+            "{}/{}: scenario produced no successful ops at all",
+            r.scenario,
+            r.mode
+        );
+        assert!(r.faults_injected > 0, "{}: no fault fired", r.scenario);
+    }
+}
+
+#[test]
+fn nemesis_determinism_partitions_chaos_and_skew() {
+    // Same seed + same schedule => byte-identical history, extended
+    // beyond the crash case to partitions, chaos windows (duplication,
+    // reorder, loss draw extra RNG), and clock-skew injection.
+    for name in ["leader-partition-heal", "dup-reorder-storm", "leader-clock-skew-spike"] {
+        let sc = scenario::catalog()
+            .into_iter()
+            .find(|s| s.name == name)
+            .expect("scenario in catalog");
+        let a = scenario::run_report(&sc, ConsistencyMode::LeaseGuard, 0xD57E12);
+        let b = scenario::run_report(&sc, ConsistencyMode::LeaseGuard, 0xD57E12);
+        assert_eq!(a.events_processed, b.events_processed, "{name}: event counts diverged");
+        assert_eq!(a.t0, b.t0, "{name}");
+        assert_eq!(a.elections, b.elections, "{name}");
+        assert_eq!(
+            format!("{:?}", a.history.entries),
+            format!("{:?}", b.history.entries),
+            "{name}: history diverged under a fixed seed"
+        );
+    }
+}
+
+#[test]
+fn crashed_node_fails_inflight_ops_promptly() {
+    // Satellite regression: ops in flight against a node when it
+    // crashes must fail fast (broken connection), not sit in `pending`
+    // until the client timeout / run end skews the latency stats.
+    let mut p = base(ConsistencyMode::LeaseGuard, 17);
+    p.op_timeout_us = 8_000_000; // longer than the whole run: a leaked
+                                 // op would ride to the drain
+    p.restart_after_us = 400_000;
+    let rep = Cluster::new(p).run();
+    linearizability::assert_linearizable(&rep.history);
+    let worst = rep
+        .history
+        .entries
+        .iter()
+        .map(|e| e.end_ts - e.start_ts)
+        .max()
+        .expect("history not empty");
+    // Post-crash gate waits bound successful ops near Δ/2; only a
+    // leaked in-flight op could approach run length (~2s).
+    assert!(
+        worst < 1_500_000,
+        "in-flight ops at the crash must fail promptly, worst latency {worst}µs"
+    );
 }
 
 #[test]

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Run the Nemesis fault-injection scenario matrix (every catalog
+# scenario x {leaseguard, quorum, inconsistent}, linearizability-
+# checked) and write SCENARIOS.json at the repo root.
+#
+#   scripts/scenarios.sh                     # release build (matrix is CPU-heavy)
+#   scripts/scenarios.sh --quick             # debug build (slower runs, faster build)
+#   scripts/scenarios.sh --param seed=9      # extra CLI args pass through
+#
+# Exits non-zero if any run violates a guarantee its mode promises.
+# The output is deterministic per seed: commit SCENARIOS.json to track
+# the matrix across PRs (like BENCH_micro.json).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--quick" ]]; then
+    shift
+    cargo run --bin leaseguard -- scenarios --json SCENARIOS.json "$@"
+else
+    cargo run --release --bin leaseguard -- scenarios --json SCENARIOS.json "$@"
+fi
+
+echo "SCENARIOS.json written at $(pwd)/SCENARIOS.json"
