@@ -6,13 +6,27 @@
 //! One writer thread issues requests exactly on schedule; one reader
 //! thread per server connection completes them. Leader discovery mirrors
 //! the simulator's client: believed leader, else round-robin probing;
-//! any reply other than NotLeader pins the belief.
+//! any reply other than NotLeader pins the belief. Three failure
+//! mechanisms keep the client honest across server crashes:
+//!
+//! * **Per-target redial with backoff** — a dead connection slot is
+//!   retried (exponential backoff, capped) instead of being written off
+//!   for the rest of the run, so a crashed-and-restarted server serves
+//!   this client again;
+//! * **Per-target fail streaks** — a deposed leader answering NoLease
+//!   forever can only burn its own streak counter, not have it reset by
+//!   successes from the real leader;
+//! * **RPC deadlines** — ops pending longer than `params.op_timeout_us`
+//!   are failed client-side (ambiguous for writes, exactly like the
+//!   simulator's timeout semantics) so a silent server cannot strand
+//!   operations in `pending` until the end of the run.
 
 use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::clock::real::RealClock;
@@ -50,10 +64,118 @@ struct Shared {
     pending: Mutex<HashMap<u64, Pending>>,
     results: Mutex<Vec<(u64, OpResult, Micros, Micros)>>, // op, result, exec, end
     believed_leader: AtomicUsize, // usize::MAX = unknown
-    /// Consecutive failures against the believed leader (give up after
-    /// a bound — a deposed leader can answer NoLease indefinitely).
-    fail_streak: AtomicUsize,
+    /// Per-target consecutive non-NotLeader failures (give up on a
+    /// believed leader after a bound — a deposed leader can answer
+    /// NoLease indefinitely). Per target: a success from server A must
+    /// not excuse server B's streak.
+    fail_streaks: Vec<AtomicUsize>,
     done: AtomicBool,
+}
+
+/// Give up on a believed leader after this many consecutive failures.
+const FAIL_STREAK_LIMIT: usize = 50;
+/// Redial backoff: base and cap (µs). Connections to dead loopback
+/// servers fail fast, so the writer pays at most a connect attempt per
+/// due slot per op.
+const REDIAL_BASE_US: Micros = 2_000;
+const REDIAL_CAP_US: Micros = 100_000;
+/// How often (in issued ops) the writer sweeps `pending` for ops past
+/// their RPC deadline.
+const DEADLINE_SWEEP_EVERY: u64 = 128;
+
+/// One outgoing connection slot. `None` stream = down; redialed with
+/// backoff instead of staying dead for the rest of the run.
+struct Slot {
+    stream: Option<TcpStream>,
+    next_dial: Micros,
+    backoff_us: Micros,
+}
+
+fn spawn_reader(stream: TcpStream, sh: Arc<Shared>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Buffered reads + reusable scratch per connection.
+        let mut frames = FrameReader::new(stream);
+        while let Ok(Some(body)) = frames.next_frame() {
+            let Ok(Frame::ClientResp(resp)) = wire::decode(body) else { break };
+            let end = RealClock::monotonic_us();
+            // Live leader discovery: NotLeader un-pins the belief; any
+            // other reply pins the target. Ops already failed by the
+            // deadline sweep are gone from `pending`: their late replies
+            // influence neither belief nor the history (no double
+            // completion).
+            let tgt = sh.pending.lock().unwrap().get(&resp.op).map(|p| p.target);
+            if let Some(t) = tgt {
+                match &resp.result {
+                    OpResult::Failed(FailReason::NotLeader)
+                    | OpResult::Failed(FailReason::Timeout) => {
+                        let _ = sh.believed_leader.compare_exchange(
+                            t,
+                            usize::MAX,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        );
+                    }
+                    OpResult::Failed(_) => {
+                        // The target led but couldn't serve; give up
+                        // after a persistent streak.
+                        if sh.fail_streaks[t].fetch_add(1, Ordering::Relaxed) >= FAIL_STREAK_LIMIT {
+                            sh.fail_streaks[t].store(0, Ordering::Relaxed);
+                            let _ = sh.believed_leader.compare_exchange(
+                                t,
+                                usize::MAX,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            );
+                        }
+                    }
+                    _ => {
+                        sh.fail_streaks[t].store(0, Ordering::Relaxed);
+                        sh.believed_leader.store(t, Ordering::Relaxed);
+                    }
+                }
+            }
+            sh.results.lock().unwrap().push((resp.op, resp.result, resp.exec_us, end));
+            if sh.done.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+    })
+}
+
+/// (Re)connect a down slot if its backoff has elapsed. Returns whether
+/// the slot is usable.
+fn ensure_connected(
+    slot: &mut Slot,
+    addr: &str,
+    shared: &Arc<Shared>,
+    readers: &mut Vec<JoinHandle<()>>,
+) -> bool {
+    if slot.stream.is_some() {
+        return true;
+    }
+    let now = RealClock::monotonic_us();
+    if now < slot.next_dial {
+        return false;
+    }
+    let conn = match addr.parse() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, Duration::from_millis(50)),
+        Err(_) => TcpStream::connect(addr), // hostname: let std resolve
+    };
+    match conn {
+        Ok(s) => {
+            s.set_nodelay(true).ok();
+            let Ok(r) = s.try_clone() else { return false };
+            readers.push(spawn_reader(r, shared.clone()));
+            slot.stream = Some(s);
+            slot.backoff_us = REDIAL_BASE_US;
+            true
+        }
+        Err(_) => {
+            slot.next_dial = RealClock::monotonic_us() + slot.backoff_us;
+            slot.backoff_us = (slot.backoff_us * 2).min(REDIAL_CAP_US);
+            false
+        }
+    }
 }
 
 /// Run an open-loop workload against `addrs` for `params.duration_us`.
@@ -64,83 +186,36 @@ pub fn run_open_loop(
     params: &Params,
     applies: Option<SharedApplies>,
 ) -> std::io::Result<ClientReport> {
+    let n_servers = addrs.len();
     let shared = Arc::new(Shared {
         pending: Mutex::new(HashMap::new()),
         results: Mutex::new(Vec::new()),
         believed_leader: AtomicUsize::new(usize::MAX),
-        fail_streak: AtomicUsize::new(0),
+        fail_streaks: (0..n_servers).map(|_| AtomicUsize::new(0)).collect(),
         done: AtomicBool::new(false),
     });
 
-    // One connection per server; reader thread each.
-    let mut writers: Vec<Option<TcpStream>> = Vec::new();
-    let mut readers = Vec::new();
+    // One connection slot per server; a reader thread per live
+    // connection. Slots that fail to connect are retried during the run.
+    let mut writers: Vec<Slot> = Vec::new();
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
     for addr in addrs {
-        match TcpStream::connect(addr) {
-            Ok(s) => {
-                s.set_nodelay(true).ok();
-                let r = s.try_clone()?;
-                let sh = shared.clone();
-                readers.push(std::thread::spawn(move || {
-                    // Buffered reads + reusable scratch per connection.
-                    let mut frames = FrameReader::new(r);
-                    while let Ok(Some(body)) = frames.next_frame() {
-                        let Ok(Frame::ClientResp(resp)) = wire::decode(body) else { break };
-                        let end = RealClock::monotonic_us();
-                        // Live leader discovery: NotLeader un-pins the
-                        // belief; any other reply pins the target.
-                        let tgt =
-                            sh.pending.lock().unwrap().get(&resp.op).map(|p| p.target);
-                        if let Some(t) = tgt {
-                            match &resp.result {
-                                OpResult::Failed(FailReason::NotLeader)
-                                | OpResult::Failed(FailReason::Timeout) => {
-                                    let _ = sh.believed_leader.compare_exchange(
-                                        t,
-                                        usize::MAX,
-                                        Ordering::Relaxed,
-                                        Ordering::Relaxed,
-                                    );
-                                }
-                                OpResult::Failed(_) => {
-                                    // The target led but couldn't serve;
-                                    // give up after a persistent streak.
-                                    if sh.fail_streak.fetch_add(1, Ordering::Relaxed) >= 50 {
-                                        sh.fail_streak.store(0, Ordering::Relaxed);
-                                        let _ = sh.believed_leader.compare_exchange(
-                                            t,
-                                            usize::MAX,
-                                            Ordering::Relaxed,
-                                            Ordering::Relaxed,
-                                        );
-                                    }
-                                }
-                                _ => {
-                                    sh.fail_streak.store(0, Ordering::Relaxed);
-                                    sh.believed_leader.store(t, Ordering::Relaxed);
-                                }
-                            }
-                        }
-                        sh.results.lock().unwrap().push((resp.op, resp.result, resp.exec_us, end));
-                        if sh.done.load(Ordering::Relaxed) {
-                            break;
-                        }
-                    }
-                }));
-                writers.push(Some(s));
-            }
-            Err(_) => writers.push(None),
-        }
+        let mut slot = Slot { stream: None, next_dial: Micros::MIN, backoff_us: REDIAL_BASE_US };
+        ensure_connected(&mut slot, addr, &shared, &mut readers);
+        writers.push(slot);
     }
 
     let t0 = RealClock::monotonic_us();
     let mut rng = Rng::new(params.seed ^ 0xC11E17);
     let mut workload = Workload::from_params(params, &mut rng);
     let schedule: Vec<OpSpec> = workload.schedule(params.duration_us);
-    let n_servers = addrs.len();
     let mut probe = 0usize;
     let mut sent: u64 = 0;
     let mut op_id: u64 = 0;
+    // Ops failed client-side by the deadline sweep (op, pending, end):
+    // kept writer-local so a late server reply can't double-complete
+    // them (`pending.remove` already returned None for it).
+    let mut deadline_failed: Vec<(u64, Pending, Micros)> = Vec::new();
     // Reusable request-encode buffer: the open-loop writer allocates no
     // fresh frame buffer per operation.
     let mut enc = Enc::new();
@@ -162,6 +237,27 @@ pub fn run_open_loop(
         }
         op_id += 1;
         let op = op_id;
+        // RPC deadline sweep: fail ops stuck past op_timeout_us so a
+        // silent server (crashed mid-request) can't strand them.
+        if op_id % DEADLINE_SWEEP_EVERY == 0 {
+            let now = RealClock::monotonic_us();
+            let mut pend = shared.pending.lock().unwrap();
+            let expired: Vec<u64> = pend
+                .iter()
+                .filter(|(_, p)| now - p.start_ts > params.op_timeout_us)
+                .map(|(&o, _)| o)
+                .collect();
+            for o in expired {
+                let p = pend.remove(&o).expect("expired op is pending");
+                let _ = shared.believed_leader.compare_exchange(
+                    p.target,
+                    usize::MAX,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                );
+                deadline_failed.push((o, p, now));
+            }
+        }
         let target = {
             let b = shared.believed_leader.load(Ordering::Relaxed);
             if b < n_servers {
@@ -182,18 +278,28 @@ pub fn run_open_loop(
             write_value: spec.write_value,
             payload: vec![0xA5; spec.payload_bytes as usize],
         });
-        let ok = match &mut writers[target] {
-            Some(w) => {
+        let ok = ensure_connected(&mut writers[target], &addrs[target], &shared, &mut readers)
+            && {
+                let w = writers[target].stream.as_mut().expect("connected slot has stream");
                 enc.reset();
                 wire::encode_into(&req, &mut enc);
-                write_frame(w, &enc.buf).is_ok()
-            }
-            None => false,
-        };
+                let ok = write_frame(w, &enc.buf).is_ok();
+                if !ok {
+                    // Drop the broken stream; the slot redials with
+                    // backoff on a later op.
+                    writers[target].stream = None;
+                    writers[target].next_dial = RealClock::monotonic_us() + REDIAL_BASE_US;
+                }
+                ok
+            };
         if !ok {
             // Server unreachable (crashed): fast-fail the op, probe on.
-            writers[target] = None;
-            shared.believed_leader.store(usize::MAX, Ordering::Relaxed);
+            let _ = shared.believed_leader.compare_exchange(
+                target,
+                usize::MAX,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
             let end = RealClock::monotonic_us();
             shared
                 .results
@@ -209,7 +315,7 @@ pub fn run_open_loop(
     std::thread::sleep(Duration::from_millis(300));
     shared.done.store(true, Ordering::Relaxed);
     for w in writers.iter_mut() {
-        if let Some(s) = w {
+        if let Some(s) = &mut w.stream {
             let _ = s.flush();
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
@@ -263,11 +369,13 @@ pub fn run_open_loop(
             },
         });
     }
-    // Unanswered ops: timeouts (ambiguous writes).
+    // Ops failed by the deadline sweep, then ops still unanswered at the
+    // end of the run: both are timeouts (ambiguous writes).
     let now = RealClock::monotonic_us();
-    for (op, p) in pending.drain() {
+    let leftovers = pending.drain().map(|(op, p)| (op, p, now));
+    for (op, p, end) in deadline_failed.into_iter().chain(leftovers) {
         let is_read = p.write_value.is_none();
-        series.record(is_read, (now - t0).max(0), false);
+        series.record(is_read, (end - t0).max(0), false);
         history.entries.push(HistoryEntry {
             op,
             key: p.key,
@@ -276,7 +384,7 @@ pub fn run_open_loop(
                 None => OpKind::Read { result: Vec::new() },
             },
             start_ts: p.start_ts,
-            end_ts: now,
+            end_ts: end,
             execution_ts: None,
             success: false,
             fail: Some(FailReason::Timeout),

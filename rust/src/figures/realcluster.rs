@@ -1,7 +1,11 @@
 //! In-process real cluster helper: N TCP servers + shared apply log,
 //! used by Figures 9-11, the `serve_cluster` example, and the server
-//! integration tests.
+//! integration tests. With data directories ([`RealCluster::spawn_durable`])
+//! it also supports kill + [`RealCluster::respawn`] crash-recovery
+//! drills: a respawned server reboots from its WAL and hard-state file
+//! on the same fixed port.
 
+use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -9,19 +13,45 @@ use std::time::Duration;
 use crate::config::Params;
 use crate::runtime::EngineHandle;
 use crate::server::server::{Server, ServerConfig, ServerHandle, SharedApplies};
+use crate::storage::FsyncPolicy;
 
 pub struct RealCluster {
     pub handles: Vec<Option<ServerHandle>>,
     pub addrs: Vec<String>,
     pub applies: SharedApplies,
+    /// Per-server configs, kept for [`RealCluster::respawn`].
+    cfgs: Vec<ServerConfig>,
 }
 
 impl RealCluster {
-    /// Spawn `params.nodes` servers on ephemeral loopback ports.
+    /// Spawn `params.nodes` volatile servers on ephemeral loopback ports.
     pub fn spawn(
         params: &Params,
         one_way_delay: Duration,
         engine: Option<EngineHandle>,
+    ) -> std::io::Result<RealCluster> {
+        Self::spawn_inner(params, one_way_delay, engine, None, FsyncPolicy::Never)
+    }
+
+    /// Spawn with crash durability: server `i` persists to
+    /// `data_dirs[i]`, and can be killed and respawned from it.
+    pub fn spawn_durable(
+        params: &Params,
+        one_way_delay: Duration,
+        engine: Option<EngineHandle>,
+        data_dirs: &[PathBuf],
+        fsync: FsyncPolicy,
+    ) -> std::io::Result<RealCluster> {
+        assert_eq!(data_dirs.len(), params.nodes, "one data dir per server");
+        Self::spawn_inner(params, one_way_delay, engine, Some(data_dirs), fsync)
+    }
+
+    fn spawn_inner(
+        params: &Params,
+        one_way_delay: Duration,
+        engine: Option<EngineHandle>,
+        data_dirs: Option<&[PathBuf]>,
+        fsync: FsyncPolicy,
     ) -> std::io::Result<RealCluster> {
         let n = params.nodes;
         let applies: SharedApplies = Arc::new(Mutex::new(Vec::new()));
@@ -36,6 +66,7 @@ impl RealCluster {
         }
         drop(reserved); // release; servers re-bind the same ports
         let mut handles = Vec::new();
+        let mut cfgs = Vec::new();
         for id in 0..n {
             let cfg = ServerConfig {
                 id,
@@ -44,10 +75,13 @@ impl RealCluster {
                 one_way_delay,
                 engine: engine.clone(),
                 applies: Some(applies.clone()),
+                data_dir: data_dirs.map(|d| d[id].clone()),
+                fsync,
             };
+            cfgs.push(cfg.clone());
             handles.push(Some(Server::spawn(cfg)?));
         }
-        Ok(RealCluster { handles, addrs, applies })
+        Ok(RealCluster { handles, addrs, applies, cfgs })
     }
 
     /// Wait until some server reports leadership (with commit), up to
@@ -78,6 +112,16 @@ impl RealCluster {
         }
     }
 
+    /// Respawn a killed server from its original config — same id, same
+    /// fixed port, same data dir. With durability enabled it recovers
+    /// `(term, voted_for, log)` from disk; volatile servers reboot blank
+    /// (exactly what a process restart gives them).
+    pub fn respawn(&mut self, i: usize) -> std::io::Result<()> {
+        assert!(self.handles[i].is_none(), "server {i} is still running");
+        self.handles[i] = Some(Server::spawn(self.cfgs[i].clone())?);
+        Ok(())
+    }
+
     pub fn shutdown(mut self) {
         for i in 0..self.handles.len() {
             self.kill(i);
@@ -103,6 +147,34 @@ mod tests {
         let c = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
         let leader = c.wait_for_leader(Duration::from_secs(5));
         assert!(leader.is_some(), "no leader elected");
+        c.shutdown();
+    }
+
+    #[test]
+    fn durable_kill_respawn_rejoins() {
+        let mut p = Params::default();
+        p.nodes = 3;
+        p.election_timeout_us = 150_000;
+        p.election_jitter_us = 100_000;
+        p.heartbeat_us = 50_000;
+        let dirs: Vec<_> = (0..3).map(|i| crate::testkit::TempDir::new(&format!("rc-respawn-{i}"))).collect();
+        let paths: Vec<PathBuf> = dirs.iter().map(|d| d.path().to_path_buf()).collect();
+        let mut c = RealCluster::spawn_durable(&p, Duration::ZERO, None, &paths, FsyncPolicy::Group)
+            .expect("spawn");
+        let leader = c.wait_for_leader(Duration::from_secs(5)).expect("leader");
+        let follower = (leader + 1) % 3;
+        c.kill(follower);
+        c.respawn(follower).expect("respawn on same port");
+        // The respawned follower catches up to the cluster's term.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let t = c.handles[follower].as_ref().unwrap().status.term.load(Ordering::Relaxed);
+            if t >= 1 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "respawned follower never heard a term");
+            std::thread::sleep(Duration::from_millis(5));
+        }
         c.shutdown();
     }
 }

@@ -36,6 +36,7 @@
 //! | [`metrics`], [`report`] | histograms, time series, figure rendering |
 //! | [`runtime`] | PJRT artifact loading + batched read admission |
 //! | [`server`], [`client`] | real-mode TCP cluster + open-loop client (§7) |
+//! | [`storage`] | real-mode WAL + hard-state durability (crash recovery) |
 //! | [`cluster`] | in-process simulated replica set harness |
 //! | [`figures`] | one driver per paper figure (Figs 5-11) |
 //! | [`config`], [`cli`] | params system + hand-rolled CLI |
@@ -59,6 +60,7 @@ pub mod runtime;
 pub mod server;
 pub mod client;
 pub mod sim;
+pub mod storage;
 pub mod testkit;
 pub mod workload;
 

@@ -83,7 +83,8 @@ const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|bench|bench-c
                           set to) its global default gets the matrix's workload shape instead,
                           and per-scenario tunes always win
   figure <5..11>          regenerate a paper figure (--scale F, --out DIR)
-  serve                   one real server (--node I --listen ADDR --peers A,B,C)
+  serve                   one real server (--node I --listen ADDR --peers A,B,C
+                          --data-dir PATH for crash durability, --fsync always|group|never)
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
   bench-cluster           in-process 3-node TCP cluster + open-loop client
   check                   load AOT artifacts, cross-check engine vs scalar oracle
@@ -211,6 +212,11 @@ fn cmd_serve(args: &Args, params: Params) -> Result<()> {
         None
     };
     let delay_ms: u64 = args.get_parse("delay-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    // --data-dir enables crash durability (WAL + hard state); --fsync
+    // picks the ack policy (always|group|never, default group).
+    let data_dir = args.get("data-dir").map(std::path::PathBuf::from);
+    let fsync: leaseguard::storage::FsyncPolicy =
+        args.get("fsync").unwrap_or("group").parse().map_err(|e: String| anyhow!(e))?;
     let h = Server::spawn(ServerConfig {
         id,
         peer_addrs,
@@ -218,6 +224,8 @@ fn cmd_serve(args: &Args, params: Params) -> Result<()> {
         one_way_delay: Duration::from_millis(delay_ms),
         engine,
         applies: None,
+        data_dir,
+        fsync,
     })?;
     println!("node {id} serving on {} (ctrl-c to stop)", h.addr);
     loop {

@@ -20,14 +20,24 @@ pub struct Entry {
 }
 
 /// 1-based append-only log with the usual Raft truncation-on-conflict.
+///
+/// The log additionally tracks which suffix has changed since the last
+/// [`Log::take_dirty`] — the real-mode server drains this watermark into
+/// the WAL before externalizing any message that depends on the entries
+/// (Raft's persist-before-send rule). The simulator never drains it;
+/// virtual time has no disks, and an unread watermark costs nothing.
 #[derive(Debug, Clone, Default)]
 pub struct Log {
     entries: Vec<Entry>,
+    /// Lowest index appended since the last `take_dirty` (1-based).
+    dirty_from: Option<Index>,
+    /// Whether a truncation happened since the last `take_dirty`.
+    truncated: bool,
 }
 
 impl Log {
     pub fn new() -> Self {
-        Log { entries: Vec::new() }
+        Log::default()
     }
 
     /// Index of the last entry (0 if empty).
@@ -63,13 +73,34 @@ impl Log {
     /// Append one entry, returning its index (Fig 2 line 6).
     pub fn append(&mut self, entry: Entry) -> Index {
         self.entries.push(entry);
-        self.last_index()
+        let idx = self.last_index();
+        self.dirty_from = Some(self.dirty_from.map_or(idx, |d| d.min(idx)));
+        idx
     }
 
     /// Truncate the log so `last_index() == index` (drop entries after
     /// `index`). Used when a follower detects a conflict.
     pub fn truncate_after(&mut self, index: Index) {
+        if (index as usize) < self.entries.len() {
+            self.truncated = true;
+            self.dirty_from = Some(self.dirty_from.map_or(index + 1, |d| d.min(index + 1)));
+        }
         self.entries.truncate(index as usize);
+    }
+
+    /// Drain the unpersisted-change watermark: `(first dirty index,
+    /// truncation happened)`, or `None` when nothing changed since the
+    /// last call. After a truncation the dirty range `watermark..` may be
+    /// partly or wholly gone from the log — persisting "truncate to
+    /// watermark-1, then re-append `watermark..=last_index`" is always
+    /// correct.
+    pub fn take_dirty(&mut self) -> Option<(Index, bool)> {
+        let truncated = std::mem::take(&mut self.truncated);
+        match self.dirty_from.take() {
+            Some(from) => Some((from, truncated)),
+            None if truncated => Some((self.last_index() + 1, true)),
+            None => None,
+        }
     }
 
     /// Entries in `(from, to]`, for AppendEntries construction.
@@ -196,6 +227,30 @@ mod tests {
         assert!(l.candidate_up_to_date(2, 2));
         assert!(!l.candidate_up_to_date(2, 1));
         assert!(!l.candidate_up_to_date(1, 99));
+    }
+
+    #[test]
+    fn dirty_watermark_tracks_appends_and_truncations() {
+        let mut l = Log::new();
+        assert_eq!(l.take_dirty(), None);
+        l.append(e(1, 1));
+        l.append(e(1, 2));
+        assert_eq!(l.take_dirty(), Some((1, false)));
+        assert_eq!(l.take_dirty(), None, "drained");
+        l.append(e(1, 3));
+        assert_eq!(l.take_dirty(), Some((3, false)));
+        // Conflict: truncate below the clean range, then refill.
+        l.truncate_after(1);
+        l.append(e(2, 9));
+        assert_eq!(l.take_dirty(), Some((2, true)));
+        // Pure truncation with no refill still reports.
+        l.truncate_after(1);
+        let (from, trunc) = l.take_dirty().unwrap();
+        assert!(trunc);
+        assert!(from >= 2, "persist replays truncate-to-{} then nothing", from - 1);
+        // No-op truncation at or above the tip is not dirty.
+        l.truncate_after(5);
+        assert_eq!(l.take_dirty(), None);
     }
 
     #[test]

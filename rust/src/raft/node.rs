@@ -190,6 +190,21 @@ impl Node {
         Self::boot(cfg, rng, DurableState::default(), now)
     }
 
+    /// Boot from externally-recovered durable state (the real-mode
+    /// [`crate::storage::Storage`] path). Identical to [`Self::new`]
+    /// except the durable triple comes from disk; every volatile field —
+    /// role, commit index, and above all lease state — starts at zero,
+    /// exactly as [`Self::restart`] guarantees in the simulator.
+    pub fn recover(
+        cfg: NodeConfig,
+        seed: u64,
+        durable: DurableState,
+        now: TimeInterval,
+    ) -> (Self, Vec<Output>) {
+        let rng = Rng::new(seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        Self::boot(cfg, rng, durable, now)
+    }
+
     /// Construct a node from its durable state, with every volatile
     /// field at its zero value. Cold boot ([`Self::new`]) and crash
     /// recovery ([`Self::restart`]) both funnel through here — the
@@ -239,6 +254,15 @@ impl Node {
     }
     pub fn term(&self) -> Term {
         self.current_term
+    }
+    pub fn voted_for(&self) -> Option<NodeId> {
+        self.voted_for
+    }
+    /// Drain the log's unpersisted-change watermark (see
+    /// [`Log::take_dirty`]). Real-mode servers call this before routing
+    /// outputs; the simulator leaves it untouched.
+    pub fn take_log_dirty(&mut self) -> Option<(Index, bool)> {
+        self.log.take_dirty()
     }
     pub fn commit_index(&self) -> Index {
         self.commit_index

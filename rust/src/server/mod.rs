@@ -12,13 +12,19 @@
 //! * one writer thread per outgoing peer link, with an optional injected
 //!   one-way delay (the paper's `tc` WAN emulation, §7.2) — the delay
 //!   queue preserves FIFO order per link, like netem;
+//! * a background [`dialer`] thread that (re)establishes peer links with
+//!   jittered exponential backoff, so the main loop never blocks on a
+//!   connect;
 //! * the main loop owns the Node: it drains events, fires due timers,
 //!   batches concurrently-arrived reads through the XLA admission
-//!   engine when enabled, and routes outputs.
+//!   engine when enabled, persists durable state ([`crate::storage`])
+//!   and then routes outputs — nothing is externalized before it is on
+//!   disk.
 //!
 //! Python never appears anywhere here: the admission engine executes an
 //! AOT artifact through PJRT.
 
+pub mod dialer;
 pub mod server;
 pub mod transport;
 pub mod wire;

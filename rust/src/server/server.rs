@@ -1,8 +1,21 @@
 //! The server main loop: the same [`Node`] the simulator drives, behind
 //! real threads, sockets, and clocks (the paper's LogCabin role, §7).
+//!
+//! Two rules structure every loop iteration:
+//!
+//! * **Persist before route.** Outputs produced by the node are buffered,
+//!   the durable deltas (`current_term`, `voted_for`, log appends and
+//!   truncations) are written to [`crate::storage::Storage`] and synced,
+//!   and only then are the outputs externalized. A vote, an
+//!   AppendEntries ack, or a replicated entry is never on the wire
+//!   before it is on disk (Raft §5's persistence points).
+//! * **Never block on a peer.** The router's send path only consults its
+//!   map of live links; reconnection lives on the [`Dialer`] thread and
+//!   established links come back through the event channel.
 
 use std::collections::{BinaryHeap, HashMap};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -13,9 +26,11 @@ use crate::clock::real::RealClock;
 use crate::clock::Clock;
 use crate::raft::{Message, Node, NodeConfig, Output, Role, TimerKind};
 use crate::runtime::{scalar_admission, EngineHandle};
+use crate::storage::{FsyncPolicy, Storage};
 use crate::{Micros, NodeId};
 
-use super::transport::{write_frame, DelayedSender, FrameReader};
+use super::dialer::Dialer;
+use super::transport::{bind_reuse, write_frame, DelayedSender, FrameReader};
 use super::wire::{self, ClientResp, Enc, Frame};
 
 /// Shared in-process apply log (real-mode linearizability input). All
@@ -35,6 +50,12 @@ pub struct ServerConfig {
     /// Batched XLA read admission (None = scalar path).
     pub engine: Option<EngineHandle>,
     pub applies: Option<SharedApplies>,
+    /// Durable-state directory (WAL + hard-state). None = volatile mode:
+    /// the pre-durability behavior, still used by throughput benches.
+    pub data_dir: Option<PathBuf>,
+    /// When an append becomes durable relative to ack (ignored without
+    /// `data_dir`).
+    pub fsync: FsyncPolicy,
 }
 
 /// Externally visible, lock-free server status.
@@ -54,6 +75,8 @@ enum Ev {
     Peer(Message),
     Client { conn: u64, req: wire::ClientReq },
     ConnClosed(u64),
+    /// The background dialer established an outgoing peer link.
+    PeerUp(NodeId, DelayedSender),
     Shutdown,
 }
 
@@ -92,7 +115,9 @@ impl Server {
         } else {
             cfg.peer_addrs[cfg.id].clone()
         };
-        let listener = TcpListener::bind(&bind_to)?;
+        // SO_REUSEADDR: a respawn on a fixed port must not trip over the
+        // killed predecessor's TIME_WAIT sockets.
+        let listener = bind_reuse(&bind_to)?;
         let addr = listener.local_addr()?.to_string();
         cfg.peer_addrs[cfg.id] = addr.clone();
         let (tx, rx) = channel::<Ev>();
@@ -127,7 +152,8 @@ impl Server {
         let main = {
             let status = status.clone();
             let stop = stop.clone();
-            std::thread::spawn(move || main_loop(cfg, rx, status, stop))
+            let tx = tx.clone(); // for the dialer's PeerUp deliveries
+            std::thread::spawn(move || main_loop(cfg, tx, rx, status, stop))
         };
 
         Ok(ServerHandle { id, addr, status, tx, main: Some(main), accept: Some(accept), stop })
@@ -166,6 +192,8 @@ struct Router {
     cfg: ServerConfig,
     timers: BinaryHeap<std::cmp::Reverse<(Micros, u8)>>,
     peers: HashMap<NodeId, DelayedSender>,
+    /// Owns reconnection for everything missing from `peers`.
+    dialer: Dialer,
     op_conn: HashMap<u64, u64>,
     conns: HashMap<u64, TcpStream>,
     /// Reusable frame-encode scratch for every outgoing frame.
@@ -189,42 +217,43 @@ fn kind_from(b: u8) -> TimerKind {
 }
 
 impl Router {
-    fn handle(&mut self, outs: Vec<Output>) {
+    /// Route a batch of outputs, draining `outs` (the caller reuses the
+    /// buffer). Callers must have persisted durable state first — this
+    /// is the externalization point.
+    fn handle(&mut self, outs: &mut Vec<Output>) {
         // A replication fan-out arrives as Sends whose payloads repeat
         // (shared EntryBatch + one round seq): encode once, hand every
         // DelayedSender the same Arc'd bytes. Two slots so one lagging
         // peer's catch-up frame interleaved mid-round doesn't evict the
         // aligned majority's frame.
         let mut encoded: Vec<(Message, Arc<[u8]>)> = Vec::with_capacity(2);
-        for o in outs {
+        for o in outs.drain(..) {
             match o {
                 Output::Send { to, msg } => {
-                    if !self.peers.contains_key(&to) {
-                        if let Some(s) =
-                            connect_peer(&self.cfg.peer_addrs[to], self.cfg.id, self.cfg.one_way_delay)
-                        {
-                            self.peers.insert(to, s);
-                        }
-                    }
-                    if let Some(sender) = self.peers.get(&to) {
-                        // Cheap compare: shared-batch views hit the
-                        // pointer-equality fast path.
-                        let body: Arc<[u8]> = match encoded.iter().find(|(m, _)| *m == msg) {
-                            Some((_, b)) => b.clone(),
-                            None => {
-                                self.enc.reset();
-                                wire::encode_raft_into(self.cfg.id, &msg, &mut self.enc);
-                                let b: Arc<[u8]> = Arc::from(&self.enc.buf[..]);
-                                if encoded.len() == 2 {
-                                    encoded.remove(0);
-                                }
-                                encoded.push((msg, b.clone()));
-                                b
+                    // No link: drop the frame. The dialer is already
+                    // redialing (down links are reported the moment a
+                    // send fails) and Raft's timers re-send; blocking
+                    // the main loop on a connect would stall every
+                    // other peer and client.
+                    let Some(sender) = self.peers.get(&to) else { continue };
+                    // Cheap compare: shared-batch views hit the
+                    // pointer-equality fast path.
+                    let body: Arc<[u8]> = match encoded.iter().find(|(m, _)| *m == msg) {
+                        Some((_, b)) => b.clone(),
+                        None => {
+                            self.enc.reset();
+                            wire::encode_raft_into(self.cfg.id, &msg, &mut self.enc);
+                            let b: Arc<[u8]> = Arc::from(&self.enc.buf[..]);
+                            if encoded.len() == 2 {
+                                encoded.remove(0);
                             }
-                        };
-                        if !sender.send(body) {
-                            self.peers.remove(&to); // reconnect next send
+                            encoded.push((msg, b.clone()));
+                            b
                         }
+                    };
+                    if !sender.send(body) {
+                        self.peers.remove(&to);
+                        self.dialer.notify_down(to);
                     }
                 }
                 Output::SetTimer { kind, after } => {
@@ -258,21 +287,79 @@ impl Router {
     }
 }
 
-fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc<AtomicBool>) {
+/// Flush the node's durable deltas to storage and hit the durability
+/// barrier. Must run after node interactions and before their outputs
+/// are routed. Without a data dir the watermark is drained and dropped
+/// (volatile mode). Storage errors are fatal: continuing to vote or ack
+/// on a broken disk silently voids every crash-safety guarantee.
+fn persist(node: &mut Node, storage: &mut Option<Storage>) {
+    let Some(s) = storage.as_mut() else {
+        node.take_log_dirty();
+        return;
+    };
+    s.persist_hard_state(node.term(), node.voted_for()).expect("hard-state persist");
+    if let Some((from, truncated)) = node.take_log_dirty() {
+        if truncated {
+            s.truncate(from - 1).expect("wal truncate");
+        }
+        let last = node.log().last_index();
+        for (idx, e) in node.log().iter_range(from - 1, last) {
+            s.append(idx, e).expect("wal append");
+        }
+    }
+    s.sync().expect("wal sync");
+}
+
+fn main_loop(
+    cfg: ServerConfig,
+    tx: Sender<Ev>,
+    rx: Receiver<Ev>,
+    status: Arc<Status>,
+    stop: Arc<AtomicBool>,
+) {
     let mut clock = RealClock::new(cfg.params.clock_error_us);
     let now = clock.interval_now();
-    let (mut node, outs) =
-        Node::new(NodeConfig::from_params(cfg.id, &cfg.params), cfg.params.seed, now);
+    let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
+    let (mut storage, mut node, outs) = match &cfg.data_dir {
+        Some(dir) => {
+            let (s, durable) = Storage::open(dir, cfg.fsync).expect("open storage");
+            let (n, o) = Node::recover(node_cfg, cfg.params.seed, durable, now);
+            (Some(s), n, o)
+        }
+        None => {
+            let (n, o) = Node::new(node_cfg, cfg.params.seed, now);
+            (None, n, o)
+        }
+    };
     let engine = cfg.engine.clone();
+    let dialer = {
+        let tx = tx.clone();
+        Dialer::spawn(
+            cfg.id,
+            cfg.peer_addrs.clone(),
+            cfg.one_way_delay,
+            cfg.params.seed ^ (cfg.id as u64) << 32,
+            move |peer, sender| tx.send(Ev::PeerUp(peer, sender)).is_ok(),
+        )
+    };
+    // Every peer link starts down; the dialer brings them up.
+    for p in 0..cfg.peer_addrs.len() {
+        if p != cfg.id {
+            dialer.notify_down(p);
+        }
+    }
     let mut router = Router {
         cfg,
         timers: BinaryHeap::new(),
         peers: HashMap::new(),
+        dialer,
         op_conn: HashMap::new(),
         conns: HashMap::new(),
         enc: Enc::new(),
     };
-    router.handle(outs);
+    let mut pending = outs;
+    persist(&mut node, &mut storage);
+    router.handle(&mut pending);
 
     let publish = |node: &Node, status: &Status| {
         status.is_leader.store(node.role() == Role::Leader, Ordering::Relaxed);
@@ -298,10 +385,13 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
             router.timers.pop();
             timer_fired = true;
             let now = clock.interval_now();
-            let outs = node.on_timer(now, kind_from(kb));
-            router.handle(outs);
+            pending.extend(node.on_timer(now, kind_from(kb)));
         }
         if timer_fired {
+            // A timer can start an election (term bump + self-vote) —
+            // durable before the RequestVotes leave.
+            persist(&mut node, &mut storage);
+            router.handle(&mut pending);
             publish(&node, &status);
         }
         // Wait for events until the next timer (bounded poll).
@@ -334,19 +424,21 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
                 Ev::NewConn(conn, stream) => {
                     router.conns.insert(conn, stream);
                 }
+                Ev::PeerUp(peer, sender) => {
+                    router.peers.insert(peer, sender);
+                }
                 Ev::Peer(msg) => {
                     let now = clock.interval_now();
-                    let outs = node.on_message(now, msg);
-                    router.handle(outs);
+                    pending.extend(node.on_message(now, msg));
                 }
                 Ev::Client { conn, req } => {
                     router.op_conn.insert(req.op, conn);
                     match req.write_value {
                         Some(v) => {
                             let now = clock.interval_now();
-                            let outs =
-                                node.client_write(now, req.op, req.key, v, req.payload.len() as u32);
-                            router.handle(outs);
+                            pending.extend(
+                                node.client_write(now, req.op, req.key, v, req.payload.len() as u32),
+                            );
                         }
                         None => read_batch.push((req.op, req.key)),
                     }
@@ -366,29 +458,22 @@ fn main_loop(cfg: ServerConfig, rx: Receiver<Ev>, status: Arc<Status>, stop: Arc
         if !read_batch.is_empty() {
             status.reads_batched.fetch_add(read_batch.len() as u64, Ordering::Relaxed);
             let now = clock.interval_now();
-            let outs = node.client_read_batch(now, &read_batch, |inp| match &engine {
+            pending.extend(node.client_read_batch(now, &read_batch, |inp| match &engine {
                 Some(e) => {
                     status.engine_batches.fetch_add(1, Ordering::Relaxed);
                     e.admit(inp).unwrap_or_else(|_| scalar_admission(inp))
                 }
                 None => scalar_admission(inp),
-            });
-            router.handle(outs);
+            }));
         }
-        // Post-drain publish, skipped on idle iterations (recv timeout
-        // with no due timers) — those change no node state.
+        // One durability barrier for everything the batch changed (the
+        // `Group` fsync policy's whole point), then externalize. Skipped
+        // on idle iterations (recv timeout with no due timers) — those
+        // change no node state.
         if had_events {
+            persist(&mut node, &mut storage);
+            router.handle(&mut pending);
             publish(&node, &status);
         }
     }
-}
-
-/// One connection attempt; None if the peer is down (retried on the
-/// next send).
-fn connect_peer(addr: &str, from: NodeId, delay: Duration) -> Option<DelayedSender> {
-    let s = TcpStream::connect_timeout(&addr.parse().ok()?, Duration::from_millis(50)).ok()?;
-    s.set_nodelay(true).ok();
-    let ds = DelayedSender::new(s, delay);
-    ds.send_vec(wire::encode(&Frame::HelloPeer { from }));
-    Some(ds)
 }

@@ -17,7 +17,7 @@
 //! per-link FIFO order.
 
 use std::io::{self, BufReader, IoSlice, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -29,6 +29,70 @@ const MAX_FRAME_BYTES: usize = 64 << 20;
 /// [`FrameReader`] scratch retained across frames. One outsized frame
 /// must not pin up to [`MAX_FRAME_BYTES`] per connection forever.
 const SCRATCH_RETAIN_BYTES: usize = 256 << 10;
+
+/// Bind a listener with `SO_REUSEADDR`, so a server respawned from its
+/// data dir can rebind its fixed port immediately: the killed process's
+/// accepted connections linger in TIME_WAIT on that port for ~60 s,
+/// which makes a plain `TcpListener::bind` fail with AddrInUse. The std
+/// library exposes no socket options pre-bind and external crates are
+/// off the table, so on unix we make the three raw libc calls ourselves;
+/// elsewhere (and for IPv6) this falls back to a plain bind.
+#[cfg(unix)]
+pub fn bind_reuse(addr: &str) -> io::Result<TcpListener> {
+    use std::net::SocketAddr;
+    use std::os::unix::io::FromRawFd;
+
+    let sa: SocketAddr = addr
+        .parse()
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("{addr}: {e}")))?;
+    let SocketAddr::V4(v4) = sa else { return TcpListener::bind(addr) };
+
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(fd: i32, level: i32, name: i32, value: *const u8, len: u32) -> i32;
+        fn bind(fd: i32, addr: *const u8, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let fail = |fd: i32| -> io::Error {
+            let e = io::Error::last_os_error();
+            close(fd);
+            e
+        };
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one as *const i32 as *const u8, 4) != 0 {
+            return Err(fail(fd));
+        }
+        // struct sockaddr_in: u16 family (host order), u16 port (BE),
+        // u32 addr (BE), 8 bytes zero padding.
+        let mut sin = [0u8; 16];
+        sin[0..2].copy_from_slice(&(AF_INET as u16).to_ne_bytes());
+        sin[2..4].copy_from_slice(&v4.port().to_be_bytes());
+        sin[4..8].copy_from_slice(&v4.ip().octets());
+        if bind(fd, sin.as_ptr(), sin.len() as u32) != 0 {
+            return Err(fail(fd));
+        }
+        if listen(fd, 128) != 0 {
+            return Err(fail(fd));
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(unix))]
+pub fn bind_reuse(addr: &str) -> io::Result<TcpListener> {
+    TcpListener::bind(addr)
+}
 
 /// Write one frame (length prefix + body) as a single coalesced
 /// vectored write. Loops only if the kernel takes a partial write.
@@ -170,6 +234,22 @@ mod tests {
         let a = TcpStream::connect(addr).unwrap();
         let (b, _) = l.accept().unwrap();
         (a, b)
+    }
+
+    #[test]
+    fn bind_reuse_rebinds_fixed_port() {
+        let l = bind_reuse("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        // Put a connection through the port and close server-side first,
+        // leaving a TIME_WAIT socket on the listener's port — the
+        // situation a respawned server faces.
+        let c = TcpStream::connect(&addr).unwrap();
+        let (s, _) = l.accept().unwrap();
+        drop(s);
+        drop(c);
+        drop(l);
+        let l2 = bind_reuse(&addr).expect("rebind with lingering TIME_WAIT");
+        assert_eq!(l2.local_addr().unwrap().to_string(), addr);
     }
 
     #[test]

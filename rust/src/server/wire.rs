@@ -65,16 +65,16 @@ impl Enc {
     pub fn reset(&mut self) {
         self.buf.clear();
     }
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn i64(&mut self, v: i64) {
+    pub(crate) fn i64(&mut self, v: i64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
     fn bytes(&mut self, v: &[u8]) {
@@ -100,7 +100,9 @@ impl Enc {
         }
     }
 
-    fn entry(&mut self, e: &Entry) {
+    /// Shared with the storage WAL, so log entries have one canonical
+    /// binary form on the wire and on disk.
+    pub(crate) fn entry(&mut self, e: &Entry) {
         self.u64(e.term);
         self.command(&e.command);
         self.interval(e.written_at);
@@ -249,6 +251,10 @@ impl<'a> Dec<'a> {
     fn remaining(&self) -> usize {
         self.b.len() - self.pos
     }
+    /// True once the whole input has been consumed.
+    pub(crate) fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
     /// Read an untrusted element count and validate it against the
     /// bytes actually left in the frame (each element occupies at
     /// least `min_bytes` on the wire), so a tiny corrupt frame cannot
@@ -264,16 +270,16 @@ impl<'a> Dec<'a> {
         }
         Ok(n)
     }
-    fn u8(&mut self) -> R<u8> {
+    pub(crate) fn u8(&mut self) -> R<u8> {
         Ok(self.take(1)?[0])
     }
-    fn u32(&mut self) -> R<u32> {
+    pub(crate) fn u32(&mut self) -> R<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> R<u64> {
+    pub(crate) fn u64(&mut self) -> R<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn i64(&mut self) -> R<i64> {
+    pub(crate) fn i64(&mut self) -> R<i64> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
     fn bytes(&mut self) -> R<Vec<u8>> {
@@ -296,7 +302,7 @@ impl<'a> Dec<'a> {
         })
     }
 
-    fn entry(&mut self) -> R<Entry> {
+    pub(crate) fn entry(&mut self) -> R<Entry> {
         Ok(Entry { term: self.u64()?, command: self.command()?, written_at: self.interval()? })
     }
 

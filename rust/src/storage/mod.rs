@@ -1,0 +1,191 @@
+//! Crash durability for the real (TCP) cluster.
+//!
+//! Raft's correctness argument assumes `currentTerm`, `votedFor`, and
+//! the log survive a crash (§5); in LeaseGuard the stakes are higher
+//! still because the timestamped log *is* the lease (paper §3). This
+//! module is the real-mode implementation of [`crate::raft::DurableState`]:
+//!
+//! * [`wal`] — CRC-framed append-only log of entry appends and
+//!   conflict truncations, recovered by longest-valid-prefix scan;
+//! * [`hardstate`] — tiny atomically-rewritten `(term, voted_for)` file;
+//! * [`Storage`] — the façade the server drives: record mutations as
+//!   they happen, then [`Storage::sync`] as the durability barrier
+//!   before any externalization (vote cast, append acked, entry sent).
+//!
+//! The simulator keeps using the in-memory `DurableState` directly —
+//! virtual time has no disks — so everything here is real-path only.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use crate::raft::log::Entry;
+use crate::raft::types::{Index, Term};
+use crate::raft::DurableState;
+use crate::NodeId;
+
+pub mod hardstate;
+pub mod wal;
+
+use wal::{Wal, WalRecord};
+
+/// When does an append become durable relative to externalization?
+///
+/// * `Always` — fsync inside every WAL append / hard-state write. The
+///   textbook setting; one fsync per record.
+/// * `Group` — buffer within an event-loop batch, one flush+fsync
+///   barrier before the batch's outputs are routed. Same safety (nothing
+///   externalized before it is durable), far fewer fsyncs under load.
+/// * `Never` — write but never fsync. Survives process kill (the kernel
+///   still has the pages) but not power loss; for tests and benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    Always,
+    Group,
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Whether this policy issues fsync calls at all.
+    pub fn fsyncs(self) -> bool {
+        !matches!(self, FsyncPolicy::Never)
+    }
+}
+
+impl FromStr for FsyncPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "group" => Ok(FsyncPolicy::Group),
+            "never" | "none" => Ok(FsyncPolicy::Never),
+            _ => Err(format!("bad fsync policy {s:?} (always|group|never)")),
+        }
+    }
+}
+
+/// On-disk durable state for one node: `<dir>/wal` + `<dir>/hard_state`.
+pub struct Storage {
+    dir: PathBuf,
+    wal: Wal,
+    policy: FsyncPolicy,
+    /// Hard state as last durably written — lets us skip rewrites when a
+    /// batch leaves `(term, voted_for)` unchanged.
+    hs: (Term, Option<NodeId>),
+}
+
+impl Storage {
+    /// Open (creating the directory if needed) and recover. The returned
+    /// [`DurableState`] is what [`crate::raft::Node::recover`] boots
+    /// from; its log dirty-tracking is cleared so recovery itself is
+    /// never re-persisted.
+    pub fn open(dir: &Path, policy: FsyncPolicy) -> io::Result<(Storage, DurableState)> {
+        fs::create_dir_all(dir)?;
+        let (wal, mut log) = Wal::open(&dir.join("wal"), policy)?;
+        let (hs_term, voted_for) = hardstate::read(dir);
+        // The log can be ahead of the hard-state file only in the
+        // torn-write window where the entries were never acked, but a
+        // term can never exceed what the log proves: take the max.
+        let current_term = hs_term.max(log.last_term());
+        log.take_dirty(); // replayed entries are already on disk
+        let storage = Storage { dir: dir.to_path_buf(), wal, policy, hs: (current_term, voted_for) };
+        Ok((storage, DurableState { current_term, voted_for, log }))
+    }
+
+    /// Record a hard-state change. No-op when unchanged since the last
+    /// durable write; otherwise immediately rewritten (atomic tmp +
+    /// rename — term bumps and votes are rare, so there is nothing to
+    /// batch).
+    pub fn persist_hard_state(&mut self, term: Term, voted_for: Option<NodeId>) -> io::Result<()> {
+        if self.hs == (term, voted_for) {
+            return Ok(());
+        }
+        hardstate::write(&self.dir, term, voted_for, self.policy)?;
+        self.hs = (term, voted_for);
+        Ok(())
+    }
+
+    /// Record one log append at `index` (buffered under `Group`).
+    pub fn append(&mut self, index: Index, entry: &Entry) -> io::Result<()> {
+        self.wal.append(&WalRecord::Append { index, entry: *entry })
+    }
+
+    /// Record a conflict truncation: drop entries after `after`.
+    pub fn truncate(&mut self, after: Index) -> io::Result<()> {
+        self.wal.append(&WalRecord::Truncate { after })
+    }
+
+    /// Durability barrier: everything recorded so far is on disk when
+    /// this returns. No-op if nothing is pending.
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.wal.sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::TimeInterval;
+    use crate::kv::Command;
+    use crate::testkit::TempDir;
+
+    fn e(term: u64) -> Entry {
+        Entry { term, command: Command::Noop, written_at: TimeInterval::exact(term as i64) }
+    }
+
+    #[test]
+    fn full_state_roundtrip() {
+        let d = TempDir::new("storage-roundtrip");
+        {
+            let (mut s, ds) = Storage::open(d.path(), FsyncPolicy::Group).unwrap();
+            assert_eq!(ds.current_term, 0);
+            assert!(ds.voted_for.is_none());
+            s.persist_hard_state(3, Some(1)).unwrap();
+            s.append(1, &e(1)).unwrap();
+            s.append(2, &e(3)).unwrap();
+            s.sync().unwrap();
+        }
+        let (_, ds) = Storage::open(d.path(), FsyncPolicy::Group).unwrap();
+        assert_eq!(ds.current_term, 3);
+        assert_eq!(ds.voted_for, Some(1));
+        assert_eq!(ds.log.last_index(), 2);
+        assert_eq!(ds.log.last_term(), 3);
+    }
+
+    #[test]
+    fn recovered_log_is_not_marked_dirty() {
+        let d = TempDir::new("storage-clean");
+        {
+            let (mut s, _) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+            s.append(1, &e(1)).unwrap();
+            s.sync().unwrap();
+        }
+        let (_, mut ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(ds.log.take_dirty(), None, "replay must not look like new writes");
+    }
+
+    #[test]
+    fn term_never_below_log_term() {
+        // Hard-state lost (crash before first vote persisted the term
+        // the log already carries): term is reconstructed from the log.
+        let d = TempDir::new("storage-hsmax");
+        {
+            let (mut s, _) = Storage::open(d.path(), FsyncPolicy::Group).unwrap();
+            s.append(1, &e(5)).unwrap();
+            s.sync().unwrap();
+        }
+        std::fs::remove_file(d.path().join(hardstate::FILE)).ok();
+        let (_, ds) = Storage::open(d.path(), FsyncPolicy::Group).unwrap();
+        assert_eq!(ds.current_term, 5);
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!("always".parse::<FsyncPolicy>(), Ok(FsyncPolicy::Always));
+        assert_eq!("group".parse::<FsyncPolicy>(), Ok(FsyncPolicy::Group));
+        assert_eq!("never".parse::<FsyncPolicy>(), Ok(FsyncPolicy::Never));
+        assert_eq!("none".parse::<FsyncPolicy>(), Ok(FsyncPolicy::Never));
+        assert!("sometimes".parse::<FsyncPolicy>().is_err());
+    }
+}

@@ -89,6 +89,39 @@ where
     }
 }
 
+/// A unique scratch directory under the system temp dir, removed on
+/// drop. For storage/recovery tests that need real files; the name is
+/// disambiguated by pid + a process-wide counter so parallel test
+/// threads (and stale dirs from a killed run) never collide.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    pub fn new(name: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("leaseguard-{name}-{}-{n}", std::process::id()));
+        // A leftover dir from a previous killed run with the same pid is
+        // stale state, not ours: clear it.
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
 /// Shrinker for vectors: propose dropping halves, then single elements.
 pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
     let mut out = Vec::new();

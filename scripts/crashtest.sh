@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Crash/restart soak: run the durability harness (rust/tests/
+# crash_restart.rs) N times with distinct workload seeds. Each round
+# hard-kills real server processes' threads mid-load and reboots them
+# from their WAL + hard-state files; a single failed round fails the
+# script.
+#
+#   scripts/crashtest.sh             # 5 rounds, seeds 1..5
+#   scripts/crashtest.sh 20          # 20 rounds, seeds 1..20
+#   scripts/crashtest.sh 3 900       # 3 rounds, seeds 901..903
+#
+# The harness binds real loopback ports and measures wall-clock
+# recovery windows, so rounds run serially (--test-threads=1) to keep
+# timing honest on loaded CI hosts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+rounds="${1:-5}"
+base="${2:-0}"
+
+cargo build --release --tests
+
+for ((i = 1; i <= rounds; i++)); do
+    seed=$((base + i))
+    echo "== crashtest round $i/$rounds (seed $seed) =="
+    CRASHTEST_SEED="$seed" cargo test --release --test crash_restart -- --test-threads=1
+done
+
+echo "crashtest: $rounds round(s) passed"
