@@ -8,7 +8,8 @@
 //! admission (scalar and, when artifacts exist, the XLA engine),
 //! zero-copy replication fan-out vs. the per-peer deep-copy baseline,
 //! wire encode with and without buffer reuse, loopback frame transport,
-//! histogram recording, and the client-frame codec.
+//! the kv read path (Arc snapshot vs. per-read deep copy), multi-group
+//! sim throughput, histogram recording, and the client-frame codec.
 
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
@@ -190,7 +191,7 @@ pub fn run_suite() -> Vec<BenchResult> {
         let n = 100_000u64;
         for _ in 0..n {
             enc.reset();
-            wire::encode_raft_into(0, &msg, &mut enc);
+            wire::encode_raft_into(0, 0, &msg, &mut enc);
             std::hint::black_box(&enc.buf);
         }
         n
@@ -200,7 +201,7 @@ pub fn run_suite() -> Vec<BenchResult> {
         let msg = batch_msg();
         let n = 100_000u64;
         for _ in 0..n {
-            let body = wire::encode(&Frame::Raft { from: 0, msg: msg.clone() });
+            let body = wire::encode(&Frame::Raft { from: 0, group: 0, msg: msg.clone() });
             std::hint::black_box(&body);
         }
         n
@@ -285,6 +286,58 @@ pub fn run_suite() -> Vec<BenchResult> {
         }
         reps * ops.len() as u64
     });
+
+    // ---- kv store read path -----------------------------------------
+    // `Store::read` returns an Arc snapshot: a read clones a pointer,
+    // never the value list. The baseline re-enacts the pre-refactor
+    // behavior — one `Vec` deep copy per read — on the same store shape
+    // (hot key holding a 1k-value list). The gap is the allocation.
+    bench(&mut out, "kv: read 1k-value hot key (Arc snapshot)", || {
+        let mut s = crate::kv::Store::new();
+        for v in 0..1000u64 {
+            s.apply(&Command::Put { key: 1, value: v, payload_bytes: 0 });
+        }
+        let n = 1_000_000u64;
+        let mut total = 0u64;
+        for _ in 0..n {
+            let snap = s.read(1);
+            total += snap.len() as u64;
+        }
+        assert_eq!(total, n * 1000);
+        n
+    });
+
+    bench(&mut out, "kv: read 1k-value hot key (deep-copy baseline)", || {
+        let mut s = crate::kv::Store::new();
+        for v in 0..1000u64 {
+            s.apply(&Command::Put { key: 1, value: v, payload_bytes: 0 });
+        }
+        let n = 100_000u64;
+        let mut total = 0u64;
+        for _ in 0..n {
+            let copy: Vec<u64> = (*s.read(1)).clone();
+            total += copy.len() as u64;
+            std::hint::black_box(&copy);
+        }
+        assert_eq!(total, n * 1000);
+        n
+    });
+
+    // ---- multi-Raft sharding ----------------------------------------
+    // One process-set hosting 1 vs 8 groups over the same simulated
+    // workload: aggregate events processed per wall-second. The per-op
+    // work is unchanged; more groups spread the log/lease serialization.
+    for groups in [1usize, 8] {
+        bench(&mut out, &format!("sim: full availability run, {groups} group(s)"), || {
+            let mut p = Params::default();
+            p.consistency = ConsistencyMode::LeaseGuard;
+            p.groups = groups;
+            p.duration_us = 1_000_000;
+            p.interarrival_us = 100.0;
+            let rep = Cluster::new(p).run();
+            rep.events_processed
+        });
+    }
 
     bench(&mut out, "metrics: histogram record+p99", || {
         let mut h = Histogram::new();

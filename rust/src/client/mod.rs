@@ -38,6 +38,7 @@ use crate::raft::{FailReason, OpResult};
 use crate::server::server::SharedApplies;
 use crate::server::transport::{write_frame, FrameReader};
 use crate::server::wire::{self, ClientReq, Enc, Frame};
+use crate::shard::{GroupId, ShardMap};
 use crate::workload::{OpSpec, Workload};
 use crate::Micros;
 
@@ -55,6 +56,8 @@ pub struct ClientReport {
 
 struct Pending {
     key: u32,
+    /// The Raft group this op's key routes to (fixed by the ShardMap).
+    group: GroupId,
     write_value: Option<u64>,
     start_ts: Micros,
     target: usize,
@@ -63,12 +66,18 @@ struct Pending {
 struct Shared {
     pending: Mutex<HashMap<u64, Pending>>,
     results: Mutex<Vec<(u64, OpResult, Micros, Micros)>>, // op, result, exec, end
-    believed_leader: AtomicUsize, // usize::MAX = unknown
-    /// Per-target consecutive non-NotLeader failures (give up on a
-    /// believed leader after a bound — a deposed leader can answer
-    /// NoLease indefinitely). Per target: a success from server A must
-    /// not excuse server B's streak.
+    /// Believed leader per group (usize::MAX = unknown). Each group
+    /// elects independently, so leader discovery, pinning, and
+    /// un-pinning are all per group: losing group 3's leader must not
+    /// discard a perfectly good belief about group 0.
+    believed_leader: Vec<AtomicUsize>,
+    /// Per-(group, target) consecutive non-NotLeader failures, indexed
+    /// `g * n_servers + target` (give up on a believed leader after a
+    /// bound — a deposed leader can answer NoLease indefinitely). A
+    /// success from server A must not excuse server B's streak, nor a
+    /// success in group 0 excuse the same server's streak in group 1.
     fail_streaks: Vec<AtomicUsize>,
+    n_servers: usize,
     done: AtomicBool,
 }
 
@@ -103,12 +112,18 @@ fn spawn_reader(stream: TcpStream, sh: Arc<Shared>) -> JoinHandle<()> {
             // deadline sweep are gone from `pending`: their late replies
             // influence neither belief nor the history (no double
             // completion).
-            let tgt = sh.pending.lock().unwrap().get(&resp.op).map(|p| p.target);
-            if let Some(t) = tgt {
+            let tgt = sh
+                .pending
+                .lock()
+                .unwrap()
+                .get(&resp.op)
+                .map(|p| (p.group as usize, p.target));
+            if let Some((g, t)) = tgt {
+                let streak = g * sh.n_servers + t;
                 match &resp.result {
                     OpResult::Failed(FailReason::NotLeader)
                     | OpResult::Failed(FailReason::Timeout) => {
-                        let _ = sh.believed_leader.compare_exchange(
+                        let _ = sh.believed_leader[g].compare_exchange(
                             t,
                             usize::MAX,
                             Ordering::Relaxed,
@@ -118,9 +133,11 @@ fn spawn_reader(stream: TcpStream, sh: Arc<Shared>) -> JoinHandle<()> {
                     OpResult::Failed(_) => {
                         // The target led but couldn't serve; give up
                         // after a persistent streak.
-                        if sh.fail_streaks[t].fetch_add(1, Ordering::Relaxed) >= FAIL_STREAK_LIMIT {
-                            sh.fail_streaks[t].store(0, Ordering::Relaxed);
-                            let _ = sh.believed_leader.compare_exchange(
+                        if sh.fail_streaks[streak].fetch_add(1, Ordering::Relaxed)
+                            >= FAIL_STREAK_LIMIT
+                        {
+                            sh.fail_streaks[streak].store(0, Ordering::Relaxed);
+                            let _ = sh.believed_leader[g].compare_exchange(
                                 t,
                                 usize::MAX,
                                 Ordering::Relaxed,
@@ -129,8 +146,8 @@ fn spawn_reader(stream: TcpStream, sh: Arc<Shared>) -> JoinHandle<()> {
                         }
                     }
                     _ => {
-                        sh.fail_streaks[t].store(0, Ordering::Relaxed);
-                        sh.believed_leader.store(t, Ordering::Relaxed);
+                        sh.fail_streaks[streak].store(0, Ordering::Relaxed);
+                        sh.believed_leader[g].store(t, Ordering::Relaxed);
                     }
                 }
             }
@@ -187,11 +204,16 @@ pub fn run_open_loop(
     applies: Option<SharedApplies>,
 ) -> std::io::Result<ClientReport> {
     let n_servers = addrs.len();
+    // The client's copy of the canonical keyspace partition; must agree
+    // with the servers' (both derive it from the same Params).
+    let map = ShardMap::new(params.groups);
+    let groups = map.groups();
     let shared = Arc::new(Shared {
         pending: Mutex::new(HashMap::new()),
         results: Mutex::new(Vec::new()),
-        believed_leader: AtomicUsize::new(usize::MAX),
-        fail_streaks: (0..n_servers).map(|_| AtomicUsize::new(0)).collect(),
+        believed_leader: (0..groups).map(|_| AtomicUsize::new(usize::MAX)).collect(),
+        fail_streaks: (0..groups * n_servers).map(|_| AtomicUsize::new(0)).collect(),
+        n_servers,
         done: AtomicBool::new(false),
     });
 
@@ -209,7 +231,9 @@ pub fn run_open_loop(
     let mut rng = Rng::new(params.seed ^ 0xC11E17);
     let mut workload = Workload::from_params(params, &mut rng);
     let schedule: Vec<OpSpec> = workload.schedule(params.duration_us);
-    let mut probe = 0usize;
+    // Per-group probe cursors: when group g's leader is unknown the
+    // writer round-robins that group's probes independently.
+    let mut probe = vec![0usize; groups];
     let mut sent: u64 = 0;
     let mut op_id: u64 = 0;
     // Ops failed client-side by the deadline sweep (op, pending, end):
@@ -249,7 +273,7 @@ pub fn run_open_loop(
                 .collect();
             for o in expired {
                 let p = pend.remove(&o).expect("expired op is pending");
-                let _ = shared.believed_leader.compare_exchange(
+                let _ = shared.believed_leader[p.group as usize].compare_exchange(
                     p.target,
                     usize::MAX,
                     Ordering::Relaxed,
@@ -258,19 +282,27 @@ pub fn run_open_loop(
                 deadline_failed.push((o, p, now));
             }
         }
+        let group = map.group_of(spec.key);
         let target = {
-            let b = shared.believed_leader.load(Ordering::Relaxed);
+            let b = shared.believed_leader[group as usize].load(Ordering::Relaxed);
             if b < n_servers {
                 b
             } else {
-                probe = (probe + 1) % n_servers;
-                probe
+                let p = &mut probe[group as usize];
+                *p = (*p + 1) % n_servers;
+                *p
             }
         };
         let start = RealClock::monotonic_us();
         shared.pending.lock().unwrap().insert(
             op,
-            Pending { key: spec.key, write_value: spec.write_value, start_ts: start, target },
+            Pending {
+                key: spec.key,
+                group,
+                write_value: spec.write_value,
+                start_ts: start,
+                target,
+            },
         );
         let req = Frame::ClientReq(ClientReq {
             op,
@@ -294,7 +326,7 @@ pub fn run_open_loop(
             };
         if !ok {
             // Server unreachable (crashed): fast-fail the op, probe on.
-            let _ = shared.believed_leader.compare_exchange(
+            let _ = shared.believed_leader[group as usize].compare_exchange(
                 target,
                 usize::MAX,
                 Ordering::Relaxed,
@@ -351,7 +383,7 @@ pub fn run_open_loop(
             }
         }
         let (kind, exec_ts) = match (&result, p.write_value) {
-            (OpResult::ReadOk(v), _) => (OpKind::Read { result: v.clone() }, Some(exec)),
+            (OpResult::ReadOk(v), _) => (OpKind::Read { result: (**v).clone() }, Some(exec)),
             (_, Some(v)) => (OpKind::Append { value: v }, None),
             (_, None) => (OpKind::Read { result: Vec::new() }, None),
         };

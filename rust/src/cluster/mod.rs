@@ -19,6 +19,7 @@ use crate::history::{History, HistoryEntry, OpKind};
 use crate::metrics::{Histogram, TimeSeries};
 use crate::prob::Rng;
 use crate::raft::{FailReason, Message, Node, NodeConfig, OpId, OpResult, Output, Role, TimerKind};
+use crate::shard::{group_seed, GroupId, ShardMap};
 use crate::sim::network::{Delivery, NetConfig};
 use crate::sim::{EventQueue, Fault, NemesisSchedule, SimNetwork, TimedFault};
 use crate::workload::{OpSpec, Workload};
@@ -35,11 +36,13 @@ enum Event {
     /// `epoch` is the destination's crash epoch at send time; a delivery
     /// queued before the destination's crash is dropped at delivery time
     /// (a rebooted process never receives its predecessor's packets).
-    Deliver { to: NodeId, msg: Message, epoch: u64 },
+    /// `group` routes the message to the right Raft group on the
+    /// destination process (the sim analogue of the wire-frame group id).
+    Deliver { to: NodeId, group: GroupId, msg: Message, epoch: u64 },
     /// Timers carry the same crash-epoch stamp: a timer armed by the
     /// pre-crash incarnation must not fire on the restarted one (each
     /// leaked election-timer chain re-arms itself forever).
-    Timer { node: NodeId, kind: TimerKind, epoch: u64 },
+    Timer { node: NodeId, group: GroupId, kind: TimerKind, epoch: u64 },
     ClientOp(OpSpec),
     OpTimeout(OpId),
     /// A Nemesis fault fires (role-relative faults resolve now).
@@ -57,6 +60,7 @@ const CRASH_DETECT_US: Micros = 1000;
 #[derive(Debug)]
 struct PendingOp {
     key: u32,
+    group: GroupId,
     write_value: Option<u64>,
     start_ts: Micros,
 }
@@ -73,6 +77,8 @@ pub struct RunReport {
     pub history: History,
     pub elections: u64,
     pub events_processed: u64,
+    /// Per-node counters, flattened `group * nodes + process` (so with
+    /// one group this is simply indexed by process id, as before).
     pub node_stats: Vec<crate::raft::node::NodeStats>,
     /// Limbo-region length observed on the post-crash leader (paper
     /// Fig 9 reports 37).
@@ -85,19 +91,26 @@ pub struct RunReport {
 pub struct Cluster {
     params: Params,
     queue: EventQueue<Event>,
+    /// All Raft nodes across all groups, flattened `g * nodes + p`: a
+    /// process `p` hosts one node per group, all sharing `clocks[p]` and
+    /// the process-level `net` liveness/epoch state (a crash takes every
+    /// group on the process down together, like the real server).
     nodes: Vec<Node>,
+    /// Keyspace partition; group 0 is the whole keyspace when groups=1.
+    shard_map: ShardMap,
     clocks: Vec<SimClock>,
     net: SimNetwork,
     rng: Rng,
 
-    // client state
-    believed_leader: Option<NodeId>,
+    // client state (leader discovery is per group — each group elects
+    // independently, so the client tracks a belief per group)
+    believed_leader: Vec<Option<NodeId>>,
     client_rng: Rng,
-    probe_next: NodeId,
-    /// Consecutive failed ops against the believed leader; clients give
-    /// up on a target that persistently fails (e.g. a deposed leader
-    /// answering NoLease forever after a partition).
-    fail_streak: u32,
+    probe_next: Vec<NodeId>,
+    /// Consecutive failed ops against the believed leader of each group;
+    /// clients give up on a target that persistently fails (e.g. a
+    /// deposed leader answering NoLease forever after a partition).
+    fail_streak: Vec<u32>,
     pending: HashMap<OpId, PendingOp>,
     last_target_for: HashMap<OpId, NodeId>,
     next_op_id: OpId,
@@ -133,34 +146,46 @@ impl Cluster {
             broken: params.clock_broken,
         };
         let client_rng = rng.fork();
+        let groups = params.groups;
         let mut queue = EventQueue::new();
-        let mut nodes = Vec::with_capacity(n);
+        let mut nodes = Vec::with_capacity(groups * n);
         let mut clocks = Vec::with_capacity(n);
-        for id in 0..n {
-            let mut clock = SimClock::new(clock_cfg.clone(), &mut rng);
-            let now = clock.at(0);
-            let (node, outs) = Node::new(NodeConfig::from_params(id, &params), params.seed, now);
-            nodes.push(node);
-            clocks.push(clock);
-            for o in outs {
-                if let Output::SetTimer { kind, after } = o {
-                    let epoch = net.epoch(id);
-                    queue.schedule_in(after, Event::Timer { node: id, kind, epoch });
+        // Group-major node layout (`g * n + p`): group 0 is created
+        // exactly as the pre-sharding single-group cluster was — same
+        // RNG draws, same seed — so 1-group runs replay byte-identically.
+        for g in 0..groups as GroupId {
+            for id in 0..n {
+                if g == 0 {
+                    clocks.push(SimClock::new(clock_cfg.clone(), &mut rng));
+                }
+                let now = clocks[id].at(0);
+                let (node, outs) = Node::new(
+                    NodeConfig::from_params(id, &params),
+                    group_seed(params.seed, g),
+                    now,
+                );
+                nodes.push(node);
+                for o in outs {
+                    if let Output::SetTimer { kind, after } = o {
+                        let epoch = net.epoch(id);
+                        queue.schedule_in(after, Event::Timer { node: id, group: g, kind, epoch });
+                    }
                 }
             }
         }
         Cluster {
             series: TimeSeries::new(params.bucket_us, params.duration_us),
+            shard_map: ShardMap::new(groups),
             params,
             queue,
             nodes,
             clocks,
             net,
             rng,
-            believed_leader: None,
+            believed_leader: vec![None; groups],
             client_rng,
-            probe_next: 0,
-            fail_streak: 0,
+            probe_next: vec![0; groups],
+            fail_streak: vec![0; groups],
             pending: HashMap::new(),
             last_target_for: HashMap::new(),
             next_op_id: 1,
@@ -186,11 +211,13 @@ impl Cluster {
     /// Run the full experiment and return the report.
     pub fn run(mut self) -> RunReport {
         // ---- phase 1: bootstrap to the first committed no-op ----
+        // Multi-group: every group must have a committed leader before
+        // the workload starts, so t0 means the same thing per shard.
         let deadline = 60_000_000; // sanity bound
         while !self.stable_leader_exists() {
             let Some((_, ev)) = self.queue.pop() else { panic!("bootstrap starved") };
             self.handle(ev);
-            assert!(self.queue.now() < deadline, "no leader within 60s of sim time");
+            assert!(self.queue.now() < deadline, "no leader in every group within 60s of sim time");
         }
         self.t0 = self.queue.now();
 
@@ -256,10 +283,18 @@ impl Cluster {
         }
     }
 
+    /// Flattened index of group `g`'s node on process `p`.
+    fn idx(&self, g: GroupId, p: NodeId) -> usize {
+        g as usize * self.params.nodes + p
+    }
+
     fn stable_leader_exists(&self) -> bool {
-        self.nodes
-            .iter()
-            .any(|n| n.role() == Role::Leader && n.commit_index() >= 1)
+        let n = self.params.nodes;
+        (0..self.params.groups).all(|g| {
+            self.nodes[g * n..(g + 1) * n]
+                .iter()
+                .any(|node| node.role() == Role::Leader && node.commit_index() >= 1)
+        })
     }
 
     fn now_interval(&mut self, node: NodeId) -> TimeInterval {
@@ -269,23 +304,25 @@ impl Cluster {
 
     fn handle(&mut self, ev: Event) {
         match ev {
-            Event::Deliver { to, msg, epoch } => {
+            Event::Deliver { to, group, msg, epoch } => {
                 // Crash-epoch check: `is_up` alone would happily deliver
                 // a pre-crash message to the restarted incarnation.
                 if !self.net.is_up(to) || self.net.epoch(to) != epoch {
                     return;
                 }
                 let now = self.now_interval(to);
-                let outs = self.nodes[to].on_message(now, msg);
-                self.process_outputs(to, outs);
+                let i = self.idx(group, to);
+                let outs = self.nodes[i].on_message(now, msg);
+                self.process_outputs(to, group, outs);
             }
-            Event::Timer { node, kind, epoch } => {
+            Event::Timer { node, group, kind, epoch } => {
                 if !self.net.is_up(node) || self.net.epoch(node) != epoch {
                     return;
                 }
                 let now = self.now_interval(node);
-                let outs = self.nodes[node].on_timer(now, kind);
-                self.process_outputs(node, outs);
+                let i = self.idx(group, node);
+                let outs = self.nodes[i].on_timer(now, kind);
+                self.process_outputs(node, group, outs);
             }
             Event::ClientOp(spec) => self.start_client_op(spec),
             Event::OpTimeout(op) => {
@@ -296,16 +333,20 @@ impl Cluster {
             }
             Event::Fault(f) => self.apply_fault(f),
             Event::Restart(node) => {
+                // A process restart reboots every group it hosts.
                 self.net.restart(node);
                 let now = self.now_interval(node);
-                let outs = self.nodes[node].restart(now);
-                self.process_outputs(node, outs);
+                for g in 0..self.params.groups as GroupId {
+                    let i = self.idx(g, node);
+                    let outs = self.nodes[i].restart(now);
+                    self.process_outputs(node, g, outs);
+                }
             }
             Event::End => {}
         }
     }
 
-    fn process_outputs(&mut self, from: NodeId, outs: Vec<Output>) {
+    fn process_outputs(&mut self, from: NodeId, group: GroupId, outs: Vec<Output>) {
         let now = self.queue.now();
         for o in outs {
             match o {
@@ -313,21 +354,24 @@ impl Cluster {
                     let epoch = self.net.epoch(to);
                     match self.net.send(from, to) {
                         Delivery::After(d) => {
-                            self.queue.schedule(now + d, Event::Deliver { to, msg, epoch });
+                            self.queue.schedule(now + d, Event::Deliver { to, group, msg, epoch });
                         }
                         Delivery::Twice(d1, d2) => {
                             // Duplication window: two copies, O(1) clone
                             // (entry batches are Arc-backed views).
-                            self.queue
-                                .schedule(now + d1, Event::Deliver { to, msg: msg.clone(), epoch });
-                            self.queue.schedule(now + d2, Event::Deliver { to, msg, epoch });
+                            self.queue.schedule(
+                                now + d1,
+                                Event::Deliver { to, group, msg: msg.clone(), epoch },
+                            );
+                            self.queue.schedule(now + d2, Event::Deliver { to, group, msg, epoch });
                         }
                         Delivery::Dropped => {}
                     }
                 }
                 Output::SetTimer { kind, after } => {
                     let epoch = self.net.epoch(from);
-                    self.queue.schedule(now + after, Event::Timer { node: from, kind, epoch });
+                    self.queue
+                        .schedule(now + after, Event::Timer { node: from, group, kind, epoch });
                 }
                 Output::Reply { op, result } => self.finish_op(op, result, now),
                 Output::Applied { key, value } => self.history.applies.record(key, value, now),
@@ -335,7 +379,8 @@ impl Cluster {
                     self.elections += 1;
                     // Record the new leader's limbo-region size once a
                     // post-crash election happens (Fig 9's "37 entries").
-                    if let Some(l) = self.nodes[from].lease_state() {
+                    let i = self.idx(group, from);
+                    if let Some(l) = self.nodes[i].lease_state() {
                         self.limbo_len = self.limbo_len.max(l.limbo_len());
                     }
                 }
@@ -350,6 +395,10 @@ impl Cluster {
         let now = self.queue.now();
         let op = self.next_op_id;
         self.next_op_id += 1;
+        // Route by key first — each group has its own leader, so the
+        // target choice below is per group.
+        let group = self.shard_map.group_of(spec.key);
+        let g = group as usize;
         // Pick a target: believed leader, else probe round-robin. With
         // probability `client_stray_prob` the op goes to a random node
         // instead — modelling the paper's fleet of concurrent clients,
@@ -359,78 +408,80 @@ impl Cluster {
         let target = if stray {
             self.client_rng.below(self.params.nodes as u64) as usize
         } else {
-            match self.believed_leader {
+            match self.believed_leader[g] {
                 Some(l) => l,
                 None => {
-                    let t = self.probe_next % self.params.nodes;
-                    self.probe_next = (self.probe_next + 1) % self.params.nodes;
+                    let t = self.probe_next[g] % self.params.nodes;
+                    self.probe_next[g] = (self.probe_next[g] + 1) % self.params.nodes;
                     t
                 }
             }
         };
         self.pending.insert(
             op,
-            PendingOp { key: spec.key, write_value: spec.write_value, start_ts: now },
+            PendingOp { key: spec.key, group, write_value: spec.write_value, start_ts: now },
         );
         self.queue
             .schedule(now + self.params.op_timeout_us, Event::OpTimeout(op));
         if !self.net.is_up(target) {
             // Connection refused / broken pipe: fast failure, try
             // another node next time.
-            self.believed_leader = None;
+            self.believed_leader[g] = None;
             let fail_at = now + 1000;
             let op_copy = op;
             self.queue.schedule(fail_at, Event::OpTimeout(op_copy));
             return;
         }
         let nowi = self.now_interval(target);
+        let i = self.idx(group, target);
         let outs = match spec.write_value {
             Some(v) => {
-                self.nodes[target].client_write(nowi, op, spec.key, v, spec.payload_bytes)
+                self.nodes[i].client_write(nowi, op, spec.key, v, spec.payload_bytes)
             }
-            None => self.nodes[target].client_read(nowi, op, spec.key),
+            None => self.nodes[i].client_read(nowi, op, spec.key),
         };
         // Leader-discovery belief update happens in finish_op (replies
         // other than NotLeader imply the target led).
         self.last_target_for.insert(op, target);
-        self.process_outputs(target, outs);
+        self.process_outputs(target, group, outs);
     }
 
     fn finish_op(&mut self, op: OpId, result: OpResult, now: Micros) {
         let Some(p) = self.pending.remove(&op) else { return };
         let target = self.last_target_for.remove(&op);
+        let g = p.group as usize;
         let is_read = p.write_value.is_none();
         let success = result.is_ok();
         // Client leader discovery: pin on success; unpin on NotLeader /
         // unreachability; leave unchanged on NoLease-style failures (the
-        // node led, it just couldn't serve yet).
+        // node led, it just couldn't serve yet). All per group.
         match &result {
             OpResult::Failed(FailReason::NotLeader) => {
-                if self.believed_leader == target {
-                    self.believed_leader = None;
+                if self.believed_leader[g] == target {
+                    self.believed_leader[g] = None;
                 }
             }
             OpResult::Failed(FailReason::Timeout) => {
-                if self.believed_leader == target || target.is_none() {
-                    self.believed_leader = None;
+                if self.believed_leader[g] == target || target.is_none() {
+                    self.believed_leader[g] = None;
                 }
             }
             OpResult::Failed(_) => {
                 // NoLease / LimboConflict / gate failures: the target
                 // led, so stay — but not forever (a partitioned deposed
                 // leader answers NoLease indefinitely).
-                if self.believed_leader.is_some() && self.believed_leader == target {
-                    self.fail_streak += 1;
-                    if self.fail_streak >= 20 {
-                        self.believed_leader = None;
-                        self.fail_streak = 0;
+                if self.believed_leader[g].is_some() && self.believed_leader[g] == target {
+                    self.fail_streak[g] += 1;
+                    if self.fail_streak[g] >= 20 {
+                        self.believed_leader[g] = None;
+                        self.fail_streak[g] = 0;
                     }
                 }
             }
             _ => {
                 if let Some(t) = target {
-                    self.believed_leader = Some(t);
-                    self.fail_streak = 0;
+                    self.believed_leader[g] = Some(t);
+                    self.fail_streak[g] = 0;
                 }
             }
         }
@@ -447,7 +498,7 @@ impl Cluster {
         }
         // History.
         let (kind, exec) = match (&result, p.write_value) {
-            (OpResult::ReadOk(v), _) => (OpKind::Read { result: v.clone() }, Some(now)),
+            (OpResult::ReadOk(v), _) => (OpKind::Read { result: (**v).clone() }, Some(now)),
             (_, Some(v)) => (OpKind::Append { value: v }, None),
             (_, None) => (OpKind::Read { result: Vec::new() }, None),
         };
@@ -470,8 +521,13 @@ impl Cluster {
     // ------------------------------------------------------------ faults
 
     /// The highest-term live leader (the active one), if any.
+    ///
+    /// Multi-group: role-relative faults (CrashLeader, PartitionLeader,
+    /// …) resolve against **group 0**'s leader. Crashes are process-wide
+    /// anyway, and group 0 is the reference group for scenario authors;
+    /// target other groups' leaders with node-addressed faults.
     fn live_leader(&self) -> Option<NodeId> {
-        self.nodes
+        self.nodes[..self.params.nodes]
             .iter()
             .enumerate()
             .filter(|(i, n)| n.role() == Role::Leader && self.net.is_up(*i))
@@ -491,9 +547,9 @@ impl Cluster {
         node < self.params.nodes
     }
 
-    /// The lowest-id live non-leader, if any.
+    /// The lowest-id live non-leader (of group 0), if any.
     fn live_follower(&self) -> Option<NodeId> {
-        self.nodes
+        self.nodes[..self.params.nodes]
             .iter()
             .enumerate()
             .find(|(i, n)| n.role() != Role::Leader && self.net.is_up(*i))
@@ -557,10 +613,11 @@ impl Cluster {
                 }
             }
             Fault::PlannedHandover => {
+                // Group 0's leader hands over (see [`Self::live_leader`]).
                 if let Some(v) = self.live_leader() {
                     let now = self.now_interval(v);
                     let outs = self.nodes[v].begin_stepdown(now);
-                    self.process_outputs(v, outs);
+                    self.process_outputs(v, 0, outs);
                 }
             }
         }
@@ -672,7 +729,7 @@ mod tests {
             last_log_index: u64::MAX,
             last_log_term: 99,
         };
-        c.handle(Event::Deliver { to: victim, msg: poison.clone(), epoch: old_epoch });
+        c.handle(Event::Deliver { to: victim, group: 0, msg: poison.clone(), epoch: old_epoch });
         assert_eq!(
             c.nodes[victim].term(),
             term_before,
@@ -680,7 +737,7 @@ mod tests {
         );
         // A fresh post-restart send is delivered normally.
         let epoch = c.net.epoch(victim);
-        c.handle(Event::Deliver { to: victim, msg: poison, epoch });
+        c.handle(Event::Deliver { to: victim, group: 0, msg: poison, epoch });
         assert_eq!(c.nodes[victim].term(), 99);
     }
 

@@ -99,6 +99,12 @@ impl FromStr for ConsistencyMode {
 pub struct Params {
     // ---- replica set / protocol ----
     pub nodes: usize,
+    /// Independent Raft groups hosted per process (multi-Raft sharding).
+    /// The keyspace is hash-partitioned across groups by
+    /// [`crate::shard::ShardMap`]; each group runs the full protocol
+    /// (its own leader, lease, limbo) unchanged. Max 64 (status
+    /// bitmasks are u64).
+    pub groups: usize,
     pub consistency: ConsistencyMode,
     /// Election timeout ET, µs (paper: 500 ms in sims; 12-300 ms in [42];
     /// production 1-10 s).
@@ -172,6 +178,7 @@ impl Default for Params {
     fn default() -> Self {
         Params {
             nodes: 3,
+            groups: 1,
             consistency: ConsistencyMode::LeaseGuard,
             election_timeout_us: 500_000,
             election_jitter_us: 150_000,
@@ -219,6 +226,7 @@ impl Params {
         }
         match key {
             "nodes" => self.nodes = p(key, value)?,
+            "groups" => self.groups = p(key, value)?,
             "consistency" => self.consistency = p(key, value)?,
             "election_timeout_us" => self.election_timeout_us = p(key, value)?,
             "election_jitter_us" => self.election_jitter_us = p(key, value)?,
@@ -276,6 +284,13 @@ impl Params {
         if self.nodes < 1 || self.nodes % 2 == 0 {
             return Err(format!("nodes must be odd and >= 1, got {}", self.nodes));
         }
+        if !(1..=crate::shard::MAX_GROUPS).contains(&self.groups) {
+            return Err(format!(
+                "groups must be in 1..={}, got {}",
+                crate::shard::MAX_GROUPS,
+                self.groups
+            ));
+        }
         if !(0.0..=1.0).contains(&self.write_fraction) {
             return Err("write_fraction must be in [0,1]".into());
         }
@@ -295,6 +310,7 @@ impl Params {
     pub fn dump(&self) -> String {
         let mut m = BTreeMap::new();
         m.insert("nodes", self.nodes.to_string());
+        m.insert("groups", self.groups.to_string());
         m.insert("consistency", self.consistency.to_string());
         m.insert("election_timeout_us", self.election_timeout_us.to_string());
         m.insert("election_jitter_us", self.election_jitter_us.to_string());
@@ -376,6 +392,17 @@ mod tests {
     fn validation_rejects_even_nodes() {
         let mut p = Params::default();
         p.nodes = 4;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validation_bounds_groups() {
+        let mut p = Params::default();
+        p.set("groups", "16").unwrap();
+        p.validate().unwrap();
+        p.groups = 0;
+        assert!(p.validate().is_err());
+        p.groups = 65;
         assert!(p.validate().is_err());
     }
 

@@ -7,6 +7,10 @@
 //! quorum hits its ceiling roughly 10× below LeaseGuard; LeaseGuard ≈
 //! Ongaro ≈ inconsistent. Offered loads are scaled by `Scale` for this
 //! single-host testbed.
+//!
+//! Beyond the paper: `--groups G` adds a multi-Raft axis, re-running the
+//! sweep at group counts 1, 2, 4, …, G to show aggregate throughput
+//! scaling as one process hosts many lease-guarded groups.
 
 use std::time::Duration;
 
@@ -31,7 +35,20 @@ pub fn run(base: &Params, scale: Scale, out_dir: &str) -> Result<String> {
         .map(|x| x * scale.0.max(0.05))
         .collect();
     let write_ratios = [0.05f64, 1.0 / 3.0];
+    // Multi-Raft axis (`--groups G`): sweep group counts 1, 2, 4, …, G.
+    // With G=1 (the default) this collapses to the paper's original
+    // single-group figure. More groups mean more independent leaders
+    // sharing the same three processes — aggregate throughput should
+    // rise until the processes themselves saturate.
+    let mut group_counts = vec![1usize];
+    while group_counts.last().unwrap() * 2 <= base.groups {
+        group_counts.push(group_counts.last().unwrap() * 2);
+    }
+    if *group_counts.last().unwrap() != base.groups {
+        group_counts.push(base.groups);
+    }
     let mut table = Table::new([
+        "groups",
         "write_ratio",
         "mode",
         "offered_ops_s",
@@ -40,6 +57,7 @@ pub fn run(base: &Params, scale: Scale, out_dir: &str) -> Result<String> {
         "write_p90",
     ]);
     let mut csv = Table::new([
+        "groups",
         "write_ratio",
         "mode",
         "offered_ops_s",
@@ -47,52 +65,63 @@ pub fn run(base: &Params, scale: Scale, out_dir: &str) -> Result<String> {
         "read_p90_us",
         "write_p90_us",
     ]);
-    for &wr in &write_ratios {
-        for mode in modes {
-            let mut saturated = false;
-            for &load in &offered {
-                if saturated {
-                    break;
+    for &gc in &group_counts {
+        for &wr in &write_ratios {
+            for mode in modes {
+                let mut saturated = false;
+                for &load in &offered {
+                    if saturated {
+                        break;
+                    }
+                    let mut p = base.clone();
+                    p.consistency = mode;
+                    p.groups = gc;
+                    p.interarrival_us = 1_000_000.0 / load;
+                    p.write_fraction = wr;
+                    p.value_bytes = 1024;
+                    p.duration_us = 1_500_000;
+                    p.lease_duration_us = 2_000_000;
+                    p.heartbeat_us = 150_000;
+                    p.election_timeout_us = 800_000;
+                    p.crash_leader_at_us = 0;
+                    let cluster = RealCluster::spawn(&p, Duration::ZERO, None)?;
+                    if gc > 1 {
+                        cluster
+                            .wait_for_all_leaders(gc, Duration::from_secs(10))
+                            .ok_or_else(|| anyhow::anyhow!("not all {gc} groups elected"))?;
+                    } else {
+                        cluster
+                            .wait_for_leader(Duration::from_secs(10))
+                            .ok_or_else(|| anyhow::anyhow!("no leader"))?;
+                    }
+                    let rep = run_open_loop(&cluster.addrs, &p, None)?;
+                    cluster.shutdown();
+                    let dur_s = p.duration_us as f64 / 1e6;
+                    let achieved =
+                        (rep.read_latency.count() + rep.write_latency.count()) as f64 / dur_s;
+                    let p90 = rep.read_latency.p90().max(rep.write_latency.p90());
+                    if p90 > 100_000 {
+                        saturated = true; // paper's stop rule: latency > 100 ms
+                    }
+                    table.row([
+                        gc.to_string(),
+                        format!("{wr:.2}"),
+                        mode.to_string(),
+                        format!("{load:.0}"),
+                        format!("{achieved:.0}"),
+                        fmt_us(rep.read_latency.p90()),
+                        fmt_us(rep.write_latency.p90()),
+                    ]);
+                    csv.row([
+                        gc.to_string(),
+                        format!("{wr}"),
+                        mode.to_string(),
+                        format!("{load:.0}"),
+                        format!("{achieved:.0}"),
+                        rep.read_latency.p90().to_string(),
+                        rep.write_latency.p90().to_string(),
+                    ]);
                 }
-                let mut p = base.clone();
-                p.consistency = mode;
-                p.interarrival_us = 1_000_000.0 / load;
-                p.write_fraction = wr;
-                p.value_bytes = 1024;
-                p.duration_us = 1_500_000;
-                p.lease_duration_us = 2_000_000;
-                p.heartbeat_us = 150_000;
-                p.election_timeout_us = 800_000;
-                p.crash_leader_at_us = 0;
-                let cluster = RealCluster::spawn(&p, Duration::ZERO, None)?;
-                cluster
-                    .wait_for_leader(Duration::from_secs(10))
-                    .ok_or_else(|| anyhow::anyhow!("no leader"))?;
-                let rep = run_open_loop(&cluster.addrs, &p, None)?;
-                cluster.shutdown();
-                let dur_s = p.duration_us as f64 / 1e6;
-                let achieved =
-                    (rep.read_latency.count() + rep.write_latency.count()) as f64 / dur_s;
-                let p90 = rep.read_latency.p90().max(rep.write_latency.p90());
-                if p90 > 100_000 {
-                    saturated = true; // paper's stop rule: latency > 100 ms
-                }
-                table.row([
-                    format!("{wr:.2}"),
-                    mode.to_string(),
-                    format!("{load:.0}"),
-                    format!("{achieved:.0}"),
-                    fmt_us(rep.read_latency.p90()),
-                    fmt_us(rep.write_latency.p90()),
-                ]);
-                csv.row([
-                    format!("{wr}"),
-                    mode.to_string(),
-                    format!("{load:.0}"),
-                    format!("{achieved:.0}"),
-                    rep.read_latency.p90().to_string(),
-                    rep.write_latency.p90().to_string(),
-                ]);
             }
         }
     }

@@ -105,6 +105,39 @@ impl RealCluster {
         }
     }
 
+    /// Multi-group: wait until EVERY group `0..params.groups` has a
+    /// leader with commit somewhere in the cluster, up to `timeout`.
+    /// Returns the per-group leader indices. Groups elect independently
+    /// (their timers are independently seeded), so the leaders usually
+    /// spread across servers.
+    pub fn wait_for_all_leaders(&self, groups: usize, timeout: Duration) -> Option<Vec<usize>> {
+        let want: u64 = if groups == 64 { u64::MAX } else { (1u64 << groups) - 1 };
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let mut covered = 0u64;
+            let mut leader_of = vec![usize::MAX; groups];
+            for (i, h) in self.handles.iter().enumerate() {
+                if let Some(h) = h {
+                    let led = h.status.leader_groups.load(Ordering::Relaxed)
+                        & h.status.committed_groups.load(Ordering::Relaxed);
+                    for (g, l) in leader_of.iter_mut().enumerate() {
+                        if led & (1 << g) != 0 {
+                            *l = i;
+                        }
+                    }
+                    covered |= led;
+                }
+            }
+            if covered & want == want {
+                return Some(leader_of);
+            }
+            if std::time::Instant::now() > deadline {
+                return None;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
     /// Kill server `i` (crash semantics).
     pub fn kill(&mut self, i: usize) {
         if let Some(h) = self.handles[i].take() {
@@ -147,6 +180,22 @@ mod tests {
         let c = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
         let leader = c.wait_for_leader(Duration::from_secs(5));
         assert!(leader.is_some(), "no leader elected");
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_group_cluster_elects_every_group() {
+        let mut p = Params::default();
+        p.nodes = 3;
+        p.groups = 4;
+        p.election_timeout_us = 150_000;
+        p.election_jitter_us = 100_000;
+        p.heartbeat_us = 50_000;
+        let c = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
+        let leaders =
+            c.wait_for_all_leaders(4, Duration::from_secs(10)).expect("all groups elect");
+        assert_eq!(leaders.len(), 4);
+        assert!(leaders.iter().all(|&l| l < 3), "{leaders:?}");
         c.shutdown();
     }
 

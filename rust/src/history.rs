@@ -99,6 +99,19 @@ impl ApplyLog {
     pub fn is_empty(&self) -> bool {
         self.first_applied.is_empty()
     }
+
+    /// Split by keyspace partition: apply record for `key` goes to bucket
+    /// `part(key)`. Global apply sequence numbers are preserved, so each
+    /// bucket's per-key ordering is exactly what it was in the whole log.
+    fn partition(&self, buckets: usize, part: impl Fn(u32) -> usize) -> Vec<ApplyLog> {
+        let mut out = vec![ApplyLog::new(); buckets];
+        for (&(key, value), &(t, s)) in &self.first_applied {
+            let b = &mut out[part(key)];
+            b.first_applied.insert((key, value), (t, s));
+            b.seq = b.seq.max(s);
+        }
+        out
+    }
 }
 
 /// A whole run: per-op entries + the apply log.
@@ -111,6 +124,24 @@ pub struct History {
 impl History {
     pub fn new() -> Self {
         History::default()
+    }
+
+    /// Split a multi-group run's history into one history per shard,
+    /// routing every entry and apply record by `map.group_of(key)`.
+    /// Operations never span keys, so the split is exact: each per-shard
+    /// history is a complete, self-contained history of that group and
+    /// can be linearizability-checked independently.
+    pub fn partition_by_shard(&self, map: &crate::shard::ShardMap) -> Vec<History> {
+        let groups = map.groups();
+        let applies = self.applies.partition(groups, |k| map.group_of(k) as usize);
+        let mut out: Vec<History> = applies
+            .into_iter()
+            .map(|a| History { entries: Vec::new(), applies: a })
+            .collect();
+        for e in &self.entries {
+            out[map.group_of(e.key) as usize].entries.push(e.clone());
+        }
+        out
     }
 }
 
@@ -125,6 +156,40 @@ mod tests {
         a.record(1, 10, 200); // follower applying later: ignored
         assert_eq!(a.applied_at(1, 10), Some(100));
         assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn partition_by_shard_is_exact_and_total() {
+        let map = crate::shard::ShardMap::new(4);
+        let mut h = History::new();
+        for key in 0..32u32 {
+            h.applies.record(key, u64::from(key) * 10, 100);
+            h.entries.push(HistoryEntry {
+                op: u64::from(key) + 1,
+                key,
+                kind: OpKind::Append { value: u64::from(key) * 10 },
+                start_ts: 0,
+                end_ts: 50,
+                execution_ts: None,
+                success: true,
+                fail: None,
+            });
+        }
+        let shards = h.partition_by_shard(&map);
+        assert_eq!(shards.len(), 4);
+        let total_entries: usize = shards.iter().map(|s| s.entries.len()).sum();
+        let total_applies: usize = shards.iter().map(|s| s.applies.len()).sum();
+        assert_eq!(total_entries, h.entries.len());
+        assert_eq!(total_applies, h.applies.len());
+        for (g, s) in shards.iter().enumerate() {
+            for e in &s.entries {
+                assert_eq!(map.group_of(e.key) as usize, g);
+                // The entry's apply record travelled with it.
+                if let OpKind::Append { value } = e.kind {
+                    assert!(s.applies.applied_at(e.key, value).is_some());
+                }
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,8 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::raft::types::Values;
+
 use super::Command;
 
 /// Result of asking the store to execute a read while a limbo region is
@@ -9,7 +11,7 @@ use super::Command;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ReadOutcome {
     /// The key is unaffected by the limbo region; values returned.
-    Values(Vec<u64>),
+    Values(Values),
     /// §3.3: "key affected by limbo region" — caller must reject.
     LimboConflict,
 }
@@ -17,13 +19,32 @@ pub enum ReadOutcome {
 /// The key-value state machine. Values are opaque u64 tokens (the real
 /// server transfers full payloads on the wire but the store retains
 /// tokens; see `kv::Command::Put`).
-#[derive(Debug, Clone, Default)]
+///
+/// Value lists are `Arc`-shared: `read` is a pointer clone, not a
+/// vector copy (the read path is the system's hottest — every lease
+/// read ends here). Applies copy-on-write via `Arc::make_mut`, which
+/// degenerates to a plain push while no read result holds the list.
+#[derive(Debug, Clone)]
 pub struct Store {
-    data: HashMap<u32, Vec<u64>>,
+    data: HashMap<u32, Values>,
     applied: u64,
     /// Keys written by limbo-region entries (paper §7.1's
     /// `unordered_set<string>`); empty = no limbo restriction.
     limbo_keys: HashSet<u32>,
+    /// Shared empty list returned for absent keys, so a miss is also
+    /// just a pointer clone.
+    empty: Values,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Store {
+            data: HashMap::new(),
+            applied: 0,
+            limbo_keys: HashSet::new(),
+            empty: Values::default(),
+        }
+    }
 }
 
 impl Store {
@@ -35,14 +56,16 @@ impl Store {
     pub fn apply(&mut self, cmd: &Command) {
         self.applied += 1;
         if let Command::Put { key, value, .. } = cmd {
-            self.data.entry(*key).or_default().push(*value);
+            let list = self.data.entry(*key).or_default();
+            std::sync::Arc::make_mut(list).push(*value);
         }
     }
 
     /// Unrestricted read (no limbo check) — used when the leader has
     /// committed in its own term, and by the linearizability oracle.
-    pub fn read(&self, key: u32) -> Vec<u64> {
-        self.data.get(&key).cloned().unwrap_or_default()
+    /// Allocation-free: clones an `Arc`, never the vector.
+    pub fn read(&self, key: u32) -> Values {
+        self.data.get(&key).cloned().unwrap_or_else(|| self.empty.clone())
     }
 
     /// Read through the limbo gate (§3.3): reject if `key` is affected.
@@ -113,9 +136,9 @@ mod tests {
         s.apply(&put(1, 10));
         s.apply(&put(1, 11));
         s.apply(&put(2, 20));
-        assert_eq!(s.read(1), vec![10, 11]);
-        assert_eq!(s.read(2), vec![20]);
-        assert_eq!(s.read(3), Vec::<u64>::new());
+        assert_eq!(*s.read(1), vec![10, 11]);
+        assert_eq!(*s.read(2), vec![20]);
+        assert_eq!(*s.read(3), Vec::<u64>::new());
         assert_eq!(s.applied(), 3);
     }
 
@@ -134,10 +157,10 @@ mod tests {
         s.apply(&put(1, 10));
         s.apply(&put(2, 20));
         s.set_limbo_region([put(2, 99), Command::Noop].iter());
-        assert_eq!(s.read_gated(1), ReadOutcome::Values(vec![10]));
+        assert_eq!(s.read_gated(1), ReadOutcome::Values(vec![10].into()));
         assert_eq!(s.read_gated(2), ReadOutcome::LimboConflict);
         // Unknown keys unaffected by limbo read fine.
-        assert_eq!(s.read_gated(7), ReadOutcome::Values(vec![]));
+        assert_eq!(s.read_gated(7), ReadOutcome::Values(vec![].into()));
         assert_eq!(s.limbo_key_count(), 1);
     }
 
@@ -148,7 +171,20 @@ mod tests {
         assert!(s.has_limbo_region());
         s.set_limbo_region([].iter());
         assert!(!s.has_limbo_region());
-        assert_eq!(s.read_gated(5), ReadOutcome::Values(vec![]));
+        assert_eq!(s.read_gated(5), ReadOutcome::Values(vec![].into()));
+    }
+
+    #[test]
+    fn reads_are_shared_snapshots() {
+        let mut s = Store::new();
+        s.apply(&put(1, 10));
+        let snap = s.read(1);
+        s.apply(&put(1, 11)); // copy-on-write: the snapshot is unaffected
+        assert_eq!(*snap, vec![10]);
+        assert_eq!(*s.read(1), vec![10, 11]);
+        // A read is a pointer clone of the stored list, not a copy.
+        let cur = s.read(1);
+        assert_eq!(std::sync::Arc::strong_count(&cur), 2);
     }
 
     #[test]
@@ -158,7 +194,7 @@ mod tests {
         s.set_limbo_region([put(1, 2)].iter());
         s.reset();
         assert_eq!(s.applied(), 0);
-        assert_eq!(s.read(1), Vec::<u64>::new());
+        assert_eq!(*s.read(1), Vec::<u64>::new());
         assert!(!s.has_limbo_region());
     }
 }

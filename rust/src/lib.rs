@@ -36,6 +36,7 @@
 //! | [`metrics`], [`report`] | histograms, time series, figure rendering |
 //! | [`runtime`] | PJRT artifact loading + batched read admission |
 //! | [`server`], [`client`] | real-mode TCP cluster + open-loop client (§7) |
+//! | [`shard`] | multi-Raft sharding: ShardMap keyspace partition + per-group routing |
 //! | [`storage`] | real-mode WAL + hard-state durability (crash recovery) |
 //! | [`cluster`] | in-process simulated replica set harness |
 //! | [`figures`] | one driver per paper figure (Figs 5-11) |
@@ -59,6 +60,7 @@ pub mod report;
 pub mod runtime;
 pub mod server;
 pub mod client;
+pub mod shard;
 pub mod sim;
 pub mod storage;
 pub mod testkit;

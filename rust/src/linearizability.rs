@@ -148,6 +148,41 @@ pub fn assert_linearizable(history: &History) {
     }
 }
 
+/// Sharded check: split the history per shard under `map` and check each
+/// shard independently, returning `(group, violations)` per shard.
+///
+/// Because the checker is per-key anyway (a key's apply sequence is its
+/// own serial order), partitioning cannot hide a violation — this is the
+/// same verdict as [`check`] on the whole history, but attributes each
+/// violation to the Raft group that served it.
+pub fn check_sharded(
+    history: &History,
+    map: &crate::shard::ShardMap,
+) -> Vec<(crate::shard::GroupId, Vec<Violation>)> {
+    history
+        .partition_by_shard(map)
+        .iter()
+        .enumerate()
+        .map(|(g, h)| (g as crate::shard::GroupId, check(h)))
+        .collect()
+}
+
+/// Panic with a per-shard report if any shard's history is not
+/// linearizable.
+pub fn assert_linearizable_sharded(history: &History, map: &crate::shard::ShardMap) {
+    let mut msg = String::new();
+    let mut total = 0;
+    for (g, v) in check_sharded(history, map) {
+        total += v.len();
+        for x in v.iter().take(10) {
+            msg.push_str(&format!("  group {g} op {} key {}: {}\n", x.op, x.key, x.detail));
+        }
+    }
+    if total > 0 {
+        panic!("{total} linearizability violation(s) across shards:\n{msg}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -51,6 +51,12 @@ fn dispatch(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow!("usage: leaseguard figure <5..11>"))?
                 .parse()?;
             let scale = Scale(args.get_parse::<f64>("scale").map_err(|e| anyhow!(e))?.unwrap_or(1.0));
+            // `--groups G` (sugar for `--param groups=G`): multi-Raft
+            // axis — figure 11 sweeps group counts 1,2,…,G.
+            if let Some(g) = args.get_parse::<usize>("groups").map_err(|e| anyhow!(e))? {
+                params.groups = g;
+                params.validate().map_err(|e| anyhow!(e))?;
+            }
             let out = args.get("out").unwrap_or("results").to_string();
             std::fs::create_dir_all(&out).ok();
             let report = run_figure(n, &params, scale, &out)?;
@@ -82,7 +88,8 @@ const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|bench|bench-c
                           --param overrides apply to every run; a knob left at (or explicitly
                           set to) its global default gets the matrix's workload shape instead,
                           and per-scenario tunes always win
-  figure <5..11>          regenerate a paper figure (--scale F, --out DIR)
+  figure <5..11>          regenerate a paper figure (--scale F, --out DIR;
+                          figure 11 also takes --groups G for the multi-Raft axis)
   serve                   one real server (--node I --listen ADDR --peers A,B,C
                           --data-dir PATH for crash durability, --fsync always|group|never)
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
@@ -114,14 +121,24 @@ fn cmd_sim(params: Params) -> Result<()> {
         rep.write_latency.count()
     );
     println!("elections={} events={} limbo={}", rep.elections, rep.events_processed, rep.limbo_len);
-    let viol = linearizability::check(&rep.history);
-    if viol.is_empty() {
-        println!("linearizability: OK ({} ops)", rep.history.entries.len());
-    } else {
-        println!("linearizability: {} VIOLATIONS", viol.len());
+    // Per-shard check: with one group this is exactly the whole-history
+    // check; with more it attributes violations to their Raft group.
+    let map = leaseguard::shard::ShardMap::new(params.groups);
+    let mut total = 0;
+    for (g, viol) in linearizability::check_sharded(&rep.history, &map) {
+        total += viol.len();
         for v in viol.iter().take(5) {
-            println!("  op {} key {}: {}", v.op, v.key, v.detail);
+            println!("  group {g} op {} key {}: {}", v.op, v.key, v.detail);
         }
+    }
+    if total == 0 {
+        println!(
+            "linearizability: OK ({} ops across {} group(s))",
+            rep.history.entries.len(),
+            params.groups
+        );
+    } else {
+        println!("linearizability: {total} VIOLATIONS");
         bail!("history not linearizable");
     }
     Ok(())
@@ -242,9 +259,15 @@ fn cmd_bench_cluster(args: &Args, params: Params) -> Result<()> {
     };
     let delay_ms: u64 = args.get_parse("delay-ms").map_err(|e| anyhow!(e))?.unwrap_or(0);
     let cluster = RealCluster::spawn(&params, Duration::from_millis(delay_ms), engine)?;
-    cluster
-        .wait_for_leader(Duration::from_secs(10))
-        .ok_or_else(|| anyhow!("no leader"))?;
+    if params.groups > 1 {
+        cluster
+            .wait_for_all_leaders(params.groups, Duration::from_secs(10))
+            .ok_or_else(|| anyhow!("not all {} groups elected", params.groups))?;
+    } else {
+        cluster
+            .wait_for_leader(Duration::from_secs(10))
+            .ok_or_else(|| anyhow!("no leader"))?;
+    }
     let rep =
         leaseguard::client::run_open_loop(&cluster.addrs, &params, Some(cluster.applies.clone()))?;
     cluster.shutdown();
@@ -255,10 +278,12 @@ fn cmd_bench_cluster(args: &Args, params: Params) -> Result<()> {
         fmt_us(rep.read_latency.p90()),
         fmt_us(rep.write_latency.p90())
     );
-    let viol = linearizability::check(&rep.history);
+    let map = leaseguard::shard::ShardMap::new(params.groups);
+    let viol: usize =
+        linearizability::check_sharded(&rep.history, &map).iter().map(|(_, v)| v.len()).sum();
     println!(
         "linearizability: {}",
-        if viol.is_empty() { "OK".to_string() } else { format!("{} VIOLATIONS", viol.len()) }
+        if viol == 0 { "OK".to_string() } else { format!("{viol} VIOLATIONS") }
     );
     Ok(())
 }

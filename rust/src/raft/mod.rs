@@ -26,4 +26,4 @@ pub use batch::EntryBatch;
 pub use log::{Entry, Log};
 pub use message::Message;
 pub use node::{DurableState, Node, NodeConfig, Output};
-pub use types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind};
+pub use types::{FailReason, Index, OpId, OpResult, Role, Term, TimerKind, Values};

@@ -1282,7 +1282,7 @@ mod tests {
                 .any(|o| matches!(o, Output::Reply { op: 42, result: OpResult::WriteOk })),
             "{out:?}"
         );
-        assert_eq!(n.store().read(7), vec![700]);
+        assert_eq!(*n.store().read(7), vec![700]);
     }
 
     #[test]
@@ -1430,7 +1430,7 @@ mod tests {
         let out = n.client_read(now, 1, 1);
         assert!(
             out.iter().any(
-                |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if v == &vec![11])
+                |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if **v == vec![11])
             ),
             "{out:?}"
         );
@@ -1461,7 +1461,7 @@ mod tests {
         // Key 2 now readable.
         let out = n.client_read(t(1_500_300), 3, 2);
         assert!(out.iter().any(
-            |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if v == &vec![22])
+            |o| matches!(o, Output::Reply { result: OpResult::ReadOk(v), .. } if **v == vec![22])
         ));
     }
 

@@ -11,6 +11,13 @@ pub type Index = u64;
 /// generator / client library, echoed back in replies).
 pub type OpId = u64;
 
+/// A key's append-only value list, shared rather than copied: the store
+/// keeps one `Arc` per key and reads hand out clones of the pointer, so
+/// the node's read-serving hot path never copies the vector. Writers go
+/// through `Arc::make_mut` (copy-on-write), which only copies while a
+/// read result is still alive and referencing the same list.
+pub type Values = std::sync::Arc<Vec<u64>>;
+
 /// Raft node role.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
@@ -45,7 +52,8 @@ pub enum FailReason {
 pub enum OpResult {
     WriteOk,
     /// The append-only list for the key, in commit order (§6.1).
-    ReadOk(Vec<u64>),
+    /// `Values` (an `Arc`) keeps the reply path allocation-free.
+    ReadOk(Values),
     Failed(FailReason),
 }
 

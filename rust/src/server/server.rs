@@ -26,7 +26,8 @@ use crate::clock::real::RealClock;
 use crate::clock::Clock;
 use crate::raft::{Message, Node, NodeConfig, Output, Role, TimerKind};
 use crate::runtime::{scalar_admission, EngineHandle};
-use crate::storage::{FsyncPolicy, Storage};
+use crate::shard::{group_seed, GroupId, ShardMap, ShardRouter};
+use crate::storage::{FsyncPolicy, MultiStorage};
 use crate::{Micros, NodeId};
 
 use super::dialer::Dialer;
@@ -59,6 +60,11 @@ pub struct ServerConfig {
 }
 
 /// Externally visible, lock-free server status.
+///
+/// With `params.groups > 1` the scalar fields keep their historical
+/// group-0 semantics (single-group callers are unaffected) and the
+/// bitmask fields report all groups: bit g is set when this server
+/// leads / has committed in group g.
 #[derive(Default)]
 pub struct Status {
     pub is_leader: AtomicBool,
@@ -67,12 +73,23 @@ pub struct Status {
     pub limbo_len: AtomicU64,
     pub reads_batched: AtomicU64,
     pub engine_batches: AtomicU64,
+    /// Bit per group: this server is that group's leader.
+    pub leader_groups: AtomicU64,
+    /// Bit per group: that group's commit index is >= 1 here.
+    pub committed_groups: AtomicU64,
+    /// Cross-group durability barriers hit (event batches that had
+    /// anything to persist).
+    pub wal_barriers: AtomicU64,
+    /// Shared fsyncs those barriers issued. The multi-Raft claim is
+    /// `wal_syncs ≈ wal_barriers` regardless of group count — G dirty
+    /// groups cost one shared sync, not G.
+    pub wal_syncs: AtomicU64,
 }
 
 enum Ev {
     /// New inbound connection: the write half for replies.
     NewConn(u64, TcpStream),
-    Peer(Message),
+    Peer(GroupId, Message),
     Client { conn: u64, req: wire::ClientReq },
     ConnClosed(u64),
     /// The background dialer established an outgoing peer link.
@@ -168,8 +185,8 @@ fn reader_loop(stream: TcpStream, conn: u64, tx: Sender<Ev>) {
     loop {
         match frames.next_frame() {
             Ok(Some(body)) => match wire::decode(body) {
-                Ok(Frame::Raft { msg, .. }) => {
-                    if tx.send(Ev::Peer(msg)).is_err() {
+                Ok(Frame::Raft { group, msg, .. }) => {
+                    if tx.send(Ev::Peer(group, msg)).is_err() {
                         break;
                     }
                 }
@@ -188,9 +205,13 @@ fn reader_loop(stream: TcpStream, conn: u64, tx: Sender<Ev>) {
 }
 
 /// Mutable state the output router needs (bundled to keep borrows sane).
+///
+/// One Router serves every group of the process: all groups share the
+/// peer map (G groups × one link per peer, not G sockets), and timers
+/// are keyed by group so each fires back into its own node.
 struct Router {
     cfg: ServerConfig,
-    timers: BinaryHeap<std::cmp::Reverse<(Micros, u8)>>,
+    timers: BinaryHeap<std::cmp::Reverse<(Micros, GroupId, u8)>>,
     peers: HashMap<NodeId, DelayedSender>,
     /// Owns reconnection for everything missing from `peers`.
     dialer: Dialer,
@@ -217,17 +238,18 @@ fn kind_from(b: u8) -> TimerKind {
 }
 
 impl Router {
-    /// Route a batch of outputs, draining `outs` (the caller reuses the
-    /// buffer). Callers must have persisted durable state first — this
-    /// is the externalization point.
-    fn handle(&mut self, outs: &mut Vec<Output>) {
+    /// Route a batch of group-tagged outputs, draining `outs` (the
+    /// caller reuses the buffer). Callers must have persisted durable
+    /// state first — this is the externalization point.
+    fn handle(&mut self, outs: &mut Vec<(GroupId, Output)>) {
         // A replication fan-out arrives as Sends whose payloads repeat
         // (shared EntryBatch + one round seq): encode once, hand every
-        // DelayedSender the same Arc'd bytes. Two slots so one lagging
-        // peer's catch-up frame interleaved mid-round doesn't evict the
-        // aligned majority's frame.
-        let mut encoded: Vec<(Message, Arc<[u8]>)> = Vec::with_capacity(2);
-        for o in outs.drain(..) {
+        // DelayedSender the same Arc'd bytes. Keyed by (group, message)
+        // — per-group fan-outs are contiguous within a batch, so two
+        // slots still absorb one lagging peer's catch-up frame without
+        // evicting the aligned majority's frame.
+        let mut encoded: Vec<(GroupId, Message, Arc<[u8]>)> = Vec::with_capacity(2);
+        for (g, o) in outs.drain(..) {
             match o {
                 Output::Send { to, msg } => {
                     // No link: drop the frame. The dialer is already
@@ -238,27 +260,31 @@ impl Router {
                     let Some(sender) = self.peers.get(&to) else { continue };
                     // Cheap compare: shared-batch views hit the
                     // pointer-equality fast path.
-                    let body: Arc<[u8]> = match encoded.iter().find(|(m, _)| *m == msg) {
-                        Some((_, b)) => b.clone(),
-                        None => {
-                            self.enc.reset();
-                            wire::encode_raft_into(self.cfg.id, &msg, &mut self.enc);
-                            let b: Arc<[u8]> = Arc::from(&self.enc.buf[..]);
-                            if encoded.len() == 2 {
-                                encoded.remove(0);
+                    let body: Arc<[u8]> =
+                        match encoded.iter().find(|(eg, m, _)| *eg == g && *m == msg) {
+                            Some((_, _, b)) => b.clone(),
+                            None => {
+                                self.enc.reset();
+                                wire::encode_raft_into(self.cfg.id, g, &msg, &mut self.enc);
+                                let b: Arc<[u8]> = Arc::from(&self.enc.buf[..]);
+                                if encoded.len() == 2 {
+                                    encoded.remove(0);
+                                }
+                                encoded.push((g, msg, b.clone()));
+                                b
                             }
-                            encoded.push((msg, b.clone()));
-                            b
-                        }
-                    };
+                        };
                     if !sender.send(body) {
                         self.peers.remove(&to);
                         self.dialer.notify_down(to);
                     }
                 }
                 Output::SetTimer { kind, after } => {
-                    self.timers
-                        .push(std::cmp::Reverse((RealClock::monotonic_us() + after, kind_of(kind))));
+                    self.timers.push(std::cmp::Reverse((
+                        RealClock::monotonic_us() + after,
+                        g,
+                        kind_of(kind),
+                    )));
                 }
                 Output::Reply { op, result } => {
                     if let Some(conn) = self.op_conn.remove(&op) {
@@ -287,27 +313,40 @@ impl Router {
     }
 }
 
-/// Flush the node's durable deltas to storage and hit the durability
-/// barrier. Must run after node interactions and before their outputs
-/// are routed. Without a data dir the watermark is drained and dropped
-/// (volatile mode). Storage errors are fatal: continuing to vote or ack
-/// on a broken disk silently voids every crash-safety guarantee.
-fn persist(node: &mut Node, storage: &mut Option<Storage>) {
-    let Some(s) = storage.as_mut() else {
-        node.take_log_dirty();
+/// Flush every group's durable deltas to its storage namespace, then
+/// hit ONE cross-group durability barrier. Must run after node
+/// interactions and before their outputs are routed. Without a data dir
+/// the watermarks are drained and dropped (volatile mode). Storage
+/// errors are fatal: continuing to vote or ack on a broken disk
+/// silently voids every crash-safety guarantee.
+fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, status: &Status) {
+    let Some(ms) = storage.as_mut() else {
+        for (_, node) in shards.iter_mut() {
+            node.take_log_dirty();
+        }
         return;
     };
-    s.persist_hard_state(node.term(), node.voted_for()).expect("hard-state persist");
-    if let Some((from, truncated)) = node.take_log_dirty() {
-        if truncated {
-            s.truncate(from - 1).expect("wal truncate");
-        }
-        let last = node.log().last_index();
-        for (idx, e) in node.log().iter_range(from - 1, last) {
-            s.append(idx, e).expect("wal append");
+    let mut wrote = false;
+    for (g, node) in shards.iter_mut() {
+        let s = ms.group(g as usize);
+        s.persist_hard_state(node.term(), node.voted_for()).expect("hard-state persist");
+        if let Some((from, truncated)) = node.take_log_dirty() {
+            if truncated {
+                s.truncate(from - 1).expect("wal truncate");
+            }
+            let last = node.log().last_index();
+            for (idx, e) in node.log().iter_range(from - 1, last) {
+                s.append(idx, e).expect("wal append");
+            }
+            wrote = true;
         }
     }
-    s.sync().expect("wal sync");
+    let syncs_before = ms.syncs();
+    ms.barrier().expect("wal barrier");
+    if wrote {
+        status.wal_barriers.fetch_add(1, Ordering::Relaxed);
+        status.wal_syncs.fetch_add(ms.syncs() - syncs_before, Ordering::Relaxed);
+    }
 }
 
 fn main_loop(
@@ -319,18 +358,38 @@ fn main_loop(
 ) {
     let mut clock = RealClock::new(cfg.params.clock_error_us);
     let now = clock.interval_now();
-    let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
-    let (mut storage, mut node, outs) = match &cfg.data_dir {
+    let groups = cfg.params.groups;
+    // One Node per group, each seeded independently (group 0 keeps the
+    // process seed so single-group deployments replay unchanged).
+    // Durable mode recovers every group from its own `g<id>/` namespace
+    // under one MultiStorage.
+    let mut pending: Vec<(GroupId, Output)> = Vec::new();
+    let (mut storage, nodes) = match &cfg.data_dir {
         Some(dir) => {
-            let (s, durable) = Storage::open(dir, cfg.fsync).expect("open storage");
-            let (n, o) = Node::recover(node_cfg, cfg.params.seed, durable, now);
-            (Some(s), n, o)
+            let (ms, durable) =
+                MultiStorage::open(dir, groups, cfg.fsync).expect("open storage");
+            let mut nodes = Vec::with_capacity(groups);
+            for (g, d) in durable.into_iter().enumerate() {
+                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
+                let (n, o) =
+                    Node::recover(node_cfg, group_seed(cfg.params.seed, g as GroupId), d, now);
+                pending.extend(o.into_iter().map(|out| (g as GroupId, out)));
+                nodes.push(n);
+            }
+            (Some(ms), nodes)
         }
         None => {
-            let (n, o) = Node::new(node_cfg, cfg.params.seed, now);
-            (None, n, o)
+            let mut nodes = Vec::with_capacity(groups);
+            for g in 0..groups {
+                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
+                let (n, o) = Node::new(node_cfg, group_seed(cfg.params.seed, g as GroupId), now);
+                pending.extend(o.into_iter().map(|out| (g as GroupId, out)));
+                nodes.push(n);
+            }
+            (None, nodes)
         }
     };
+    let mut shards = ShardRouter::new(ShardMap::new(groups), nodes);
     let engine = cfg.engine.clone();
     let dialer = {
         let tx = tx.clone();
@@ -357,20 +416,34 @@ fn main_loop(
         conns: HashMap::new(),
         enc: Enc::new(),
     };
-    let mut pending = outs;
-    persist(&mut node, &mut storage);
+    persist_all(&mut shards, &mut storage, &status);
     router.handle(&mut pending);
 
-    let publish = |node: &Node, status: &Status| {
-        status.is_leader.store(node.role() == Role::Leader, Ordering::Relaxed);
-        status.term.store(node.term(), Ordering::Relaxed);
-        status.commit_index.store(node.commit_index(), Ordering::Relaxed);
-        status
-            .limbo_len
-            .store(node.lease_state().map(|l| l.limbo_len()).unwrap_or(0), Ordering::Relaxed);
+    let publish = |shards: &ShardRouter, status: &Status| {
+        // Scalars keep group-0 semantics; bitmasks cover all groups.
+        let n0 = shards.node(0);
+        status.is_leader.store(n0.role() == Role::Leader, Ordering::Relaxed);
+        status.term.store(n0.term(), Ordering::Relaxed);
+        status.commit_index.store(n0.commit_index(), Ordering::Relaxed);
+        let mut limbo = 0u64;
+        let mut leaders = 0u64;
+        let mut committed = 0u64;
+        for (g, n) in shards.iter() {
+            limbo += n.lease_state().map(|l| l.limbo_len()).unwrap_or(0);
+            if n.role() == Role::Leader {
+                leaders |= 1 << g;
+            }
+            if n.commit_index() >= 1 {
+                committed |= 1 << g;
+            }
+        }
+        status.limbo_len.store(limbo, Ordering::Relaxed);
+        status.leader_groups.store(leaders, Ordering::Relaxed);
+        status.committed_groups.store(committed, Ordering::Relaxed);
     };
 
-    let mut read_batch: Vec<(u64, u32)> = Vec::new();
+    // Per-group read batches, reused across iterations.
+    let mut read_batches: Vec<Vec<(u64, u32)>> = vec![Vec::new(); groups];
     while !stop.load(Ordering::SeqCst) {
         // Fire due timers. Status publication is folded into the
         // timer-fire branch: an idle loop iteration performs no atomic
@@ -378,27 +451,28 @@ fn main_loop(
         // changes).
         let now_us = RealClock::monotonic_us();
         let mut timer_fired = false;
-        while let Some(&std::cmp::Reverse((due, kb))) = router.timers.peek() {
+        while let Some(&std::cmp::Reverse((due, g, kb))) = router.timers.peek() {
             if due > now_us {
                 break;
             }
             router.timers.pop();
             timer_fired = true;
             let now = clock.interval_now();
-            pending.extend(node.on_timer(now, kind_from(kb)));
+            let outs = shards.node_mut(g).on_timer(now, kind_from(kb));
+            pending.extend(outs.into_iter().map(|o| (g, o)));
         }
         if timer_fired {
             // A timer can start an election (term bump + self-vote) —
             // durable before the RequestVotes leave.
-            persist(&mut node, &mut storage);
+            persist_all(&mut shards, &mut storage, &status);
             router.handle(&mut pending);
-            publish(&node, &status);
+            publish(&shards, &status);
         }
         // Wait for events until the next timer (bounded poll).
         let wait_us = router
             .timers
             .peek()
-            .map(|&std::cmp::Reverse((due, _))| (due - RealClock::monotonic_us()).max(0) as u64)
+            .map(|&std::cmp::Reverse((due, _, _))| (due - RealClock::monotonic_us()).max(0) as u64)
             .unwrap_or(2_000)
             .min(2_000);
         let first = match rx.recv_timeout(Duration::from_micros(wait_us)) {
@@ -417,7 +491,9 @@ fn main_loop(
             }
         }
         let had_events = !events.is_empty();
-        read_batch.clear();
+        for b in &mut read_batches {
+            b.clear();
+        }
         for ev in events {
             match ev {
                 Ev::Shutdown => return,
@@ -427,20 +503,33 @@ fn main_loop(
                 Ev::PeerUp(peer, sender) => {
                     router.peers.insert(peer, sender);
                 }
-                Ev::Peer(msg) => {
-                    let now = clock.interval_now();
-                    pending.extend(node.on_message(now, msg));
+                Ev::Peer(g, msg) => {
+                    // A frame for a group this process doesn't host
+                    // (mismatched configs) is dropped, not a panic.
+                    if (g as usize) < shards.len() {
+                        let now = clock.interval_now();
+                        let outs = shards.node_mut(g).on_message(now, msg);
+                        pending.extend(outs.into_iter().map(|o| (g, o)));
+                    }
                 }
                 Ev::Client { conn, req } => {
                     router.op_conn.insert(req.op, conn);
+                    // The server routes by key through the canonical
+                    // ShardMap — clients need not be trusted to route.
+                    let g = shards.group_for_key(req.key);
                     match req.write_value {
                         Some(v) => {
                             let now = clock.interval_now();
-                            pending.extend(
-                                node.client_write(now, req.op, req.key, v, req.payload.len() as u32),
+                            let outs = shards.node_mut(g).client_write(
+                                now,
+                                req.op,
+                                req.key,
+                                v,
+                                req.payload.len() as u32,
                             );
+                            pending.extend(outs.into_iter().map(|o| (g, o)));
                         }
-                        None => read_batch.push((req.op, req.key)),
+                        None => read_batches[g as usize].push((req.op, req.key)),
                     }
                 }
                 Ev::ConnClosed(conn) => {
@@ -452,28 +541,34 @@ fn main_loop(
                 }
             }
         }
-        // Reads batched per loop iteration: one admission decision for
-        // everything that arrived together (the XLA engine's raison
-        // d'être during post-election thundering herds).
-        if !read_batch.is_empty() {
-            status.reads_batched.fetch_add(read_batch.len() as u64, Ordering::Relaxed);
+        // Reads batched per loop iteration and per group: one admission
+        // decision per group for everything that arrived together (the
+        // XLA engine's raison d'être during post-election thundering
+        // herds).
+        for (gi, batch) in read_batches.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            status.reads_batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
             let now = clock.interval_now();
-            pending.extend(node.client_read_batch(now, &read_batch, |inp| match &engine {
+            let g = gi as GroupId;
+            let outs = shards.node_mut(g).client_read_batch(now, batch, |inp| match &engine {
                 Some(e) => {
                     status.engine_batches.fetch_add(1, Ordering::Relaxed);
                     e.admit(inp).unwrap_or_else(|_| scalar_admission(inp))
                 }
                 None => scalar_admission(inp),
-            }));
+            });
+            pending.extend(outs.into_iter().map(|o| (g, o)));
         }
-        // One durability barrier for everything the batch changed (the
-        // `Group` fsync policy's whole point), then externalize. Skipped
-        // on idle iterations (recv timeout with no due timers) — those
-        // change no node state.
+        // One durability barrier for everything the batch changed across
+        // ALL groups (the `Group` fsync policy's whole point, now shared
+        // cross-group), then externalize. Skipped on idle iterations
+        // (recv timeout with no due timers) — those change no node state.
         if had_events {
-            persist(&mut node, &mut storage);
+            persist_all(&mut shards, &mut storage, &status);
             router.handle(&mut pending);
-            publish(&node, &status);
+            publish(&shards, &status);
         }
     }
 }

@@ -2,14 +2,27 @@
 //! frames, little-endian integers, u8 tags. Covers peer RPCs
 //! ([`crate::raft::Message`]) and the client protocol.
 //!
-//! Frame = u32 length || payload. Payload starts with a u8 frame kind.
+//! Frame = u32 length || payload. Payload starts with a two-byte
+//! header (magic + protocol version, so the format can evolve and
+//! mismatched peers are rejected gracefully instead of misparsed),
+//! then a u8 frame kind. Raft frames carry the [`GroupId`] of the
+//! Raft group they belong to: G groups sharing a peer link multiplex
+//! over one socket and the group id demultiplexes on arrival.
 
 use crate::clock::TimeInterval;
 use crate::kv::Command;
 use crate::raft::log::Entry;
 use crate::raft::types::{FailReason, OpResult};
 use crate::raft::{EntryBatch, Message};
+use crate::shard::GroupId;
 use crate::NodeId;
+
+/// First byte of every frame body. Deliberately not a printable ASCII
+/// frame-kind value, so pre-header peers (or random TCP scanners) fail
+/// the magic check on byte one.
+pub const WIRE_MAGIC: u8 = 0xA7;
+/// Wire protocol version. v1: header introduced + per-frame group ids.
+pub const WIRE_VERSION: u8 = 1;
 
 /// Top-level frame kinds.
 pub const FRAME_HELLO_PEER: u8 = 1;
@@ -43,7 +56,7 @@ pub struct ClientResp {
 pub enum Frame {
     /// Peer identification sent once per outgoing peer link.
     HelloPeer { from: NodeId },
-    Raft { from: NodeId, msg: Message },
+    Raft { from: NodeId, group: GroupId, msg: Message },
     ClientReq(ClientReq),
     ClientResp(ClientResp),
 }
@@ -149,9 +162,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 
 /// Encode a Raft peer frame without constructing a [`Frame`] (the
 /// server's send path borrows the message instead of cloning it).
-pub fn encode_raft_into(from: NodeId, msg: &Message, e: &mut Enc) {
+pub fn encode_raft_into(from: NodeId, group: GroupId, msg: &Message, e: &mut Enc) {
+    e.u8(WIRE_MAGIC);
+    e.u8(WIRE_VERSION);
     e.u8(FRAME_RAFT);
     e.u32(from as u32);
+    e.u32(group);
     match msg {
         Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
             e.u8(0);
@@ -195,13 +211,17 @@ pub fn encode_raft_into(from: NodeId, msg: &Message, e: &mut Enc) {
 pub fn encode_into(frame: &Frame, e: &mut Enc) {
     match frame {
         Frame::HelloPeer { from } => {
+            e.u8(WIRE_MAGIC);
+            e.u8(WIRE_VERSION);
             e.u8(FRAME_HELLO_PEER);
             e.u32(*from as u32);
         }
-        Frame::Raft { from, msg } => {
-            encode_raft_into(*from, msg, e);
+        Frame::Raft { from, group, msg } => {
+            encode_raft_into(*from, *group, msg, e);
         }
         Frame::ClientReq(r) => {
+            e.u8(WIRE_MAGIC);
+            e.u8(WIRE_VERSION);
             e.u8(FRAME_CLIENT_REQ);
             e.u64(r.op);
             e.u32(r.key);
@@ -215,6 +235,8 @@ pub fn encode_into(frame: &Frame, e: &mut Enc) {
             e.bytes(&r.payload);
         }
         Frame::ClientResp(r) => {
+            e.u8(WIRE_MAGIC);
+            e.u8(WIRE_VERSION);
             e.u8(FRAME_CLIENT_RESP);
             e.u64(r.op);
             e.i64(r.exec_us);
@@ -315,7 +337,7 @@ impl<'a> Dec<'a> {
                 for _ in 0..n {
                     v.push(self.u64()?);
                 }
-                OpResult::ReadOk(v)
+                OpResult::ReadOk(v.into())
             }
             2 => OpResult::Failed(match self.u8()? {
                 0 => FailReason::NotLeader,
@@ -331,13 +353,27 @@ impl<'a> Dec<'a> {
     }
 }
 
-/// Decode one frame body.
+/// Decode one frame body. The header is checked first: a bad magic
+/// byte means a non-protocol peer (reject outright), a bad version a
+/// peer from a different build (reject gracefully so the connection
+/// handler can drop the link without panicking or misparsing).
 pub fn decode(b: &[u8]) -> R<Frame> {
     let mut d = Dec::new(b);
+    let magic = d.u8()?;
+    if magic != WIRE_MAGIC {
+        return Err(DecodeError(format!("bad magic {magic:#04x} (want {WIRE_MAGIC:#04x})")));
+    }
+    let version = d.u8()?;
+    if version != WIRE_VERSION {
+        return Err(DecodeError(format!(
+            "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+        )));
+    }
     let frame = match d.u8()? {
         FRAME_HELLO_PEER => Frame::HelloPeer { from: d.u32()? as NodeId },
         FRAME_RAFT => {
             let from = d.u32()? as NodeId;
+            let group = d.u32()?;
             let msg = match d.u8()? {
                 0 => Message::RequestVote {
                     term: d.u64()?,
@@ -379,7 +415,7 @@ pub fn decode(b: &[u8]) -> R<Frame> {
                 },
                 t => return Err(DecodeError(format!("bad raft tag {t}"))),
             };
-            Frame::Raft { from, msg }
+            Frame::Raft { from, group, msg }
         }
         FRAME_CLIENT_REQ => {
             let op = d.u64()?;
@@ -418,14 +454,17 @@ mod tests {
         roundtrip(Frame::HelloPeer { from: 2 });
         roundtrip(Frame::Raft {
             from: 0,
+            group: 0,
             msg: Message::RequestVote { term: 3, candidate: 0, last_log_index: 9, last_log_term: 2 },
         });
         roundtrip(Frame::Raft {
             from: 1,
+            group: 7,
             msg: Message::VoteReply { term: 3, voter: 1, granted: true },
         });
         roundtrip(Frame::Raft {
             from: 0,
+            group: 63,
             msg: Message::AppendEntries {
                 term: 4,
                 leader: 0,
@@ -447,11 +486,13 @@ mod tests {
         });
         roundtrip(Frame::Raft {
             from: 2,
+            group: 1,
             msg: Message::AppendReply { term: 4, from: 2, success: false, match_index: 0, seq: 42 },
         });
         // Empty entry batch (heartbeat frame).
         roundtrip(Frame::Raft {
             from: 1,
+            group: 15,
             msg: Message::AppendEntries {
                 term: 5,
                 leader: 1,
@@ -470,6 +511,7 @@ mod tests {
             Frame::HelloPeer { from: 1 },
             Frame::Raft {
                 from: 0,
+                group: 3,
                 msg: Message::AppendEntries {
                     term: 2,
                     leader: 0,
@@ -501,8 +543,11 @@ mod tests {
         // rejected by the count-vs-remaining-bytes check, not attempt a
         // ~200 GB Vec::with_capacity.
         let mut b = Vec::new();
+        b.push(WIRE_MAGIC);
+        b.push(WIRE_VERSION);
         b.push(FRAME_RAFT);
         b.extend_from_slice(&0u32.to_le_bytes()); // from
+        b.extend_from_slice(&0u32.to_le_bytes()); // group
         b.push(2); // AppendEntries tag
         b.extend_from_slice(&1u64.to_le_bytes()); // term
         b.extend_from_slice(&0u32.to_le_bytes()); // leader
@@ -515,6 +560,8 @@ mod tests {
         assert!(err.0.contains("exceeds remaining"), "{err:?}");
         // Same guard on ReadOk value counts.
         let mut b = Vec::new();
+        b.push(WIRE_MAGIC);
+        b.push(WIRE_VERSION);
         b.push(FRAME_CLIENT_RESP);
         b.extend_from_slice(&7u64.to_le_bytes()); // op
         b.extend_from_slice(&0i64.to_le_bytes()); // exec_us
@@ -536,7 +583,7 @@ mod tests {
         roundtrip(Frame::ClientResp(ClientResp {
             op: 9,
             exec_us: 123,
-            result: OpResult::ReadOk(vec![1, 2, 3]),
+            result: OpResult::ReadOk(vec![1, 2, 3].into()),
         }));
         roundtrip(Frame::ClientResp(ClientResp { op: 10, exec_us: -1, result: OpResult::WriteOk }));
         for r in [
@@ -555,10 +602,32 @@ mod tests {
     fn garbage_rejected() {
         assert!(decode(&[]).is_err());
         assert!(decode(&[99]).is_err());
-        assert!(decode(&[FRAME_RAFT, 0, 0, 0, 0, 77]).is_err());
+        assert!(decode(&[WIRE_MAGIC, WIRE_VERSION, 99]).is_err());
+        assert!(decode(&[WIRE_MAGIC, WIRE_VERSION, FRAME_RAFT, 0, 0, 0, 0, 0, 0, 0, 0, 77]).is_err());
         // Trailing bytes rejected.
         let mut ok = encode(&Frame::HelloPeer { from: 1 });
         ok.push(0);
         assert!(decode(&ok).is_err());
+    }
+
+    #[test]
+    fn header_mismatches_rejected_gracefully() {
+        let good = encode(&Frame::HelloPeer { from: 1 });
+        assert_eq!(good[0], WIRE_MAGIC);
+        assert_eq!(good[1], WIRE_VERSION);
+
+        // A pre-header peer's frame starts with a frame-kind byte, not
+        // the magic: rejected on byte one with a named error.
+        let mut old = good.clone();
+        old.remove(0);
+        old.remove(0);
+        let err = decode(&old).unwrap_err();
+        assert!(err.0.contains("bad magic"), "{err:?}");
+
+        // A future version is rejected by name, not misparsed.
+        let mut future = good.clone();
+        future[1] = WIRE_VERSION + 1;
+        let err = decode(&future).unwrap_err();
+        assert!(err.0.contains("unsupported wire version"), "{err:?}");
     }
 }

@@ -1,0 +1,285 @@
+//! Multi-Raft sharding: partition the keyspace across independent
+//! lease-guarded Raft groups hosted in one process.
+//!
+//! Two pieces live here:
+//!
+//! - [`ShardMap`] — the hash partition from key to [`GroupId`]. It is
+//!   tiny (just the group count) but it is *protocol*: client and
+//!   servers must agree on it byte-for-byte, so it serializes with a
+//!   magic + version header and rejects anything it does not
+//!   recognize. Every router in the system (server main loop, real
+//!   client, simulator) derives its routing from a `ShardMap` built
+//!   from the same `Params`, never from an ad-hoc `%`.
+//!
+//! - [`ShardRouter`] — owns the per-group `Node` state machines of one
+//!   process and dispatches timers, peer messages, and client ops to
+//!   the right group. The per-group protocol (leases, limbo, deferred
+//!   commits) is untouched; the router only multiplexes.
+//!
+//! Groups are deliberately capped at 64 so per-group leader/commit
+//! status fits in one `u64` bitmask on the server's shared `Status`.
+
+use crate::clock::TimeInterval;
+use crate::raft::{Node, Output};
+
+/// Identifies one Raft group within a process. Groups are dense:
+/// `0..params.groups`.
+pub type GroupId = u32;
+
+/// Hard cap on groups per process (status bitmasks are u64).
+pub const MAX_GROUPS: usize = 64;
+
+/// Serialization header: magic + layout version. Bump the version when
+/// the partition function or encoding changes; old peers then reject
+/// the map instead of silently mis-routing keys.
+pub const SHARDMAP_MAGIC: [u8; 4] = *b"SMAP";
+pub const SHARDMAP_VERSION: u8 = 1;
+
+/// Fibonacci-hash multiplier (2^32 / φ). Spreads consecutive keys —
+/// the workload generator draws them from a small dense range — across
+/// groups instead of clustering them into one.
+const HASH_MUL: u32 = 0x9E37_79B1;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardMapError {
+    BadMagic,
+    BadVersion(u8),
+    Truncated,
+    BadGroupCount(u32),
+}
+
+impl std::fmt::Display for ShardMapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardMapError::BadMagic => write!(f, "shard map: bad magic"),
+            ShardMapError::BadVersion(v) => write!(f, "shard map: unsupported version {v}"),
+            ShardMapError::Truncated => write!(f, "shard map: truncated"),
+            ShardMapError::BadGroupCount(g) => {
+                write!(f, "shard map: group count {g} outside 1..={MAX_GROUPS}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardMapError {}
+
+/// The canonical keyspace partition: `group_of(key)` is a pure
+/// function of the key and the group count, identical on every client
+/// and server that shares the same map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    groups: u32,
+}
+
+impl ShardMap {
+    /// Panics if `groups` is outside `1..=MAX_GROUPS`; config
+    /// validation enforces the same bound earlier with a proper error.
+    pub fn new(groups: usize) -> Self {
+        assert!(
+            (1..=MAX_GROUPS).contains(&groups),
+            "groups must be in 1..={MAX_GROUPS}, got {groups}"
+        );
+        ShardMap { groups: groups as u32 }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups as usize
+    }
+
+    /// Key → group. Multiplicative (Fibonacci) hash then modulo; with
+    /// one group this is constant 0, so single-group deployments are
+    /// bit-identical to the pre-sharding code.
+    pub fn group_of(&self, key: u32) -> GroupId {
+        key.wrapping_mul(HASH_MUL) % self.groups
+    }
+
+    /// Wire form: magic, version, group count (LE).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(9);
+        b.extend_from_slice(&SHARDMAP_MAGIC);
+        b.push(SHARDMAP_VERSION);
+        b.extend_from_slice(&self.groups.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self, ShardMapError> {
+        if b.len() < 4 {
+            return Err(ShardMapError::Truncated);
+        }
+        if b[0..4] != SHARDMAP_MAGIC {
+            return Err(ShardMapError::BadMagic);
+        }
+        let rest = &b[4..];
+        if rest.is_empty() {
+            return Err(ShardMapError::Truncated);
+        }
+        if rest[0] != SHARDMAP_VERSION {
+            return Err(ShardMapError::BadVersion(rest[0]));
+        }
+        let rest = &rest[1..];
+        if rest.len() < 4 {
+            return Err(ShardMapError::Truncated);
+        }
+        let groups = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]);
+        if groups == 0 || groups as usize > MAX_GROUPS {
+            return Err(ShardMapError::BadGroupCount(groups));
+        }
+        Ok(ShardMap { groups })
+    }
+}
+
+/// Derive a per-group RNG seed from the process seed. Group 0 uses the
+/// seed unchanged so a 1-group deployment replays exactly the
+/// single-group histories the determinism tests pinned.
+pub fn group_seed(seed: u64, g: GroupId) -> u64 {
+    seed ^ ((g as u64) << 20)
+}
+
+/// One process's worth of Raft groups plus the map that routes into
+/// them. The router never interprets protocol messages — it only picks
+/// which `Node` sees them.
+pub struct ShardRouter {
+    map: ShardMap,
+    nodes: Vec<Node>,
+}
+
+impl ShardRouter {
+    pub fn new(map: ShardMap, nodes: Vec<Node>) -> Self {
+        assert_eq!(map.groups(), nodes.len(), "one Node per group");
+        ShardRouter { map, nodes }
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn group_for_key(&self, key: u32) -> GroupId {
+        self.map.group_of(key)
+    }
+
+    pub fn node(&self, g: GroupId) -> &Node {
+        &self.nodes[g as usize]
+    }
+
+    pub fn node_mut(&mut self, g: GroupId) -> &mut Node {
+        &mut self.nodes[g as usize]
+    }
+
+    /// Route a client key to its group's node.
+    pub fn node_for_key_mut(&mut self, key: u32) -> (GroupId, &mut Node) {
+        let g = self.map.group_of(key);
+        (g, &mut self.nodes[g as usize])
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (GroupId, &Node)> {
+        self.nodes.iter().enumerate().map(|(g, n)| (g as GroupId, n))
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (GroupId, &mut Node)> {
+        self.nodes.iter_mut().enumerate().map(|(g, n)| (g as GroupId, n))
+    }
+
+    /// Restart every group of this process at `now` (a process crash
+    /// takes all its groups down together). Returns the per-group
+    /// outputs tagged with their group.
+    pub fn restart_all(&mut self, now: TimeInterval) -> Vec<(GroupId, Vec<Output>)> {
+        self.iter_mut().map(|(g, n)| (g, n.restart(now))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_group_maps_everything_to_zero() {
+        let m = ShardMap::new(1);
+        for k in 0..1000u32 {
+            assert_eq!(m.group_of(k), 0);
+        }
+    }
+
+    #[test]
+    fn partition_is_total_and_in_range() {
+        for groups in [2usize, 3, 4, 7, 16, 64] {
+            let m = ShardMap::new(groups);
+            for k in 0..10_000u32 {
+                assert!((m.group_of(k) as usize) < groups);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_reasonably_balanced() {
+        // The workload draws keys from a small dense range; the hash
+        // must not funnel them into few groups.
+        let groups = 8;
+        let m = ShardMap::new(groups);
+        let mut counts = vec![0usize; groups];
+        let keys = 1000;
+        for k in 0..keys as u32 {
+            counts[m.group_of(k) as usize] += 1;
+        }
+        let ideal = keys / groups;
+        for (g, &c) in counts.iter().enumerate() {
+            assert!(
+                c > ideal / 2 && c < ideal * 2,
+                "group {g} holds {c} of {keys} keys (ideal {ideal})"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        for groups in [1usize, 2, 16, 64] {
+            let m = ShardMap::new(groups);
+            let b = m.to_bytes();
+            assert_eq!(ShardMap::from_bytes(&b).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation() {
+        let good = ShardMap::new(4).to_bytes();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert_eq!(ShardMap::from_bytes(&bad), Err(ShardMapError::BadMagic));
+
+        let mut bad = good.clone();
+        bad[4] = SHARDMAP_VERSION + 1;
+        assert_eq!(
+            ShardMap::from_bytes(&bad),
+            Err(ShardMapError::BadVersion(SHARDMAP_VERSION + 1))
+        );
+
+        for cut in 0..good.len() {
+            assert!(
+                ShardMap::from_bytes(&good[..cut]).is_err(),
+                "prefix of {cut} bytes must not decode"
+            );
+        }
+
+        let mut zero = good.clone();
+        zero[5..9].copy_from_slice(&0u32.to_le_bytes());
+        assert_eq!(ShardMap::from_bytes(&zero), Err(ShardMapError::BadGroupCount(0)));
+    }
+
+    #[test]
+    fn group_seed_preserves_group_zero() {
+        assert_eq!(group_seed(12345, 0), 12345);
+        assert_ne!(group_seed(12345, 1), 12345);
+        // Distinct groups get distinct seeds.
+        let seeds: std::collections::HashSet<u64> =
+            (0..64).map(|g| group_seed(7, g)).collect();
+        assert_eq!(seeds.len(), 64);
+    }
+}

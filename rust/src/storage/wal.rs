@@ -135,6 +135,30 @@ impl Wal {
         self.dirty = false;
         Ok(())
     }
+
+    /// First half of a split barrier: push buffered records to the
+    /// kernel, without the fsync. Returns whether this WAL had pending
+    /// records. Used by the cross-group barrier, which flushes every
+    /// dirty group's WAL and then issues ONE filesystem-wide sync
+    /// instead of one fdatasync per group.
+    pub fn flush(&mut self) -> io::Result<bool> {
+        if !self.dirty {
+            return Ok(false);
+        }
+        self.w.flush()?;
+        Ok(true)
+    }
+
+    /// Second half of a split barrier: the caller has made the flushed
+    /// records durable by other means (e.g. `syncfs`).
+    pub fn mark_synced(&mut self) {
+        self.dirty = false;
+    }
+
+    /// The underlying file (for `syncfs` on its filesystem).
+    pub fn file(&self) -> &File {
+        self.w.get_ref()
+    }
 }
 
 fn encode_record(rec: &WalRecord, e: &mut Enc) {

@@ -69,6 +69,7 @@ fn expect_hello(conn: &mut TcpStream, from: usize, what: &str) {
 fn send_vote_request(conn: &mut TcpStream, candidate: usize, term: u64) {
     let f = Frame::Raft {
         from: candidate,
+        group: 0,
         msg: Message::RequestVote { term, candidate, last_log_index: 0, last_log_term: 0 },
     };
     write_frame(conn, &wire::encode(&f)).unwrap();

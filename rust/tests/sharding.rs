@@ -1,0 +1,215 @@
+//! Multi-Raft sharding suite: the keyspace partition, per-group routing,
+//! and the whole-stack behavior when a process hosts many lease-guarded
+//! groups (tentpole PR).
+//!
+//! Covered:
+//! * `ShardMap` wire agreement — the client routes with a map decoded
+//!   from the same bytes the servers serialize; they must agree on every
+//!   key forever (a disagreement silently splits a key across groups).
+//! * Simulated multi-group runs: per-shard linearizability in steady
+//!   state and under a nemesis that crashes one group's leader process
+//!   while other groups keep serving reads.
+//! * Fixed-seed determinism with many groups (byte-identical histories).
+//! * Real TCP cluster: 3 servers hosting 4 groups, kill the process
+//!   leading group 0 mid-run, require every shard's history linearizable
+//!   and read throughput to recover — the paper's crash drill, per shard.
+//! * Durable multi-group recovery: kill + respawn from per-group WALs.
+
+use std::time::Duration;
+
+use leaseguard::client::run_open_loop;
+use leaseguard::cluster::Cluster;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::figures::realcluster::RealCluster;
+use leaseguard::linearizability;
+use leaseguard::shard::{group_seed, ShardMap, MAX_GROUPS};
+use leaseguard::sim::{Fault, NemesisSchedule};
+use leaseguard::storage::FsyncPolicy;
+use leaseguard::testkit::TempDir;
+
+// ------------------------------------------------------------ shard map
+
+#[test]
+fn shardmap_serialized_agreement() {
+    // Client and servers must agree on the partition after a
+    // serialize/deserialize trip — for every key, not just samples.
+    let map = ShardMap::new(16);
+    let decoded = ShardMap::from_bytes(&map.to_bytes()).expect("decode");
+    assert_eq!(decoded.groups(), 16);
+    for key in 0..100_000u32 {
+        assert_eq!(map.group_of(key), decoded.group_of(key), "key {key}");
+    }
+}
+
+#[test]
+fn shardmap_rejects_foreign_bytes() {
+    let mut bytes = ShardMap::new(8).to_bytes();
+    bytes[4] = 99; // future version
+    assert!(ShardMap::from_bytes(&bytes).is_err());
+    let mut bytes = ShardMap::new(8).to_bytes();
+    bytes[0] ^= 0xFF; // corrupt magic
+    assert!(ShardMap::from_bytes(&bytes).is_err());
+    assert!(ShardMap::from_bytes(&[]).is_err());
+}
+
+#[test]
+fn group_seeds_are_distinct_and_preserve_group_zero() {
+    let seed = 0xDEAD_BEEF_u64;
+    assert_eq!(group_seed(seed, 0), seed, "group 0 must replay single-group runs");
+    let mut seen: Vec<u64> = (0..MAX_GROUPS as u32).map(|g| group_seed(seed, g)).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), MAX_GROUPS, "per-group seeds must not collide");
+}
+
+// ------------------------------------------------------------ simulator
+
+fn sim_params(groups: usize, seed: u64) -> Params {
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.seed = seed;
+    p.groups = groups;
+    p.duration_us = 1_500_000;
+    p.interarrival_us = 500.0;
+    p
+}
+
+#[test]
+fn multi_group_sim_steady_state_every_shard_linearizable() {
+    let p = sim_params(4, 42);
+    let rep = Cluster::new(p).run();
+    let map = ShardMap::new(4);
+    linearizability::assert_linearizable_sharded(&rep.history, &map);
+    // Uniform keys: every group must actually have served traffic.
+    let shards = rep.history.partition_by_shard(&map);
+    for (g, s) in shards.iter().enumerate() {
+        assert!(!s.entries.is_empty(), "group {g} served no operations");
+    }
+}
+
+#[test]
+fn crash_one_group_leader_while_other_shards_serve() {
+    // Crash the process leading group 0 (process crashes take down every
+    // group it hosts); groups led elsewhere keep serving reads through
+    // the outage, and every shard's history stays linearizable.
+    let mut p = sim_params(8, 11);
+    p.duration_us = 2_500_000;
+    let sched = NemesisSchedule::new()
+        .at(500_000, Fault::CrashLeader { restart_after_us: Some(600_000) });
+    let rep = Cluster::new(p).with_nemesis(sched).run();
+    assert_eq!(rep.faults_injected, 1);
+    let map = ShardMap::new(8);
+    linearizability::assert_linearizable_sharded(&rep.history, &map);
+    // During the outage (crash at 500ms, restart at 1.1s) the shards
+    // whose leader survived — plus inherited-lease reads elsewhere —
+    // keep the read path alive.
+    let during = rep.series.window_totals(true, 600_000, 1_000_000);
+    assert!(during.ok > 0, "no reads served during the single-process outage: {during:?}");
+}
+
+#[test]
+fn multi_group_runs_are_deterministic() {
+    // Fixed seed, many groups: two runs must be byte-identical — same
+    // event count, same origin, same history, op for op.
+    let a = Cluster::new(sim_params(8, 7)).run();
+    let b = Cluster::new(sim_params(8, 7)).run();
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.t0, b.t0);
+    assert_eq!(a.elections, b.elections);
+    assert_eq!(
+        format!("{:?}", a.history.entries),
+        format!("{:?}", b.history.entries),
+        "histories diverged under a fixed seed"
+    );
+}
+
+#[test]
+fn single_group_mode_unchanged_by_sharding() {
+    // groups=1 must behave exactly like the pre-sharding cluster: the
+    // map sends every key to group 0 and the sharded check degenerates
+    // to the whole-history check.
+    let map = ShardMap::new(1);
+    for key in 0..1000u32 {
+        assert_eq!(map.group_of(key), 0);
+    }
+    let rep = Cluster::new(sim_params(1, 42)).run();
+    let whole = linearizability::check(&rep.history);
+    let sharded = linearizability::check_sharded(&rep.history, &map);
+    assert_eq!(sharded.len(), 1);
+    assert_eq!(whole.len(), sharded[0].1.len());
+    assert!(whole.is_empty());
+}
+
+// ------------------------------------------------------------ real cluster
+
+fn real_params(groups: usize) -> Params {
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.nodes = 3;
+    p.groups = groups;
+    p.election_timeout_us = 200_000;
+    p.election_jitter_us = 150_000;
+    p.heartbeat_us = 50_000;
+    p.lease_duration_us = 400_000;
+    p.duration_us = 1_800_000;
+    p.interarrival_us = 1000.0;
+    p.value_bytes = 256;
+    p.seed = 42;
+    p
+}
+
+#[test]
+fn real_cluster_kill_group_leader_per_shard_linearizable() {
+    // The acceptance drill: 3 servers hosting 4 groups over one TCP
+    // transport each; kill the process leading group 0 mid-run; every
+    // shard's history must stay linearizable and reads must recover.
+    let p = real_params(4);
+    let mut cluster = RealCluster::spawn(&p, Duration::ZERO, None).expect("spawn");
+    let leaders =
+        cluster.wait_for_all_leaders(4, Duration::from_secs(10)).expect("all groups elect");
+    let addrs = cluster.addrs.clone();
+    let applies = cluster.applies.clone();
+    let pc = p.clone();
+    let client = std::thread::spawn(move || run_open_loop(&addrs, &pc, Some(applies)));
+    std::thread::sleep(Duration::from_millis(400));
+    cluster.kill(leaders[0]);
+    let rep = client.join().unwrap().expect("client");
+    cluster.shutdown();
+    let map = ShardMap::new(4);
+    linearizability::assert_linearizable_sharded(&rep.history, &map);
+    // Reads recover after the failover elections.
+    let tail = rep.series.window_totals(true, 1_400_000, 1_800_000);
+    assert!(tail.ok > 20, "reads should recover post-failover: {tail:?}");
+}
+
+#[test]
+fn durable_multi_group_kill_respawn_recovers_every_group() {
+    // Per-group WAL namespacing end to end: a killed server reboots from
+    // `data-dir/g<id>/…` for each of its 4 groups and rejoins them all.
+    let mut p = real_params(4);
+    p.duration_us = 900_000;
+    let dirs: Vec<_> =
+        (0..3).map(|i| TempDir::new(&format!("shard-respawn-{i}"))).collect();
+    let paths: Vec<std::path::PathBuf> = dirs.iter().map(|d| d.path().to_path_buf()).collect();
+    let mut cluster =
+        RealCluster::spawn_durable(&p, Duration::ZERO, None, &paths, FsyncPolicy::Group)
+            .expect("spawn");
+    let leaders =
+        cluster.wait_for_all_leaders(4, Duration::from_secs(10)).expect("all groups elect");
+    // Write through every group so each per-group WAL has entries.
+    let rep = run_open_loop(&cluster.addrs, &p, Some(cluster.applies.clone())).expect("client");
+    assert!(rep.write_latency.count() > 0, "no writes landed");
+    // Kill the group-0 leader and bring it back from disk.
+    cluster.kill(leaders[0]);
+    std::thread::sleep(Duration::from_millis(200));
+    cluster.respawn(leaders[0]).expect("respawn");
+    // Every group re-establishes a committed leader with the rebooted
+    // process back in the cluster.
+    cluster.wait_for_all_leaders(4, Duration::from_secs(10)).expect("groups recover");
+    // The per-group directories really exist (namespacing, not one WAL).
+    for g in 0..4 {
+        let wal = paths[leaders[0]].join(format!("g{g}")).join("wal");
+        assert!(wal.exists(), "missing per-group wal {}", wal.display());
+    }
+    cluster.shutdown();
+}

@@ -2,9 +2,10 @@
 //! the in-repo `testkit` property harness.
 //!
 //! Coverage contract (PR satellite): random frames over every
-//! [`Message`] variant, every [`FailReason`], empty entry batches, and
-//! zero-length payloads — the cases the `EntryBatch` refactor could
-//! plausibly have perturbed.
+//! [`Message`] variant, every [`FailReason`], empty entry batches,
+//! zero-length payloads, and random group ids — the cases the
+//! `EntryBatch` and multi-Raft framing refactors could plausibly have
+//! perturbed — plus header tampering (magic / version) on every shape.
 
 use leaseguard::clock::TimeInterval;
 use leaseguard::kv::Command;
@@ -56,7 +57,7 @@ fn gen_result(rng: &mut Rng) -> OpResult {
         0 => OpResult::WriteOk,
         1 => {
             let n = rng.below(16) as usize; // includes the empty read
-            OpResult::ReadOk((0..n).map(|_| rng.next_u64()).collect())
+            OpResult::ReadOk((0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>().into())
         }
         _ => OpResult::Failed(FAIL_REASONS[rng.below(6) as usize]),
     }
@@ -67,6 +68,7 @@ fn gen_frame(rng: &mut Rng) -> Frame {
         0 => Frame::HelloPeer { from: rng.below(16) as usize },
         1 => Frame::Raft {
             from: rng.below(8) as usize,
+            group: rng.below(64) as u32,
             msg: Message::RequestVote {
                 term: rng.below(1000),
                 candidate: rng.below(8) as usize,
@@ -76,6 +78,7 @@ fn gen_frame(rng: &mut Rng) -> Frame {
         },
         2 => Frame::Raft {
             from: rng.below(8) as usize,
+            group: rng.below(64) as u32,
             msg: Message::VoteReply {
                 term: rng.below(1000),
                 voter: rng.below(8) as usize,
@@ -84,6 +87,7 @@ fn gen_frame(rng: &mut Rng) -> Frame {
         },
         3 | 4 => Frame::Raft {
             from: rng.below(8) as usize,
+            group: rng.below(64) as u32,
             msg: Message::AppendEntries {
                 term: rng.below(1000),
                 leader: rng.below(8) as usize,
@@ -96,6 +100,7 @@ fn gen_frame(rng: &mut Rng) -> Frame {
         },
         5 => Frame::Raft {
             from: rng.below(8) as usize,
+            group: rng.below(64) as u32,
             msg: Message::AppendReply {
                 term: rng.below(1000),
                 from: rng.below(8) as usize,
@@ -164,6 +169,30 @@ fn prop_wire_truncation_never_panics() {
 }
 
 #[test]
+fn prop_wire_header_tamper_rejected() {
+    // Every frame starts with the versioned header; corrupting the magic
+    // or bumping the version must fail cleanly for any frame shape.
+    assert_prop(
+        PropConfig { cases: 300, seed: 0xBEEF, max_shrink_steps: 0 },
+        gen_frame,
+        |_| Vec::new(),
+        |f| {
+            let mut enc = wire::encode(f);
+            enc[1] = enc[1].wrapping_add(1); // future wire version
+            if wire::decode(&enc).is_ok() {
+                return Err(format!("bumped version decoded for {f:?}"));
+            }
+            enc[1] = enc[1].wrapping_sub(1);
+            enc[0] ^= 0xFF; // corrupt magic
+            if wire::decode(&enc).is_ok() {
+                return Err(format!("corrupt magic decoded for {f:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn every_fail_reason_roundtrips() {
     for r in FAIL_REASONS {
         let f = Frame::ClientResp(ClientResp {
@@ -179,6 +208,7 @@ fn every_fail_reason_roundtrips() {
 fn empty_batch_and_empty_payload_roundtrip() {
     let hb = Frame::Raft {
         from: 0,
+        group: 0,
         msg: Message::AppendEntries {
             term: 1,
             leader: 0,

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# One-shot CI gate: everything a PR must pass, in dependency order.
+#
+#   scripts/ci.sh            # full gate (fmt, clippy, build, tests, smoke)
+#   scripts/ci.sh --fast     # skip the real-cluster smoke run
+#
+# Stages:
+#   1. cargo fmt --check        — formatting is not negotiable
+#   2. cargo clippy -D warnings — lints are errors
+#   3. cargo build --release    — lib + bin + tests compile
+#   4. cargo test               — unit + integration suites (includes the
+#                                 multi-Raft sharding suite)
+#   5. 2-group real-cluster smoke — a short bench-cluster run with
+#      groups=2 over real loopback TCP: every group must elect, serve,
+#      and pass the per-shard linearizability check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== fmt =="
+cargo fmt --all -- --check
+
+echo "== clippy =="
+cargo clippy --all-targets --release -- -D warnings
+
+echo "== build =="
+cargo build --release --tests --benches
+
+echo "== tests =="
+cargo test --release
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== 2-group real-cluster smoke =="
+    cargo run --release -- bench-cluster \
+        --param groups=2 \
+        --param duration_us=1000000 \
+        --param interarrival_us=1000
+fi
+
+echo "ci: all gates passed"
