@@ -68,6 +68,8 @@ fn fanout_leader(entries: u64) -> (Node, TimeInterval) {
         heartbeat_us: 75_000,
         lease_renew_fraction: 0.0,
         max_entries_per_append: 1024,
+        group: 0,
+        recorder_capacity: 0, // bench the hot path without tracing
     };
     let (mut node, _) = Node::new(cfg, 1, TimeInterval::exact(0));
     let now = TimeInterval::exact(500_000);

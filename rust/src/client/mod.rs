@@ -434,3 +434,29 @@ pub fn run_open_loop(
         completed,
     })
 }
+
+/// Fetch a live [`crate::obs::StatusSnapshot`] from one server: sends a
+/// `StatusReq` asking for the last `tail` flight-recorder events per
+/// group and blocks (with a 5s read deadline) for the reply. Backs
+/// `leaseguard stat`.
+pub fn fetch_status(addr: &str, tail: u32) -> std::io::Result<crate::obs::StatusSnapshot> {
+    use std::io::{Error, ErrorKind};
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut enc = Enc::new();
+    wire::encode_into(&Frame::StatusReq { tail }, &mut enc);
+    {
+        let mut w = stream.try_clone()?;
+        write_frame(&mut w, &enc.buf)?;
+    }
+    let mut frames = FrameReader::new(stream);
+    match frames.next_frame()? {
+        Some(body) => match wire::decode(body) {
+            Ok(Frame::StatusResp(snap)) => Ok(*snap),
+            Ok(f) => Err(Error::new(ErrorKind::InvalidData, format!("unexpected frame {f:?}"))),
+            Err(e) => Err(Error::new(ErrorKind::InvalidData, e.0)),
+        },
+        None => Err(Error::new(ErrorKind::UnexpectedEof, "connection closed before status reply")),
+    }
+}

@@ -17,6 +17,7 @@ use crate::clock::TimeInterval;
 use crate::config::Params;
 use crate::history::{History, HistoryEntry, OpKind};
 use crate::metrics::{Histogram, TimeSeries};
+use crate::obs::{dump_window, FlightRecorder};
 use crate::prob::Rng;
 use crate::raft::{FailReason, Message, Node, NodeConfig, OpId, OpResult, Output, Role, TimerKind};
 use crate::shard::{group_seed, GroupId, ShardMap};
@@ -86,6 +87,25 @@ pub struct RunReport {
     /// Nemesis faults that actually fired (role-relative faults that
     /// found no live target still count as fired).
     pub faults_injected: u64,
+    /// Per-node flight recorders, flattened `group * nodes + process`
+    /// like `node_stats`. Empty rings when tracing is disabled.
+    pub recorders: Vec<FlightRecorder>,
+    /// Processes per group (the flattening stride for `recorders`).
+    pub nodes_per_group: usize,
+}
+
+impl RunReport {
+    /// Render every node's flight-recorder events inside `[from, to]`
+    /// (true sim time, µs) — the evidence trail attached to a failed
+    /// linearizability check. Labels are `g<group>/n<process>`.
+    pub fn dump_flight_window(&self, title: &str, from: Micros, to: Micros) -> String {
+        let n = self.nodes_per_group.max(1);
+        let labels: Vec<String> = (0..self.recorders.len())
+            .map(|i| format!("g{}/n{}", i / n, i % n))
+            .collect();
+        let refs: Vec<&FlightRecorder> = self.recorders.iter().collect();
+        dump_window(title, &labels, &refs, from, to)
+    }
 }
 
 pub struct Cluster {
@@ -160,7 +180,7 @@ impl Cluster {
                 }
                 let now = clocks[id].at(0);
                 let (node, outs) = Node::new(
-                    NodeConfig::from_params(id, &params),
+                    NodeConfig::from_params(id, &params).for_group(g),
                     group_seed(params.seed, g),
                     now,
                 );
@@ -280,6 +300,8 @@ impl Cluster {
             node_stats: self.nodes.iter().map(|n| n.stats).collect(),
             limbo_len: self.limbo_len,
             faults_injected: self.faults_injected,
+            recorders: self.nodes.iter().map(|n| n.recorder().clone()).collect(),
+            nodes_per_group: self.params.nodes,
         }
     }
 

@@ -172,6 +172,12 @@ pub struct Params {
     pub artifacts_dir: String,
     /// Throughput bucket width for availability timelines, µs.
     pub bucket_us: Micros,
+    /// Flight recorder on/off (off ⇒ zero-capacity ring: record is a
+    /// branch + return, nothing is stored). Tracing never perturbs sim
+    /// determinism either way — see `determinism_guard_tracing`.
+    pub flight_recorder: bool,
+    /// Events retained per node's flight-recorder ring.
+    pub flight_recorder_capacity: usize,
 }
 
 impl Default for Params {
@@ -210,6 +216,8 @@ impl Default for Params {
             use_xla_admission: false,
             artifacts_dir: "artifacts".to_string(),
             bucket_us: 50_000,
+            flight_recorder: true,
+            flight_recorder_capacity: 1024,
         }
     }
 }
@@ -258,6 +266,8 @@ impl Params {
             "use_xla_admission" => self.use_xla_admission = p(key, value)?,
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "bucket_us" => self.bucket_us = p(key, value)?,
+            "flight_recorder" => self.flight_recorder = p(key, value)?,
+            "flight_recorder_capacity" => self.flight_recorder_capacity = p(key, value)?,
             other => return Err(format!("unknown parameter '{other}'")),
         }
         Ok(())
@@ -333,6 +343,8 @@ impl Params {
         m.insert("crash_leader_at_us", self.crash_leader_at_us.to_string());
         m.insert("seed", self.seed.to_string());
         m.insert("use_xla_admission", self.use_xla_admission.to_string());
+        m.insert("flight_recorder", self.flight_recorder.to_string());
+        m.insert("flight_recorder_capacity", self.flight_recorder_capacity.to_string());
         m.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
     }
 }

@@ -75,8 +75,8 @@ pub fn run(base: &Params, scale: Scale, out_dir: &str) -> Result<String> {
         let mut limbo = 0u64;
         for _ in 0..100 {
             for h in cluster.handles.iter().flatten() {
-                if h.status.is_leader.load(std::sync::atomic::Ordering::Relaxed) {
-                    limbo = limbo.max(h.status.limbo_len.load(std::sync::atomic::Ordering::Relaxed));
+                if h.status.group(0).is_leader.load(std::sync::atomic::Ordering::Relaxed) {
+                    limbo = limbo.max(h.status.group(0).limbo_len.get().max(0) as u64);
                 }
             }
             std::thread::sleep(Duration::from_millis(10));

@@ -91,8 +91,8 @@ impl RealCluster {
         loop {
             for (i, h) in self.handles.iter().enumerate() {
                 if let Some(h) = h {
-                    if h.status.is_leader.load(Ordering::Relaxed)
-                        && h.status.commit_index.load(Ordering::Relaxed) >= 1
+                    if h.status.group(0).is_leader.load(Ordering::Relaxed)
+                        && h.status.group(0).commit_index.get() >= 1
                     {
                         return Some(i);
                     }
@@ -118,8 +118,7 @@ impl RealCluster {
             let mut leader_of = vec![usize::MAX; groups];
             for (i, h) in self.handles.iter().enumerate() {
                 if let Some(h) = h {
-                    let led = h.status.leader_groups.load(Ordering::Relaxed)
-                        & h.status.committed_groups.load(Ordering::Relaxed);
+                    let led = h.status.leader_groups() & h.status.committed_groups();
                     for (g, l) in leader_of.iter_mut().enumerate() {
                         if led & (1 << g) != 0 {
                             *l = i;
@@ -217,7 +216,7 @@ mod tests {
         // The respawned follower catches up to the cluster's term.
         let deadline = std::time::Instant::now() + Duration::from_secs(5);
         loop {
-            let t = c.handles[follower].as_ref().unwrap().status.term.load(Ordering::Relaxed);
+            let t = c.handles[follower].as_ref().unwrap().status.group(0).term.get();
             if t >= 1 {
                 break;
             }

@@ -34,6 +34,7 @@
 //! | [`workload`] | open-loop workload generators (§6.3-§6.6) |
 //! | [`history`], [`linearizability`] | client histories + checker (§6.2) |
 //! | [`metrics`], [`report`] | histograms, time series, figure rendering |
+//! | [`obs`] | observability: flight recorder, metrics registry, live introspection |
 //! | [`runtime`] | PJRT artifact loading + batched read admission |
 //! | [`server`], [`client`] | real-mode TCP cluster + open-loop client (§7) |
 //! | [`shard`] | multi-Raft sharding: ShardMap keyspace partition + per-group routing |
@@ -54,6 +55,7 @@ pub mod kv;
 pub mod lease;
 pub mod linearizability;
 pub mod metrics;
+pub mod obs;
 pub mod prob;
 pub mod raft;
 pub mod report;

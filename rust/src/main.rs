@@ -5,6 +5,7 @@
 //! leaseguard scenarios [--json [PATH]]           Nemesis fault matrix × consistency modes
 //! leaseguard figure N [--scale 0.5] [--out DIR]  regenerate paper figure N (5-11)
 //! leaseguard serve    --node I --listen ADDR --peers A,B,C [--param k=v ...]
+//! leaseguard stat     --addr HOST:PORT [--json] [--tail N] live server introspection
 //! leaseguard bench-cluster [--param k=v ...]     in-process real cluster + open-loop client
 //! leaseguard check    [--artifacts DIR]          verify AOT artifacts load & agree with scalar
 //! leaseguard params                              dump default parameters
@@ -64,6 +65,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("serve") => cmd_serve(args, params),
+        Some("stat") => cmd_stat(args),
         Some("bench-cluster") => cmd_bench_cluster(args, params),
         Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(&params),
@@ -81,7 +83,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|bench|bench-cluster|check|params> [--param k=v ...]
+const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|stat|bench|bench-cluster|check|params> [--param k=v ...]
   sim                     one simulated run (availability timeline + latency + linearizability)
   scenarios               Nemesis fault matrix: every scenario x {leaseguard,quorum,inconsistent},
                           linearizability-checked (--json [PATH] writes SCENARIOS.json).
@@ -92,6 +94,9 @@ const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|bench|bench-c
                           figure 11 also takes --groups G for the multi-Raft axis)
   serve                   one real server (--node I --listen ADDR --peers A,B,C
                           --data-dir PATH for crash durability, --fsync always|group|never)
+  stat                    live introspection of a running server (--addr HOST:PORT;
+                          --json for machine-readable output, --tail N flight-recorder
+                          events per group, default 32)
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
   bench-cluster           in-process 3-node TCP cluster + open-loop client
   check                   load AOT artifacts, cross-check engine vs scalar oracle
@@ -248,6 +253,63 @@ fn cmd_serve(args: &Args, params: Params) -> Result<()> {
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
+}
+
+fn cmd_stat(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| anyhow!("--addr HOST:PORT required"))?;
+    let tail: u32 = args.get_parse("tail").map_err(|e| anyhow!(e))?.unwrap_or(32);
+    let snap = leaseguard::client::fetch_status(addr, tail)?;
+    if args.get("json").is_some() {
+        println!("{}", snap.to_json());
+        return Ok(());
+    }
+    println!("server {addr}: {} group(s)", snap.groups.len());
+    println!(
+        "process: wal_barriers={} wal_syncs={} reads_batched={} engine_batches={}",
+        snap.wal_barriers, snap.wal_syncs, snap.reads_batched, snap.engine_batches
+    );
+    for g in &snap.groups {
+        println!(
+            "group {} [{}] term={} commit={} limbo={}",
+            g.group,
+            if g.is_leader { "LEADER" } else { "follower" },
+            g.term,
+            g.commit_index,
+            g.limbo_len
+        );
+        println!(
+            "  reads:  lease_local={} inherited={} quorum={} deferred={} rejected: no_lease={} limbo={}",
+            g.reads_lease_local,
+            g.reads_lease_inherited,
+            g.reads_quorum,
+            g.reads_deferred,
+            g.reads_rejected_no_lease,
+            g.reads_rejected_limbo
+        );
+        println!(
+            "  writes: accepted={} blocked_transfer={} rejected_gate={}  elections_won={}",
+            g.writes_accepted, g.writes_blocked_transfer, g.writes_rejected_gate, g.elections_won
+        );
+        for (name, st) in leaseguard::obs::registry::STAGE_NAMES.iter().zip(g.stages.iter()) {
+            if st.count > 0 {
+                println!(
+                    "  stage {name:<9} n={:<7} p50={} p90={} p99={} max={}",
+                    st.count,
+                    fmt_us(st.p50_us),
+                    fmt_us(st.p90_us),
+                    fmt_us(st.p99_us),
+                    fmt_us(st.max_us)
+                );
+            }
+        }
+        if !g.events.is_empty() {
+            println!("  last {} flight-recorder event(s):", g.events.len());
+            for e in &g.events {
+                println!("  {}", e.render());
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_bench_cluster(args: &Args, params: Params) -> Result<()> {

@@ -11,9 +11,14 @@ use crate::Micros;
 
 /// Log-bucketed latency histogram over µs values.
 ///
-/// Layout: 64 "decades" of 32 sub-buckets (powers of two with linear
-/// subdivision), covering 1µs .. ~5 days with ≤ ~3% relative error —
-/// plenty for p50/p90/p99 over operation latencies.
+/// Layout: 40 "decades" (powers of two) of 32 linear sub-buckets each —
+/// `BUCKETS` = 1280 counts total. Decade 0 covers 0..32µs exactly;
+/// decade d ≥ 1 covers `[32·2^(d-1), 32·2^d)` µs, so the last in-range
+/// bucket starts at `(63/32)·2^43` µs and the covered range is
+/// 1µs .. ~2^44µs (≈ 200 days) with ≤ ~3% relative error — plenty for
+/// p50/p90/p99 over operation latencies. Values past the top bucket
+/// clamp into it (`record` never panics, never drops a sample); see
+/// `covered_range_and_overflow_clamp`.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     counts: Vec<u64>,
@@ -24,9 +29,13 @@ pub struct Histogram {
 }
 
 const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two
-const SUB: usize = 1 << SUB_BITS;
+pub(crate) const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: 40 decades × `SUB` sub-buckets. Shared with the
+/// concurrent variant in [`crate::obs::registry::ConcurrentHistogram`]
+/// so snapshots merge bucket-for-bucket.
+pub(crate) const BUCKETS: usize = SUB * 40;
 
-fn bucket_index(v: Micros) -> usize {
+pub(crate) fn bucket_index(v: Micros) -> usize {
     let v = v.max(0) as u64;
     if v < SUB as u64 {
         return v as usize;
@@ -37,7 +46,7 @@ fn bucket_index(v: Micros) -> usize {
     ((top - SUB_BITS + 1) as usize) * SUB + sub
 }
 
-fn bucket_low(idx: usize) -> u64 {
+pub(crate) fn bucket_low(idx: usize) -> u64 {
     let decade = idx / SUB;
     let sub = idx % SUB;
     if decade == 0 {
@@ -49,7 +58,16 @@ fn bucket_low(idx: usize) -> u64 {
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { counts: vec![0; SUB * 40], total: 0, sum: 0, min: Micros::MAX, max: 0 }
+        Histogram { counts: vec![0; BUCKETS], total: 0, sum: 0, min: Micros::MAX, max: 0 }
+    }
+
+    /// Rebuild from raw parts — used by
+    /// [`crate::obs::registry::ConcurrentHistogram::snapshot`] to turn
+    /// atomically-recorded counts back into a queryable histogram.
+    /// `counts.len()` must be `BUCKETS`.
+    pub(crate) fn from_parts(counts: Vec<u64>, total: u64, sum: u128, min: Micros, max: Micros) -> Self {
+        debug_assert_eq!(counts.len(), BUCKETS);
+        Histogram { counts, total, sum, min: if total == 0 { Micros::MAX } else { min }, max }
     }
 
     #[inline]
@@ -246,6 +264,33 @@ mod tests {
         h.record(155);
         assert_eq!(h.p50(), 155);
         assert_eq!(h.p99(), 155);
+    }
+
+    #[test]
+    fn covered_range_and_overflow_clamp() {
+        // Pin the actual layout the module doc promises: 40 decades of
+        // 32 sub-buckets. The last in-range bucket is index BUCKETS-1,
+        // whose low bound is (SUB + 31) << 38 = (63/32)·2^43 µs, so the
+        // covered range tops out around 2^44 µs ≈ 200 days (NOT the
+        // "64 decades / ~5 days" an older doc claimed).
+        assert_eq!(BUCKETS, 1280);
+        let top_low = bucket_low(BUCKETS - 1);
+        assert_eq!(top_low, ((SUB as u64) + 31) << 38);
+        assert_eq!(bucket_index(top_low as Micros), BUCKETS - 1);
+        // ~200 days in µs sits inside the covered range...
+        let days200: Micros = 200 * 24 * 3600 * 1_000_000;
+        assert!(bucket_index(days200) < BUCKETS, "200 days must be in range");
+        // ...while anything larger clamps into the top bucket instead of
+        // indexing out of bounds: record() must count it there.
+        assert!(bucket_index(Micros::MAX) >= BUCKETS, "i64::MAX naturally overflows the layout");
+        let mut h = Histogram::new();
+        h.record(Micros::MAX);
+        h.record(top_low as Micros);
+        assert_eq!(h.counts[BUCKETS - 1], 2, "overflow must clamp into the last bucket");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), Micros::MAX);
+        // Quantiles over a clamped histogram stay within [min, max].
+        assert!(h.p99() >= top_low as Micros);
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Flight recorder: a fixed-capacity, allocation-free ring buffer of
+//! typed protocol events, one per node (sim and real).
+//!
+//! Every consequential protocol decision — election started/won, lease
+//! acquired/inherited, read admitted/deferred/rejected (with the lease
+//! state machine's reason), append fan-out, WAL barrier, commit advance
+//! — is recorded as a fixed-size [`FlightEvent`] stamped with the
+//! node's time, term, and group. When a linearizability check or a
+//! crash-test assertion fails, the window of events around the
+//! violation is dumped so the verdict comes with an evidence trail; a
+//! live server exposes its tail via the `leaseguard stat` RPC.
+//!
+//! Determinism contract: the recorder draws no randomness and reads no
+//! clock — callers pass the timestamp they already hold — and recording
+//! never changes control flow, so a fixed-seed sim run is byte-identical
+//! with the recorder on or off (guarded by
+//! `determinism_guard_tracing`). With capacity 0 the recorder is
+//! disabled and [`FlightRecorder::record`] is a branch and a return: no
+//! buffer is allocated, nothing is stored.
+
+use crate::shard::GroupId;
+use crate::Micros;
+
+/// What happened. The discriminant is the wire encoding — append only,
+/// never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Node started an election. a = candidate's new term.
+    ElectionStarted = 0,
+    /// Node won and became leader. a = limbo length inherited.
+    ElectionWon = 1,
+    /// Leader stepped down. a = new (higher) observed term.
+    SteppedDown = 2,
+    /// New leader inherited the predecessor's lease window (§3.3).
+    /// a = limbo length, b = limbo region's upper log index.
+    LeaseInherited = 3,
+    /// Leader's own-term lease became usable (first own-term commit).
+    /// a = commit index that activated it.
+    LeaseAcquired = 4,
+    /// Read served locally under the leader's own fresh lease. a = key.
+    ReadServedLocal = 5,
+    /// Read served under an *inherited* lease while awaiting our own —
+    /// the paper's headline optimization. a = key.
+    ReadServedInherited = 6,
+    /// Read served via a quorum round (ReadIndex-style). a = key.
+    ReadServedQuorum = 7,
+    /// Read deferred until the quorum round completes. a = key.
+    ReadDeferred = 8,
+    /// Read rejected: no usable lease. a = key.
+    ReadRejectedNoLease = 9,
+    /// Read rejected: key intersects the limbo region. a = key.
+    ReadRejectedLimbo = 10,
+    /// Write accepted into the log. a = key, b = log index.
+    WriteAccepted = 11,
+    /// Write rejected by the commit gate during lease transfer (§3.2).
+    /// a = key.
+    WriteRejectedGate = 12,
+    /// Commit advance blocked by the gate. a = blocked index.
+    CommitGateBlocked = 13,
+    /// AppendEntries fan-out round (one event per round, not per peer).
+    /// a = leader's last log index at fan-out, b = round seq.
+    AppendFanout = 14,
+    /// WAL barrier completed (real path). a = groups flushed, b = syncs.
+    WalBarrier = 15,
+    /// Commit index advanced. a = new commit index.
+    CommitAdvance = 16,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ElectionStarted => "election_started",
+            EventKind::ElectionWon => "election_won",
+            EventKind::SteppedDown => "stepped_down",
+            EventKind::LeaseInherited => "lease_inherited",
+            EventKind::LeaseAcquired => "lease_acquired",
+            EventKind::ReadServedLocal => "read_served_local",
+            EventKind::ReadServedInherited => "read_served_inherited",
+            EventKind::ReadServedQuorum => "read_served_quorum",
+            EventKind::ReadDeferred => "read_deferred",
+            EventKind::ReadRejectedNoLease => "read_rejected_no_lease",
+            EventKind::ReadRejectedLimbo => "read_rejected_limbo",
+            EventKind::WriteAccepted => "write_accepted",
+            EventKind::WriteRejectedGate => "write_rejected_gate",
+            EventKind::CommitGateBlocked => "commit_gate_blocked",
+            EventKind::AppendFanout => "append_fanout",
+            EventKind::WalBarrier => "wal_barrier",
+            EventKind::CommitAdvance => "commit_advance",
+        }
+    }
+
+    /// Wire decoding; `None` for unknown discriminants (future events
+    /// from a newer peer are dropped, not misread).
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::ElectionStarted,
+            1 => EventKind::ElectionWon,
+            2 => EventKind::SteppedDown,
+            3 => EventKind::LeaseInherited,
+            4 => EventKind::LeaseAcquired,
+            5 => EventKind::ReadServedLocal,
+            6 => EventKind::ReadServedInherited,
+            7 => EventKind::ReadServedQuorum,
+            8 => EventKind::ReadDeferred,
+            9 => EventKind::ReadRejectedNoLease,
+            10 => EventKind::ReadRejectedLimbo,
+            11 => EventKind::WriteAccepted,
+            12 => EventKind::WriteRejectedGate,
+            13 => EventKind::CommitGateBlocked,
+            14 => EventKind::AppendFanout,
+            15 => EventKind::WalBarrier,
+            16 => EventKind::CommitAdvance,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded event. Fixed-size and `Copy` so the ring never
+/// allocates after construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Node-local time of the event, µs.
+    pub at: Micros,
+    /// Raft term at the time of the event.
+    pub term: u64,
+    /// Raft group the node serves.
+    pub group: GroupId,
+    pub kind: EventKind,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub a: u64,
+    /// Second kind-specific payload.
+    pub b: u64,
+}
+
+impl FlightEvent {
+    /// One-line human rendering, used by dumps and `leaseguard stat`.
+    pub fn render(&self) -> String {
+        format!(
+            "{:>12}µs g{} t{:<3} {:<24} a={} b={}",
+            self.at,
+            self.group,
+            self.term,
+            self.kind.name(),
+            self.a,
+            self.b
+        )
+    }
+}
+
+/// Fixed-capacity ring buffer of [`FlightEvent`]s. Capacity 0 disables
+/// recording entirely (no buffer, `record` is a branch + return).
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    buf: Vec<FlightEvent>,
+    /// Ring capacity. Stored explicitly (not `buf.capacity()`, which the
+    /// allocator may round up) so the wrap point is deterministic.
+    cap: usize,
+    /// Next write position (valid only when capacity > 0).
+    next: usize,
+    /// Total events ever recorded (≥ retained count; the difference is
+    /// how many the ring has overwritten).
+    total: u64,
+    group: GroupId,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize, group: GroupId) -> Self {
+        FlightRecorder {
+            buf: Vec::with_capacity(capacity),
+            cap: capacity,
+            next: 0,
+            total: 0,
+            group,
+        }
+    }
+
+    /// A recorder that stores nothing (the disabled configuration).
+    pub fn disabled() -> Self {
+        Self::new(0, 0)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total_recorded(&self) -> u64 {
+        self.total
+    }
+
+    pub fn group(&self) -> GroupId {
+        self.group
+    }
+
+    /// Record one event. No allocation (the ring was sized at
+    /// construction), no clock reads, no RNG — `at` and `term` come
+    /// from the caller.
+    #[inline]
+    pub fn record(&mut self, at: Micros, term: u64, kind: EventKind, a: u64, b: u64) {
+        let cap = self.cap;
+        if cap == 0 {
+            return;
+        }
+        let ev = FlightEvent { at, term, group: self.group, kind, a, b };
+        if self.buf.len() < cap {
+            self.buf.push(ev); // within preallocated capacity: no realloc
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % cap;
+        self.total += 1;
+    }
+
+    /// Iterate retained events oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &FlightEvent> {
+        let split = if self.buf.len() < self.cap { 0 } else { self.next };
+        self.buf[split..].iter().chain(self.buf[..split].iter())
+    }
+
+    /// The most recent `n` events, oldest → newest.
+    pub fn tail(&self, n: usize) -> Vec<FlightEvent> {
+        let skip = self.len().saturating_sub(n);
+        self.iter().skip(skip).copied().collect()
+    }
+
+    /// Retained events with `from <= at <= to`, oldest → newest.
+    pub fn window(&self, from: Micros, to: Micros) -> Vec<FlightEvent> {
+        self.iter().filter(|e| e.at >= from && e.at <= to).copied().collect()
+    }
+}
+
+/// Render a dump of every recorder's events inside `[from, to]`,
+/// labeled per node — the evidence trail attached to a failed
+/// linearizability check. `labels[i]` describes `recorders[i]`
+/// (e.g. "g0/n2").
+pub fn dump_window(
+    title: &str,
+    labels: &[String],
+    recorders: &[&FlightRecorder],
+    from: Micros,
+    to: Micros,
+) -> String {
+    let mut out = format!("=== flight recorder dump: {title} (window {from}..{to}µs) ===\n");
+    for (label, rec) in labels.iter().zip(recorders.iter()) {
+        let events = rec.window(from, to);
+        let overwritten = rec.total_recorded() - rec.len() as u64;
+        out.push_str(&format!(
+            "--- node {label}: {} event(s) in window, {} retained, {} overwritten ---\n",
+            events.len(),
+            rec.len(),
+            overwritten
+        ));
+        for e in &events {
+            out.push_str(&e.render());
+            out.push('\n');
+        }
+    }
+    out.push_str("=== end dump ===\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_stores_nothing() {
+        let mut r = FlightRecorder::disabled();
+        r.record(1, 1, EventKind::ElectionWon, 0, 0);
+        assert!(!r.is_enabled());
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.total_recorded(), 0);
+        assert_eq!(r.capacity(), 0);
+    }
+
+    #[test]
+    fn ring_retains_most_recent_in_order() {
+        let mut r = FlightRecorder::new(4, 2);
+        for i in 0..10u64 {
+            r.record(i as Micros, 1, EventKind::CommitAdvance, i, 0);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total_recorded(), 10);
+        let got: Vec<u64> = r.iter().map(|e| e.a).collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+        assert!(r.iter().all(|e| e.group == 2));
+    }
+
+    #[test]
+    fn ring_does_not_reallocate_past_capacity() {
+        let mut r = FlightRecorder::new(8, 0);
+        let cap_before = r.buf.capacity();
+        let ptr_before = r.buf.as_ptr();
+        for i in 0..1000 {
+            r.record(i, 1, EventKind::WriteAccepted, 0, 0);
+        }
+        assert_eq!(r.buf.capacity(), cap_before);
+        assert_eq!(r.buf.as_ptr(), ptr_before);
+    }
+
+    #[test]
+    fn tail_and_window() {
+        let mut r = FlightRecorder::new(16, 0);
+        for i in 0..8 {
+            r.record(i * 100, 1, EventKind::ReadServedLocal, i as u64, 0);
+        }
+        let t = r.tail(3);
+        assert_eq!(t.iter().map(|e| e.a).collect::<Vec<_>>(), vec![5, 6, 7]);
+        let w = r.window(250, 550);
+        assert_eq!(w.iter().map(|e| e.at).collect::<Vec<_>>(), vec![300, 400, 500]);
+        // tail(n > len) returns everything.
+        assert_eq!(r.tail(100).len(), 8);
+    }
+
+    #[test]
+    fn partially_filled_iterates_in_insert_order() {
+        let mut r = FlightRecorder::new(64, 0);
+        r.record(5, 1, EventKind::ElectionStarted, 0, 0);
+        r.record(9, 1, EventKind::ElectionWon, 0, 0);
+        let kinds: Vec<EventKind> = r.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![EventKind::ElectionStarted, EventKind::ElectionWon]);
+    }
+
+    #[test]
+    fn kind_roundtrips_through_u8() {
+        for raw in 0u8..=40 {
+            if let Some(k) = EventKind::from_u8(raw) {
+                assert_eq!(k as u8, raw);
+                assert!(!k.name().is_empty());
+            } else {
+                assert!(raw > 16, "kind {raw} should decode");
+            }
+        }
+    }
+
+    #[test]
+    fn dump_window_renders_labels_and_events() {
+        let mut a = FlightRecorder::new(8, 0);
+        let mut b = FlightRecorder::new(8, 1);
+        a.record(100, 3, EventKind::ReadServedInherited, 42, 0);
+        b.record(900, 3, EventKind::ReadRejectedLimbo, 7, 0);
+        let labels = vec!["g0/n0".to_string(), "g1/n1".to_string()];
+        let dump = dump_window("test", &labels, &[&a, &b], 0, 500);
+        assert!(dump.contains("g0/n0"), "{dump}");
+        assert!(dump.contains("read_served_inherited"), "{dump}");
+        // b's event at 900µs is outside the window.
+        assert!(!dump.contains("read_rejected_limbo"), "{dump}");
+        assert!(dump.contains("g1/n1: 0 event(s)"), "{dump}");
+    }
+}

@@ -1,0 +1,346 @@
+//! Metrics registry: process-wide atomic counters/gauges with
+//! per-group labels, plus a concurrent-recording variant of
+//! [`crate::metrics::Histogram`].
+//!
+//! This replaces the ad-hoc `Status` atomics the real server used to
+//! carry: instead of a flat struct whose scalar fields silently meant
+//! "group 0 only" after the multi-Raft refactor, the registry holds one
+//! [`GroupMetrics`] per Raft group — the per-group gauges *are* the
+//! source of truth, and the old `leader_groups`/`committed_groups`
+//! bitmasks are derived views ([`Registry::leader_groups`]).
+//!
+//! The paper-specific lease accounting lives here: reads served under
+//! the leader's own lease vs. an *inherited* lease vs. a quorum round
+//! vs. rejected (and why), and writes accepted vs. blocked during a
+//! lease transfer. The per-stage op-latency breakdown
+//! (queue → persist → replicate → commit → apply → reply) is recorded
+//! into [`ConcurrentHistogram`]s per group by the server's event loop.
+//!
+//! Everything is lock-free: counters and gauges are relaxed atomics,
+//! histogram recording is one relaxed `fetch_add` per bucket plus
+//! min/max updates. Writers never block readers; a snapshot taken
+//! mid-update is merely slightly stale, never torn in a way that
+//! matters (each field is individually atomic).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+use crate::metrics::{self, Histogram};
+use crate::shard::GroupId;
+use crate::Micros;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with an externally-maintained total (used when the
+    /// event loop mirrors a node's internal stats into the registry).
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Concurrent-recording variant of [`Histogram`]: same bucket layout
+/// (shared `bucket_index`), but `record(&self)` works from any thread.
+/// Snapshot back into a plain [`Histogram`] for quantile queries.
+#[derive(Debug)]
+pub struct ConcurrentHistogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicI64,
+    max: AtomicI64,
+}
+
+impl ConcurrentHistogram {
+    pub fn new() -> Self {
+        let mut counts = Vec::with_capacity(metrics::BUCKETS);
+        counts.resize_with(metrics::BUCKETS, AtomicU64::default);
+        ConcurrentHistogram {
+            counts,
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicI64::new(Micros::MAX),
+            max: AtomicI64::new(0),
+        }
+    }
+
+    /// Record one value; lock-free, callable from any thread. Same
+    /// clamp-into-top-bucket overflow behavior as `Histogram::record`.
+    #[inline]
+    pub fn record(&self, v: Micros) {
+        let idx = metrics::bucket_index(v).min(self.counts.len() - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v.max(0) as u64, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Materialize a point-in-time [`Histogram`] for quantile queries.
+    pub fn snapshot(&self) -> Histogram {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total = counts.iter().sum(); // consistent with the bucket copy
+        Histogram::from_parts(
+            counts,
+            total,
+            self.sum.load(Ordering::Relaxed) as u128,
+            self.min.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Default for ConcurrentHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The op pipeline stages the latency breakdown covers, in pipeline
+/// order. Indexes into [`GroupMetrics::stages`].
+pub const STAGE_NAMES: [&str; 6] = ["queue", "persist", "replicate", "commit", "apply", "reply"];
+pub const STAGE_QUEUE: usize = 0;
+pub const STAGE_PERSIST: usize = 1;
+pub const STAGE_REPLICATE: usize = 2;
+pub const STAGE_COMMIT: usize = 3;
+pub const STAGE_APPLY: usize = 4;
+pub const STAGE_REPLY: usize = 5;
+
+/// All metrics for one Raft group.
+#[derive(Debug, Default)]
+pub struct GroupMetrics {
+    // -- gauges: current protocol state --
+    pub is_leader: AtomicBool,
+    pub term: Gauge,
+    pub commit_index: Gauge,
+    pub limbo_len: Gauge,
+
+    // -- lease accounting (the paper's claims, countable live) --
+    /// Reads served locally under the leader's own fresh lease.
+    pub reads_lease_local: Counter,
+    /// Reads served under an *inherited* lease while awaiting our own
+    /// (§3.3 — the headline optimization).
+    pub reads_lease_inherited: Counter,
+    /// Reads that took a quorum round (ReadIndex-style).
+    pub reads_quorum: Counter,
+    /// Reads parked awaiting a quorum round's completion.
+    pub reads_deferred: Counter,
+    /// Reads rejected: no usable lease.
+    pub reads_rejected_no_lease: Counter,
+    /// Reads rejected: key intersects the limbo region.
+    pub reads_rejected_limbo: Counter,
+    /// Writes appended to the log.
+    pub writes_accepted: Counter,
+    /// Commit advances blocked by the gate during a lease transfer
+    /// (§3.2) — "writes blocked during transfer".
+    pub writes_blocked_transfer: Counter,
+    /// Writes rejected outright by the lease gate.
+    pub writes_rejected_gate: Counter,
+    /// Elections won by this node for this group.
+    pub elections_won: Counter,
+
+    /// Per-stage op latency: queue → persist → replicate → commit →
+    /// apply → reply, indexed by the `STAGE_*` constants.
+    pub stages: [ConcurrentHistogram; 6],
+}
+
+/// Process-wide registry: one [`GroupMetrics`] per Raft group plus
+/// whole-process counters. Shared as `Arc<Registry>` between the
+/// server's event loop, its listener/client threads, and test
+/// harnesses.
+#[derive(Debug)]
+pub struct Registry {
+    groups: Vec<GroupMetrics>,
+    /// Persist-before-route barriers executed (one per event batch that
+    /// had dirty state).
+    pub wal_barriers: Counter,
+    /// Physical fsyncs issued across all barriers (batching across
+    /// groups means barriers ≥ syncs is NOT implied; see MultiStorage).
+    pub wal_syncs: Counter,
+    /// Client reads admitted through batched lease admission.
+    pub reads_batched: Counter,
+    /// Batched-admission engine invocations.
+    pub engine_batches: Counter,
+}
+
+impl Registry {
+    pub fn new(groups: usize) -> Self {
+        let mut v = Vec::with_capacity(groups);
+        v.resize_with(groups, GroupMetrics::default);
+        Registry {
+            groups: v,
+            wal_barriers: Counter::new(),
+            wal_syncs: Counter::new(),
+            reads_batched: Counter::new(),
+            engine_batches: Counter::new(),
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, g: GroupId) -> &GroupMetrics {
+        &self.groups[g as usize]
+    }
+
+    pub fn groups(&self) -> &[GroupMetrics] {
+        &self.groups
+    }
+
+    /// Bitmask of groups this process currently leads — derived from
+    /// the per-group gauges, so it can never drift from them (the old
+    /// `Status` kept scalar group-0 fields *and* a bitmask, a trap).
+    pub fn leader_groups(&self) -> u64 {
+        let mut mask = 0u64;
+        for (g, m) in self.groups.iter().enumerate() {
+            if m.is_leader.load(Ordering::Relaxed) {
+                mask |= 1 << g;
+            }
+        }
+        mask
+    }
+
+    /// Bitmask of groups whose commit index has advanced past zero.
+    pub fn committed_groups(&self) -> u64 {
+        let mut mask = 0u64;
+        for (g, m) in self.groups.iter().enumerate() {
+            if m.commit_index.get() > 0 {
+                mask |= 1 << g;
+            }
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.set(2);
+        assert_eq!(c.get(), 2);
+        let g = Gauge::new();
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn concurrent_histogram_matches_sequential() {
+        let ch = ConcurrentHistogram::new();
+        let mut h = Histogram::new();
+        for v in [1, 10, 100, 1000, 10_000, 100_000] {
+            ch.record(v);
+            h.record(v);
+        }
+        let snap = ch.snapshot();
+        assert_eq!(snap.count(), h.count());
+        assert_eq!(snap.p50(), h.p50());
+        assert_eq!(snap.p99(), h.p99());
+        assert_eq!(snap.min(), h.min());
+        assert_eq!(snap.max(), h.max());
+        assert!((snap.mean() - h.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_histogram_from_threads() {
+        let ch = Arc::new(ConcurrentHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ch = Arc::clone(&ch);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    ch.record((t * 1000 + i) as Micros);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = ch.snapshot();
+        assert_eq!(snap.count(), 4000);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.max(), 3999);
+    }
+
+    #[test]
+    fn empty_concurrent_histogram_snapshot() {
+        let snap = ConcurrentHistogram::new().snapshot();
+        assert_eq!(snap.count(), 0);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.p99(), 0);
+    }
+
+    #[test]
+    fn registry_masks_derive_from_gauges() {
+        let r = Registry::new(4);
+        r.group(1).is_leader.store(true, Ordering::Relaxed);
+        r.group(3).is_leader.store(true, Ordering::Relaxed);
+        r.group(0).commit_index.set(5);
+        r.group(1).commit_index.set(9);
+        assert_eq!(r.leader_groups(), 0b1010);
+        assert_eq!(r.committed_groups(), 0b0011);
+        assert_eq!(r.num_groups(), 4);
+    }
+
+    #[test]
+    fn stage_constants_cover_array() {
+        assert_eq!(STAGE_NAMES.len(), 6);
+        let m = GroupMetrics::default();
+        m.stages[STAGE_QUEUE].record(10);
+        m.stages[STAGE_REPLY].record(20);
+        assert_eq!(m.stages[STAGE_QUEUE].count(), 1);
+        assert_eq!(m.stages[STAGE_REPLY].count(), 1);
+        assert_eq!(m.stages[STAGE_PERSIST].count() + m.stages[STAGE_REPLICATE].count(), 0);
+        assert_eq!(m.stages[STAGE_COMMIT].count() + m.stages[STAGE_APPLY].count(), 0);
+    }
+}

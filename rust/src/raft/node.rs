@@ -14,7 +14,9 @@ use crate::clock::TimeInterval;
 use crate::config::{ConsistencyMode, Params};
 use crate::kv::{store::ReadOutcome, Command, Store};
 use crate::lease::{LeaseGuardState, OngaroState, ReadGate};
+use crate::obs::{EventKind, FlightRecorder};
 use crate::prob::Rng;
+use crate::shard::GroupId;
 use crate::{Micros, NodeId};
 
 use super::batch::EntryBatch;
@@ -35,6 +37,10 @@ pub struct NodeConfig {
     /// §5.1 proactive renewal threshold as a fraction of Δ (0 = off).
     pub lease_renew_fraction: f64,
     pub max_entries_per_append: usize,
+    /// Raft group this node serves — stamps flight-recorder events.
+    pub group: GroupId,
+    /// Flight-recorder ring capacity (0 = tracing disabled).
+    pub recorder_capacity: usize,
 }
 
 impl NodeConfig {
@@ -49,7 +55,16 @@ impl NodeConfig {
             heartbeat_us: p.heartbeat_us,
             lease_renew_fraction: p.lease_renew_fraction,
             max_entries_per_append: p.max_entries_per_append,
+            group: 0,
+            recorder_capacity: if p.flight_recorder { p.flight_recorder_capacity } else { 0 },
         }
+    }
+
+    /// Same protocol config, stamped for Raft group `g` (multi-Raft
+    /// drivers construct one node per group).
+    pub fn for_group(mut self, g: GroupId) -> Self {
+        self.group = g;
+        self
     }
 
     fn majority(&self) -> usize {
@@ -111,7 +126,13 @@ pub struct NodeStats {
     pub elections_won: u64,
     pub noops_written: u64,
     pub reads_served_local: u64,
+    /// Subset of `reads_served_local` answered under an *inherited*
+    /// lease (valid prior-term lease, own-term commit still pending —
+    /// §3.3, the paper's headline optimization).
+    pub reads_served_inherited: u64,
     pub reads_served_quorum: u64,
+    /// Quorum reads parked awaiting their ReadIndex round.
+    pub reads_deferred: u64,
     pub reads_rejected_no_lease: u64,
     pub reads_rejected_limbo: u64,
     pub writes_accepted: u64,
@@ -181,6 +202,10 @@ pub struct Node {
     batch_cache: Option<BatchCache>,
 
     pub stats: NodeStats,
+    /// Protocol-event flight recorder (obs). Like `stats`, this is
+    /// observability, not node state: it survives [`Self::restart`] so
+    /// a dump can show events from before AND after a crash.
+    recorder: FlightRecorder,
 }
 
 impl Node {
@@ -217,6 +242,7 @@ impl Node {
         now: TimeInterval,
     ) -> (Self, Vec<Output>) {
         let n = cfg.n;
+        let recorder = FlightRecorder::new(cfg.recorder_capacity, cfg.group);
         let mut node = Node {
             rng,
             cfg,
@@ -241,6 +267,7 @@ impl Node {
             ongaro: None,
             batch_cache: None,
             stats: NodeStats::default(),
+            recorder,
         };
         let mut out = Vec::new();
         node.reset_election_deadline(now, &mut out);
@@ -285,6 +312,20 @@ impl Node {
     }
     pub fn lease_state(&self) -> Option<&LeaseGuardState> {
         self.lease.as_ref()
+    }
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+    pub fn recorder_mut(&mut self) -> &mut FlightRecorder {
+        &mut self.recorder
+    }
+
+    /// Record a flight-recorder event at `now` under the current term.
+    /// No clock reads, no RNG, no control-flow effects — tracing cannot
+    /// perturb determinism (see `determinism_guard_tracing`).
+    #[inline]
+    fn trace(&mut self, now: TimeInterval, kind: EventKind, a: u64, b: u64) {
+        self.recorder.record(Self::local_now(now), self.current_term, kind, a, b);
     }
 
     /// Conservative local scalar time used for timers and Ongaro leases.
@@ -376,6 +417,7 @@ impl Node {
 
     fn start_election(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
         self.current_term += 1;
+        self.trace(now, EventKind::ElectionStarted, self.current_term, 0);
         self.role = Role::Candidate;
         self.voted_for = Some(self.cfg.id);
         self.votes.clear();
@@ -432,6 +474,8 @@ impl Node {
                     self.store.set_limbo_region([].iter());
                 }
             }
+            let limbo_hi = st.limbo_range().map(|(_, hi)| hi).unwrap_or(0);
+            self.trace(now, EventKind::LeaseInherited, st.limbo_len(), limbo_hi);
             self.lease = Some(st);
             out.push(Output::SetTimer { kind: TimerKind::LeaseCheck, after: self.cfg.heartbeat_us });
         }
@@ -444,10 +488,12 @@ impl Node {
         self.stats.noops_written += 1;
         self.replicate_all(now, out);
         out.push(Output::SetTimer { kind: TimerKind::Heartbeat, after: self.cfg.heartbeat_us });
+        let limbo = self.lease.as_ref().map(|l| l.limbo_len()).unwrap_or(0);
+        self.trace(now, EventKind::ElectionWon, limbo, 0);
         out.push(Output::ElectedLeader { term: self.current_term });
     }
 
-    fn step_down(&mut self, new_term: Term, out: &mut Vec<Output>) {
+    fn step_down(&mut self, now: TimeInterval, new_term: Term, out: &mut Vec<Output>) {
         let was_leader = self.role == Role::Leader;
         if new_term > self.current_term {
             self.current_term = new_term;
@@ -468,6 +514,7 @@ impl Node {
             out.push(Output::Reply { op: r.op, result: OpResult::Failed(FailReason::NotLeader) });
         }
         if was_leader {
+            self.trace(now, EventKind::SteppedDown, self.current_term, 0);
             out.push(Output::SteppedDown);
         }
     }
@@ -478,7 +525,7 @@ impl Node {
         let mut out = Vec::new();
         // Term gossip (§2.1): any higher term converts us to follower.
         if msg.term() > self.current_term {
-            self.step_down(msg.term(), &mut out);
+            self.step_down(now, msg.term(), &mut out);
             self.reset_election_deadline(now, &mut out);
         }
         match msg {
@@ -578,7 +625,7 @@ impl Node {
         }
         // Equal term: a candidate yields to the elected leader.
         if self.role != Role::Follower {
-            self.step_down(term, out);
+            self.step_down(now, term, out);
         }
         self.leader_hint = Some(leader);
         self.heard_leader_at = Self::local_now(now);
@@ -760,6 +807,7 @@ impl Node {
         // One round id + one materialized batch for the whole fan-out.
         self.ae_seq += 1;
         let seq = self.ae_seq;
+        self.trace(now, EventKind::AppendFanout, self.log.last_index(), seq);
         for peer in self.peers() {
             self.send_append_with_seq(peer, seq, now, out);
         }
@@ -811,6 +859,7 @@ impl Node {
             if !lease.commit_gate_open(now) {
                 self.stats.commit_gate_blocks += 1;
                 let after = lease.gate_retry_after(now).max(100);
+                self.trace(now, EventKind::CommitGateBlocked, candidate, 0);
                 out.push(Output::SetTimer { kind: TimerKind::LeaseCheck, after });
                 return;
             }
@@ -823,6 +872,7 @@ impl Node {
             .any(|(_, e)| e.term == self.current_term && e.command == Command::EndLease);
         self.apply_range(self.commit_index + 1, candidate, out);
         self.commit_index = candidate;
+        self.trace(now, EventKind::CommitAdvance, candidate, 0);
         if relinquishing {
             // Ack everything committed, then relinquish leadership.
             while let Some(w) = self.pending_writes.front() {
@@ -833,15 +883,20 @@ impl Node {
                     break;
                 }
             }
-            self.step_down(self.current_term, out);
+            self.step_down(now, self.current_term, out);
             return;
         }
+        let mut lease_acquired = false;
         if let Some(lease) = self.lease.as_mut() {
             if !lease.own_term_committed() {
                 lease.on_own_term_commit();
                 // Limbo region disappears (§3.3): clear the read gate.
                 self.store.set_limbo_region([].iter());
+                lease_acquired = true;
             }
+        }
+        if lease_acquired {
+            self.trace(now, EventKind::LeaseAcquired, self.commit_index, 0);
         }
         // Acknowledge all writes whose entries just committed — under
         // deferred commits this is the paper's post-election ack burst.
@@ -890,6 +945,7 @@ impl Node {
             if let Some(lease) = &self.lease {
                 if !lease.commit_gate_open(now) {
                     self.stats.writes_rejected_gate += 1;
+                    self.trace(now, EventKind::WriteRejectedGate, key as u64, 0);
                     out.push(Output::Reply {
                         op,
                         result: OpResult::Failed(FailReason::CommitGateClosed),
@@ -901,6 +957,7 @@ impl Node {
         let index = self.append_local(Command::Put { key, value, payload_bytes }, now);
         self.pending_writes.push_back(PendingWrite { op, index });
         self.stats.writes_accepted += 1;
+        self.trace(now, EventKind::WriteAccepted, key as u64, index);
         self.replicate_all(now, &mut out);
         // Single-node replica set commits immediately.
         self.try_advance_commit(now, &mut out);
@@ -917,11 +974,14 @@ impl Node {
         match self.cfg.mode {
             ConsistencyMode::Inconsistent => {
                 self.stats.reads_served_local += 1;
+                self.trace(now, EventKind::ReadServedLocal, key as u64, 0);
                 out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
             }
             ConsistencyMode::Quorum => {
                 // ReadIndex: snapshot commitIndex, require a heartbeat
                 // round started after arrival to be majority-acked.
+                self.stats.reads_deferred += 1;
+                self.trace(now, EventKind::ReadDeferred, key as u64, 0);
                 let seq = self.force_round(now, &mut out);
                 self.pending_reads.push(PendingQuorumRead {
                     op,
@@ -942,9 +1002,11 @@ impl Node {
                     || self.cfg.n == 1;
                 if has {
                     self.stats.reads_served_local += 1;
+                    self.trace(now, EventKind::ReadServedLocal, key as u64, 0);
                     out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
                 } else {
                     self.stats.reads_rejected_no_lease += 1;
+                    self.trace(now, EventKind::ReadRejectedNoLease, key as u64, 0);
                     out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NoLease) });
                 }
             }
@@ -965,15 +1027,21 @@ impl Node {
         match gate {
             ReadGate::Serve => {
                 self.stats.reads_served_local += 1;
+                self.trace(now, EventKind::ReadServedLocal, key as u64, 0);
                 out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
             }
             ReadGate::ServeUnlessLimbo => match self.store.read_gated(key) {
                 ReadOutcome::Values(v) => {
+                    // Valid lease, own-term commit still pending: this
+                    // read was served under the *inherited* lease.
                     self.stats.reads_served_local += 1;
+                    self.stats.reads_served_inherited += 1;
+                    self.trace(now, EventKind::ReadServedInherited, key as u64, 0);
                     out.push(Output::Reply { op, result: OpResult::ReadOk(v) });
                 }
                 ReadOutcome::LimboConflict => {
                     self.stats.reads_rejected_limbo += 1;
+                    self.trace(now, EventKind::ReadRejectedLimbo, key as u64, 0);
                     out.push(Output::Reply {
                         op,
                         result: OpResult::Failed(FailReason::LimboConflict),
@@ -982,6 +1050,7 @@ impl Node {
             },
             ReadGate::NoLease => {
                 self.stats.reads_rejected_no_lease += 1;
+                self.trace(now, EventKind::ReadRejectedNoLease, key as u64, 0);
                 // §5.1: when writes are rare, reestablish the lease with
                 // a no-op so subsequent reads can be served.
                 if self.cfg.lease_renew_fraction > 0.0
@@ -1049,9 +1118,18 @@ impl Node {
         for (&(op, key), &admitted) in ops.iter().zip(mask.iter()) {
             if admitted {
                 self.stats.reads_served_local += 1;
+                if status.own_term_commit {
+                    self.trace(now, EventKind::ReadServedLocal, key as u64, 0);
+                } else {
+                    // Admitted while our own-term commit is pending: the
+                    // inherited lease served this read (§3.3).
+                    self.stats.reads_served_inherited += 1;
+                    self.trace(now, EventKind::ReadServedInherited, key as u64, 0);
+                }
                 out.push(Output::Reply { op, result: OpResult::ReadOk(self.store.read(key)) });
             } else if !status.valid {
                 self.stats.reads_rejected_no_lease += 1;
+                self.trace(now, EventKind::ReadRejectedNoLease, key as u64, 0);
                 if !renewed
                     && self.cfg.lease_renew_fraction > 0.0
                     && self.log.last_index() == self.commit_index
@@ -1064,6 +1142,7 @@ impl Node {
                 out.push(Output::Reply { op, result: OpResult::Failed(FailReason::NoLease) });
             } else {
                 self.stats.reads_rejected_limbo += 1;
+                self.trace(now, EventKind::ReadRejectedLimbo, key as u64, 0);
                 out.push(Output::Reply { op, result: OpResult::Failed(FailReason::LimboConflict) });
             }
         }
@@ -1071,7 +1150,7 @@ impl Node {
     }
 
     /// Serve quorum reads whose round is majority-acked (ReadIndex).
-    fn serve_ready_quorum_reads(&mut self, _now: TimeInterval, out: &mut Vec<Output>) {
+    fn serve_ready_quorum_reads(&mut self, now: TimeInterval, out: &mut Vec<Output>) {
         if self.pending_reads.is_empty() {
             return;
         }
@@ -1085,6 +1164,7 @@ impl Node {
             let applied_enough = self.commit_index >= r.read_index;
             if acks >= majority && applied_enough {
                 self.stats.reads_served_quorum += 1;
+                self.trace(now, EventKind::ReadServedQuorum, r.key as u64, 0);
                 out.push(Output::Reply {
                     op: r.op,
                     result: OpResult::ReadOk(self.store.read(r.key)),
@@ -1115,13 +1195,16 @@ impl Node {
             log: std::mem::take(&mut self.log),
         };
         // The RNG stream continues across the reboot (a fresh seed would
-        // replay the pre-crash jitter sequence); stats are per-run
-        // observability, not node state, and keep accumulating.
+        // replay the pre-crash jitter sequence); stats and the flight
+        // recorder are per-run observability, not node state, and keep
+        // accumulating — a post-crash dump shows both incarnations.
         let rng = self.rng.clone();
         let stats = self.stats;
+        let recorder = std::mem::replace(&mut self.recorder, FlightRecorder::disabled());
         let (node, out) = Self::boot(self.cfg.clone(), rng, durable, now);
         *self = node;
         self.stats = stats;
+        self.recorder = recorder;
         out
     }
 
@@ -1173,6 +1256,8 @@ mod tests {
             heartbeat_us: 75_000,
             lease_renew_fraction: 0.5,
             max_entries_per_append: 1024,
+            group: 0,
+            recorder_capacity: 64,
         }
     }
 

@@ -13,10 +13,10 @@
 //!   map of live links; reconnection lives on the [`Dialer`] thread and
 //!   established links come back through the event channel.
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,6 +24,8 @@ use std::time::Duration;
 
 use crate::clock::real::RealClock;
 use crate::clock::Clock;
+use crate::obs::registry::{STAGE_APPLY, STAGE_COMMIT, STAGE_PERSIST, STAGE_QUEUE, STAGE_REPLICATE, STAGE_REPLY};
+use crate::obs::{EventKind, Registry};
 use crate::raft::{Message, Node, NodeConfig, Output, Role, TimerKind};
 use crate::runtime::{scalar_admission, EngineHandle};
 use crate::shard::{group_seed, GroupId, ShardMap, ShardRouter};
@@ -59,38 +61,13 @@ pub struct ServerConfig {
     pub fsync: FsyncPolicy,
 }
 
-/// Externally visible, lock-free server status.
-///
-/// With `params.groups > 1` the scalar fields keep their historical
-/// group-0 semantics (single-group callers are unaffected) and the
-/// bitmask fields report all groups: bit g is set when this server
-/// leads / has committed in group g.
-#[derive(Default)]
-pub struct Status {
-    pub is_leader: AtomicBool,
-    pub term: AtomicU64,
-    pub commit_index: AtomicU64,
-    pub limbo_len: AtomicU64,
-    pub reads_batched: AtomicU64,
-    pub engine_batches: AtomicU64,
-    /// Bit per group: this server is that group's leader.
-    pub leader_groups: AtomicU64,
-    /// Bit per group: that group's commit index is >= 1 here.
-    pub committed_groups: AtomicU64,
-    /// Cross-group durability barriers hit (event batches that had
-    /// anything to persist).
-    pub wal_barriers: AtomicU64,
-    /// Shared fsyncs those barriers issued. The multi-Raft claim is
-    /// `wal_syncs ≈ wal_barriers` regardless of group count — G dirty
-    /// groups cost one shared sync, not G.
-    pub wal_syncs: AtomicU64,
-}
-
 enum Ev {
     /// New inbound connection: the write half for replies.
     NewConn(u64, TcpStream),
     Peer(GroupId, Message),
-    Client { conn: u64, req: wire::ClientReq },
+    Client { conn: u64, req: wire::ClientReq, recv_us: Micros },
+    /// Live-introspection request: snapshot the registry + recorder tails.
+    Status { conn: u64, tail: u32 },
     ConnClosed(u64),
     /// The background dialer established an outgoing peer link.
     PeerUp(NodeId, DelayedSender),
@@ -100,7 +77,10 @@ enum Ev {
 pub struct ServerHandle {
     pub id: NodeId,
     pub addr: String,
-    pub status: Arc<Status>,
+    /// Externally visible lock-free metrics: per-group gauges, lease
+    /// accounting, stage latency, WAL counters (replaces the old flat
+    /// `Status` struct whose scalar fields silently meant group 0 only).
+    pub status: Arc<Registry>,
     tx: Sender<Ev>,
     main: Option<JoinHandle<()>>,
     accept: Option<JoinHandle<()>>,
@@ -139,7 +119,7 @@ impl Server {
         cfg.peer_addrs[cfg.id] = addr.clone();
         let (tx, rx) = channel::<Ev>();
         let stop = Arc::new(AtomicBool::new(false));
-        let status = Arc::new(Status::default());
+        let status = Arc::new(Registry::new(cfg.params.groups));
         let id = cfg.id;
 
         let accept = {
@@ -192,11 +172,19 @@ fn reader_loop(stream: TcpStream, conn: u64, tx: Sender<Ev>) {
                 }
                 Ok(Frame::HelloPeer { .. }) => {}
                 Ok(Frame::ClientReq(req)) => {
-                    if tx.send(Ev::Client { conn, req }).is_err() {
+                    // Stamp arrival here, not in the main loop: the gap
+                    // between the two is the queue stage.
+                    let recv_us = RealClock::monotonic_us();
+                    if tx.send(Ev::Client { conn, req, recv_us }).is_err() {
                         break;
                     }
                 }
-                Ok(Frame::ClientResp(_)) | Err(_) => break, // protocol error
+                Ok(Frame::StatusReq { tail }) => {
+                    if tx.send(Ev::Status { conn, tail }).is_err() {
+                        break;
+                    }
+                }
+                Ok(Frame::ClientResp(_)) | Ok(Frame::StatusResp(_)) | Err(_) => break, // protocol error
             },
             _ => break,
         }
@@ -219,6 +207,35 @@ struct Router {
     conns: HashMap<u64, TcpStream>,
     /// Reusable frame-encode scratch for every outgoing frame.
     enc: Enc,
+    /// Per-stage latency sink (shared with external observers).
+    registry: Arc<Registry>,
+    /// Canonical key → group map (for group-attributing applies).
+    map: ShardMap,
+    /// In-flight op milestones, keyed by the wire op id; removed when
+    /// the reply goes out (or the owning connection closes).
+    traces: HashMap<u64, OpTrace>,
+}
+
+/// Milestone timestamps of one in-flight client op, for the per-stage
+/// latency breakdown. Stage boundaries (all `RealClock::monotonic_us`):
+///
+/// * queue     = reader-thread receive → main-loop dequeue
+/// * persist   = dequeue → the accepting iteration's WAL barrier
+/// * replicate = barrier → local commit index covers the entry
+///   (the quorum round trip; the node commits *and* applies inside
+///   that observation window)
+/// * commit    = commit observed → reply frame emission (the cost of
+///   externalizing the commit: output routing + response encode)
+/// * apply     = publication of one applied op to the shared apply log
+/// * reply     = reply emission → socket write complete
+///
+/// Reads that never hit the log leave `persisted_us`/`committed_us`
+/// at 0 and contribute only queue + reply samples.
+struct OpTrace {
+    group: GroupId,
+    dequeue_us: Micros,
+    persisted_us: Micros,
+    committed_us: Micros,
 }
 
 fn kind_of(k: TimerKind) -> u8 {
@@ -287,24 +304,34 @@ impl Router {
                     )));
                 }
                 Output::Reply { op, result } => {
+                    let trace = self.traces.remove(&op);
                     if let Some(conn) = self.op_conn.remove(&op) {
                         if let Some(stream) = self.conns.get_mut(&conn) {
-                            let resp = Frame::ClientResp(ClientResp {
-                                op,
-                                exec_us: RealClock::monotonic_us(),
-                                result,
-                            });
+                            let emit_us = RealClock::monotonic_us();
+                            let resp = Frame::ClientResp(ClientResp { op, exec_us: emit_us, result });
                             self.enc.reset();
                             wire::encode_into(&resp, &mut self.enc);
                             if write_frame(stream, &self.enc.buf).is_err() {
                                 self.conns.remove(&conn);
+                            }
+                            if let Some(t) = trace {
+                                let m = self.registry.group(t.group);
+                                if t.committed_us > 0 {
+                                    m.stages[STAGE_COMMIT].record(emit_us - t.committed_us);
+                                }
+                                m.stages[STAGE_REPLY].record(RealClock::monotonic_us() - emit_us);
                             }
                         }
                     }
                 }
                 Output::Applied { key, value } => {
                     if let Some(a) = &self.cfg.applies {
-                        a.lock().unwrap().push((key, value, RealClock::monotonic_us()));
+                        let t0 = RealClock::monotonic_us();
+                        a.lock().unwrap().push((key, value, t0));
+                        // Apply-log publication cost; group attribution
+                        // via the canonical key → group map.
+                        let g = self.map.group_of(key);
+                        self.registry.group(g).stages[STAGE_APPLY].record(RealClock::monotonic_us() - t0);
                     }
                 }
                 Output::ElectedLeader { .. } | Output::SteppedDown => {}
@@ -319,14 +346,14 @@ impl Router {
 /// the watermarks are drained and dropped (volatile mode). Storage
 /// errors are fatal: continuing to vote or ack on a broken disk
 /// silently voids every crash-safety guarantee.
-fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, status: &Status) {
+fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, status: &Registry) {
     let Some(ms) = storage.as_mut() else {
         for (_, node) in shards.iter_mut() {
             node.take_log_dirty();
         }
         return;
     };
-    let mut wrote = false;
+    let mut dirty: Vec<GroupId> = Vec::new();
     for (g, node) in shards.iter_mut() {
         let s = ms.group(g as usize);
         s.persist_hard_state(node.term(), node.voted_for()).expect("hard-state persist");
@@ -338,14 +365,22 @@ fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, sta
             for (idx, e) in node.log().iter_range(from - 1, last) {
                 s.append(idx, e).expect("wal append");
             }
-            wrote = true;
+            dirty.push(g);
         }
     }
     let syncs_before = ms.syncs();
     ms.barrier().expect("wal barrier");
-    if wrote {
-        status.wal_barriers.fetch_add(1, Ordering::Relaxed);
-        status.wal_syncs.fetch_add(ms.syncs() - syncs_before, Ordering::Relaxed);
+    if !dirty.is_empty() {
+        let syncs = ms.syncs() - syncs_before;
+        status.wal_barriers.inc();
+        status.wal_syncs.add(syncs);
+        // Flight-record the barrier into every group it flushed.
+        let at = RealClock::monotonic_us();
+        for &g in &dirty {
+            let node = shards.node_mut(g);
+            let term = node.term();
+            node.recorder_mut().record(at, term, EventKind::WalBarrier, dirty.len() as u64, syncs);
+        }
     }
 }
 
@@ -353,7 +388,7 @@ fn main_loop(
     cfg: ServerConfig,
     tx: Sender<Ev>,
     rx: Receiver<Ev>,
-    status: Arc<Status>,
+    status: Arc<Registry>,
     stop: Arc<AtomicBool>,
 ) {
     let mut clock = RealClock::new(cfg.params.clock_error_us);
@@ -370,7 +405,7 @@ fn main_loop(
                 MultiStorage::open(dir, groups, cfg.fsync).expect("open storage");
             let mut nodes = Vec::with_capacity(groups);
             for (g, d) in durable.into_iter().enumerate() {
-                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
+                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params).for_group(g as GroupId);
                 let (n, o) =
                     Node::recover(node_cfg, group_seed(cfg.params.seed, g as GroupId), d, now);
                 pending.extend(o.into_iter().map(|out| (g as GroupId, out)));
@@ -381,7 +416,7 @@ fn main_loop(
         None => {
             let mut nodes = Vec::with_capacity(groups);
             for g in 0..groups {
-                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params);
+                let node_cfg = NodeConfig::from_params(cfg.id, &cfg.params).for_group(g as GroupId);
                 let (n, o) = Node::new(node_cfg, group_seed(cfg.params.seed, g as GroupId), now);
                 pending.extend(o.into_iter().map(|out| (g as GroupId, out)));
                 nodes.push(n);
@@ -408,6 +443,7 @@ fn main_loop(
         }
     }
     let mut router = Router {
+        map: shards.map().clone(),
         cfg,
         timers: BinaryHeap::new(),
         peers: HashMap::new(),
@@ -415,35 +451,47 @@ fn main_loop(
         op_conn: HashMap::new(),
         conns: HashMap::new(),
         enc: Enc::new(),
+        registry: status.clone(),
+        traces: HashMap::new(),
     };
     persist_all(&mut shards, &mut storage, &status);
     router.handle(&mut pending);
 
-    let publish = |shards: &ShardRouter, status: &Status| {
-        // Scalars keep group-0 semantics; bitmasks cover all groups.
-        let n0 = shards.node(0);
-        status.is_leader.store(n0.role() == Role::Leader, Ordering::Relaxed);
-        status.term.store(n0.term(), Ordering::Relaxed);
-        status.commit_index.store(n0.commit_index(), Ordering::Relaxed);
-        let mut limbo = 0u64;
-        let mut leaders = 0u64;
-        let mut committed = 0u64;
+    // Mirror every group's node state + protocol stats into the
+    // registry. The node stays the single source of truth; the registry
+    // is the lock-free cross-thread view of it.
+    let publish = |shards: &ShardRouter, status: &Registry| {
         for (g, n) in shards.iter() {
-            limbo += n.lease_state().map(|l| l.limbo_len()).unwrap_or(0);
-            if n.role() == Role::Leader {
-                leaders |= 1 << g;
-            }
-            if n.commit_index() >= 1 {
-                committed |= 1 << g;
-            }
+            let m = status.group(g);
+            m.is_leader.store(n.role() == Role::Leader, Ordering::Relaxed);
+            m.term.set(n.term() as i64);
+            m.commit_index.set(n.commit_index() as i64);
+            m.limbo_len.set(n.lease_state().map(|l| l.limbo_len()).unwrap_or(0) as i64);
+            let st = &n.stats;
+            // `reads_served_local` historically includes inherited-lease
+            // reads; the registry splits them out.
+            m.reads_lease_local.set(st.reads_served_local - st.reads_served_inherited);
+            m.reads_lease_inherited.set(st.reads_served_inherited);
+            m.reads_quorum.set(st.reads_served_quorum);
+            m.reads_deferred.set(st.reads_deferred);
+            m.reads_rejected_no_lease.set(st.reads_rejected_no_lease);
+            m.reads_rejected_limbo.set(st.reads_rejected_limbo);
+            m.writes_accepted.set(st.writes_accepted);
+            m.writes_blocked_transfer.set(st.commit_gate_blocks);
+            m.writes_rejected_gate.set(st.writes_rejected_gate);
+            m.elections_won.set(st.elections_won);
         }
-        status.limbo_len.store(limbo, Ordering::Relaxed);
-        status.leader_groups.store(leaders, Ordering::Relaxed);
-        status.committed_groups.store(committed, Ordering::Relaxed);
     };
 
     // Per-group read batches, reused across iterations.
     let mut read_batches: Vec<Vec<(u64, u32)>> = vec![Vec::new(); groups];
+    // Accepted writes awaiting local commit coverage: (entry index, op),
+    // per group, index-ordered (appends are monotone).
+    let mut pending_commit: Vec<VecDeque<(u64, u64)>> = vec![VecDeque::new(); groups];
+    // Writes accepted this iteration (for the persist-stage stamp).
+    let mut accepted_ops: Vec<u64> = Vec::new();
+    // Introspection requests, answered after this batch publishes.
+    let mut status_reqs: Vec<(u64, u32)> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         // Fire due timers. Status publication is folded into the
         // timer-fire branch: an idle loop iteration performs no atomic
@@ -463,8 +511,10 @@ fn main_loop(
         }
         if timer_fired {
             // A timer can start an election (term bump + self-vote) —
-            // durable before the RequestVotes leave.
+            // durable before the RequestVotes leave. A lease-check timer
+            // can reopen the commit gate, so commits may advance here.
             persist_all(&mut shards, &mut storage, &status);
+            stamp_commits(&shards, &mut pending_commit, &mut router.traces, &status);
             router.handle(&mut pending);
             publish(&shards, &status);
         }
@@ -512,14 +562,21 @@ fn main_loop(
                         pending.extend(outs.into_iter().map(|o| (g, o)));
                     }
                 }
-                Ev::Client { conn, req } => {
+                Ev::Client { conn, req, recv_us } => {
                     router.op_conn.insert(req.op, conn);
                     // The server routes by key through the canonical
                     // ShardMap — clients need not be trusted to route.
                     let g = shards.group_for_key(req.key);
+                    let dequeue_us = RealClock::monotonic_us();
+                    status.group(g).stages[STAGE_QUEUE].record(dequeue_us - recv_us);
+                    router.traces.insert(
+                        req.op,
+                        OpTrace { group: g, dequeue_us, persisted_us: 0, committed_us: 0 },
+                    );
                     match req.write_value {
                         Some(v) => {
                             let now = clock.interval_now();
+                            let before = shards.node(g).log().last_index();
                             let outs = shards.node_mut(g).client_write(
                                 now,
                                 req.op,
@@ -527,17 +584,34 @@ fn main_loop(
                                 v,
                                 req.payload.len() as u32,
                             );
+                            if shards.node(g).log().last_index() > before {
+                                // Accepted: watch for local commit
+                                // coverage (the replicate stage's end).
+                                pending_commit[g as usize]
+                                    .push_back((shards.node(g).log().last_index(), req.op));
+                                accepted_ops.push(req.op);
+                            }
                             pending.extend(outs.into_iter().map(|o| (g, o)));
                         }
                         None => read_batches[g as usize].push((req.op, req.key)),
                     }
                 }
+                Ev::Status { conn, tail } => status_reqs.push((conn, tail)),
                 Ev::ConnClosed(conn) => {
                     router.conns.remove(&conn);
                     // Purge op→conn routes owned by the closed conn:
                     // their replies have nowhere to go, and without this
                     // the map grows without bound under client churn.
-                    router.op_conn.retain(|_, c| *c != conn);
+                    // Their latency traces go with them.
+                    let traces = &mut router.traces;
+                    router.op_conn.retain(|op, c| {
+                        if *c == conn {
+                            traces.remove(op);
+                            false
+                        } else {
+                            true
+                        }
+                    });
                 }
             }
         }
@@ -549,12 +623,12 @@ fn main_loop(
             if batch.is_empty() {
                 continue;
             }
-            status.reads_batched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            status.reads_batched.add(batch.len() as u64);
             let now = clock.interval_now();
             let g = gi as GroupId;
             let outs = shards.node_mut(g).client_read_batch(now, batch, |inp| match &engine {
                 Some(e) => {
-                    status.engine_batches.fetch_add(1, Ordering::Relaxed);
+                    status.engine_batches.inc();
                     e.admit(inp).unwrap_or_else(|_| scalar_admission(inp))
                 }
                 None => scalar_admission(inp),
@@ -567,8 +641,67 @@ fn main_loop(
         // (recv timeout with no due timers) — those change no node state.
         if had_events {
             persist_all(&mut shards, &mut storage, &status);
+            if !accepted_ops.is_empty() {
+                // This batch's accepted writes are now locally durable.
+                let now_us = RealClock::monotonic_us();
+                for op in accepted_ops.drain(..) {
+                    if let Some(t) = router.traces.get_mut(&op) {
+                        t.persisted_us = now_us;
+                        status.group(t.group).stages[STAGE_PERSIST].record(now_us - t.dequeue_us);
+                    }
+                }
+            }
+            stamp_commits(&shards, &mut pending_commit, &mut router.traces, &status);
             router.handle(&mut pending);
             publish(&shards, &status);
+        }
+        // Serve introspection snapshots last, after this batch's
+        // publish, splicing each group's flight-recorder tail in.
+        for (conn, tail) in status_reqs.drain(..) {
+            let mut snap = status.snapshot();
+            for gs in snap.groups.iter_mut() {
+                gs.events = shards.node(gs.group).recorder().tail((tail as usize).min(4096));
+            }
+            if let Some(stream) = router.conns.get_mut(&conn) {
+                router.enc.reset();
+                wire::encode_into(&Frame::StatusResp(Box::new(snap)), &mut router.enc);
+                if write_frame(stream, &router.enc.buf).is_err() {
+                    router.conns.remove(&conn);
+                }
+            }
+        }
+    }
+}
+
+/// Stamp `committed_us` on every pending write whose entry the local
+/// commit index now covers, recording the replicate-stage latency
+/// (barrier → quorum commit). Runs after `persist_all` and before the
+/// outputs are routed, so a write's commit stamp exists by the time its
+/// reply is emitted.
+fn stamp_commits(
+    shards: &ShardRouter,
+    pending_commit: &mut [VecDeque<(u64, u64)>],
+    traces: &mut HashMap<u64, OpTrace>,
+    status: &Registry,
+) {
+    for (gi, q) in pending_commit.iter_mut().enumerate() {
+        if q.is_empty() {
+            continue;
+        }
+        let g = gi as GroupId;
+        let ci = shards.node(g).commit_index();
+        let now_us = RealClock::monotonic_us();
+        while let Some(&(idx, op)) = q.front() {
+            if idx > ci {
+                break;
+            }
+            q.pop_front();
+            if let Some(t) = traces.get_mut(&op) {
+                if t.persisted_us > 0 {
+                    t.committed_us = now_us;
+                    status.group(g).stages[STAGE_REPLICATE].record(now_us - t.persisted_us);
+                }
+            }
         }
     }
 }

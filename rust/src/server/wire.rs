@@ -11,6 +11,7 @@
 
 use crate::clock::TimeInterval;
 use crate::kv::Command;
+use crate::obs::{EventKind, FlightEvent, GroupSnapshot, StageSummary, StatusSnapshot};
 use crate::raft::log::Entry;
 use crate::raft::types::{FailReason, OpResult};
 use crate::raft::{EntryBatch, Message};
@@ -29,6 +30,8 @@ pub const FRAME_HELLO_PEER: u8 = 1;
 pub const FRAME_RAFT: u8 = 2;
 pub const FRAME_CLIENT_REQ: u8 = 3;
 pub const FRAME_CLIENT_RESP: u8 = 4;
+pub const FRAME_STATUS_REQ: u8 = 5;
+pub const FRAME_STATUS_RESP: u8 = 6;
 
 /// Client request: a read or a write.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,6 +62,11 @@ pub enum Frame {
     Raft { from: NodeId, group: GroupId, msg: Message },
     ClientReq(ClientReq),
     ClientResp(ClientResp),
+    /// Live-introspection request: snapshot the server's metrics
+    /// registry plus the last `tail` flight-recorder events per group.
+    StatusReq { tail: u32 },
+    /// The snapshot (boxed: ~50x larger than any other variant).
+    StatusResp(Box<StatusSnapshot>),
 }
 
 // ---------------------------------------------------------------- encode
@@ -119,6 +127,49 @@ impl Enc {
         self.u64(e.term);
         self.command(&e.command);
         self.interval(e.written_at);
+    }
+
+    fn stage(&mut self, s: &StageSummary) {
+        self.u64(s.count);
+        self.u64(s.sum_us);
+        self.i64(s.min_us);
+        self.i64(s.p50_us);
+        self.i64(s.p90_us);
+        self.i64(s.p99_us);
+        self.i64(s.max_us);
+    }
+
+    fn event(&mut self, ev: &FlightEvent) {
+        self.i64(ev.at);
+        self.u64(ev.term);
+        self.u8(ev.kind as u8);
+        self.u64(ev.a);
+        self.u64(ev.b);
+    }
+
+    fn group_snapshot(&mut self, g: &GroupSnapshot) {
+        self.u32(g.group);
+        self.u8(g.is_leader as u8);
+        self.u64(g.term);
+        self.u64(g.commit_index);
+        self.u64(g.limbo_len);
+        self.u64(g.reads_lease_local);
+        self.u64(g.reads_lease_inherited);
+        self.u64(g.reads_quorum);
+        self.u64(g.reads_deferred);
+        self.u64(g.reads_rejected_no_lease);
+        self.u64(g.reads_rejected_limbo);
+        self.u64(g.writes_accepted);
+        self.u64(g.writes_blocked_transfer);
+        self.u64(g.writes_rejected_gate);
+        self.u64(g.elections_won);
+        for st in &g.stages {
+            self.stage(st);
+        }
+        self.u32(g.events.len() as u32);
+        for ev in &g.events {
+            self.event(ev);
+        }
     }
 
     fn result(&mut self, r: &OpResult) {
@@ -242,6 +293,25 @@ pub fn encode_into(frame: &Frame, e: &mut Enc) {
             e.i64(r.exec_us);
             e.result(&r.result);
         }
+        Frame::StatusReq { tail } => {
+            e.u8(WIRE_MAGIC);
+            e.u8(WIRE_VERSION);
+            e.u8(FRAME_STATUS_REQ);
+            e.u32(*tail);
+        }
+        Frame::StatusResp(s) => {
+            e.u8(WIRE_MAGIC);
+            e.u8(WIRE_VERSION);
+            e.u8(FRAME_STATUS_RESP);
+            e.u32(s.groups.len() as u32);
+            for g in &s.groups {
+                e.group_snapshot(g);
+            }
+            e.u64(s.wal_barriers);
+            e.u64(s.wal_syncs);
+            e.u64(s.reads_batched);
+            e.u64(s.engine_batches);
+        }
     }
 }
 
@@ -326,6 +396,63 @@ impl<'a> Dec<'a> {
 
     pub(crate) fn entry(&mut self) -> R<Entry> {
         Ok(Entry { term: self.u64()?, command: self.command()?, written_at: self.interval()? })
+    }
+
+    fn stage(&mut self) -> R<StageSummary> {
+        Ok(StageSummary {
+            count: self.u64()?,
+            sum_us: self.u64()?,
+            min_us: self.i64()?,
+            p50_us: self.i64()?,
+            p90_us: self.i64()?,
+            p99_us: self.i64()?,
+            max_us: self.i64()?,
+        })
+    }
+
+    /// Decode one flight event, stamping the owning group. `None` for an
+    /// unknown kind from a newer peer: the payload is consumed (so the
+    /// stream stays aligned) but the event is dropped.
+    fn event(&mut self, group: GroupId) -> R<Option<FlightEvent>> {
+        let at = self.i64()?;
+        let term = self.u64()?;
+        let kind = EventKind::from_u8(self.u8()?);
+        let a = self.u64()?;
+        let b = self.u64()?;
+        Ok(kind.map(|kind| FlightEvent { at, term, group, kind, a, b }))
+    }
+
+    fn group_snapshot(&mut self) -> R<GroupSnapshot> {
+        let mut g = GroupSnapshot {
+            group: self.u32()?,
+            is_leader: self.u8()? != 0,
+            term: self.u64()?,
+            commit_index: self.u64()?,
+            limbo_len: self.u64()?,
+            reads_lease_local: self.u64()?,
+            reads_lease_inherited: self.u64()?,
+            reads_quorum: self.u64()?,
+            reads_deferred: self.u64()?,
+            reads_rejected_no_lease: self.u64()?,
+            reads_rejected_limbo: self.u64()?,
+            writes_accepted: self.u64()?,
+            writes_blocked_transfer: self.u64()?,
+            writes_rejected_gate: self.u64()?,
+            elections_won: self.u64()?,
+            ..GroupSnapshot::default()
+        };
+        for st in g.stages.iter_mut() {
+            *st = self.stage()?;
+        }
+        // 33 = i64 at + u64 term + u8 kind + two u64 payloads.
+        let n = self.count(33)?;
+        g.events.reserve(n);
+        for _ in 0..n {
+            if let Some(ev) = self.event(g.group)? {
+                g.events.push(ev);
+            }
+        }
+        Ok(g)
     }
 
     fn result(&mut self) -> R<OpResult> {
@@ -430,6 +557,24 @@ pub fn decode(b: &[u8]) -> R<Frame> {
         }
         FRAME_CLIENT_RESP => {
             Frame::ClientResp(ClientResp { op: d.u64()?, exec_us: d.i64()?, result: d.result()? })
+        }
+        FRAME_STATUS_REQ => Frame::StatusReq { tail: d.u32()? },
+        FRAME_STATUS_RESP => {
+            // 449 = fixed group header: u32 group + u8 is_leader +
+            // 13 u64 gauges/counters + 6 stage summaries of 7x8 bytes +
+            // u32 event count.
+            let n = d.count(449)?;
+            let mut groups = Vec::with_capacity(n);
+            for _ in 0..n {
+                groups.push(d.group_snapshot()?);
+            }
+            Frame::StatusResp(Box::new(StatusSnapshot {
+                groups,
+                wal_barriers: d.u64()?,
+                wal_syncs: d.u64()?,
+                reads_batched: d.u64()?,
+                engine_batches: d.u64()?,
+            }))
         }
         t => return Err(DecodeError(format!("bad frame tag {t}"))),
     };
@@ -596,6 +741,98 @@ mod tests {
         ] {
             roundtrip(Frame::ClientResp(ClientResp { op: 1, exec_us: 0, result: OpResult::Failed(r) }));
         }
+    }
+
+    #[test]
+    fn roundtrip_status_frames() {
+        roundtrip(Frame::StatusReq { tail: 0 });
+        roundtrip(Frame::StatusReq { tail: 128 });
+
+        // Empty snapshot (server with zero groups never exists, but the
+        // codec must not care).
+        roundtrip(Frame::StatusResp(Box::new(StatusSnapshot::default())));
+
+        let mut g0 = GroupSnapshot { group: 0, is_leader: true, term: 7, ..Default::default() };
+        g0.commit_index = 142;
+        g0.reads_lease_local = 900;
+        g0.reads_lease_inherited = 33;
+        g0.reads_rejected_limbo = 2;
+        g0.writes_accepted = 120;
+        g0.stages[1] =
+            StageSummary { count: 5, sum_us: 900, min_us: 80, p50_us: 150, p90_us: 300, p99_us: 400, max_us: 410 };
+        g0.events.push(FlightEvent {
+            at: 1_000,
+            term: 7,
+            group: 0,
+            kind: EventKind::LeaseInherited,
+            a: 3,
+            b: 140,
+        });
+        g0.events.push(FlightEvent {
+            at: 1_050,
+            term: 7,
+            group: 0,
+            kind: EventKind::ReadServedInherited,
+            a: 42,
+            b: 0,
+        });
+        let g1 = GroupSnapshot { group: 1, limbo_len: 4, elections_won: 2, ..Default::default() };
+        roundtrip(Frame::StatusResp(Box::new(StatusSnapshot {
+            groups: vec![g0, g1],
+            wal_barriers: 17,
+            wal_syncs: 51,
+            reads_batched: 1200,
+            engine_batches: 40,
+        })));
+    }
+
+    #[test]
+    fn status_resp_unknown_event_kind_dropped_not_misread() {
+        // A newer peer may emit event kinds this build doesn't know.
+        // The payload must be consumed (stream alignment) and the event
+        // dropped, with the rest of the snapshot decoding intact.
+        let mut g = GroupSnapshot { group: 3, ..Default::default() };
+        g.events.push(FlightEvent {
+            at: 9,
+            term: 1,
+            group: 3,
+            kind: EventKind::CommitAdvance,
+            a: 5,
+            b: 0,
+        });
+        let f = Frame::StatusResp(Box::new(StatusSnapshot {
+            groups: vec![g],
+            wal_barriers: 1,
+            wal_syncs: 2,
+            reads_batched: 3,
+            engine_batches: 4,
+        }));
+        let mut b = encode(&f);
+        // The single event's kind byte sits before its two u64 payloads
+        // and the snapshot's four trailing u64 scalars.
+        let kpos = b.len() - 4 * 8 - 2 * 8 - 1;
+        assert_eq!(b[kpos], EventKind::CommitAdvance as u8);
+        b[kpos] = 250; // unknown discriminant
+        match decode(&b).expect("decode") {
+            Frame::StatusResp(s) => {
+                assert!(s.groups[0].events.is_empty(), "unknown event must be dropped");
+                assert_eq!(s.wal_barriers, 1);
+                assert_eq!(s.engine_batches, 4);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_resp_corrupt_counts_rejected() {
+        // Poisoned group count.
+        let mut b = Vec::new();
+        b.push(WIRE_MAGIC);
+        b.push(WIRE_VERSION);
+        b.push(FRAME_STATUS_RESP);
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode(&b).unwrap_err();
+        assert!(err.0.contains("exceeds remaining"), "{err:?}");
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //!   commits) is untouched; the router only multiplexes.
 //!
 //! Groups are deliberately capped at 64 so per-group leader/commit
-//! status fits in one `u64` bitmask on the server's shared `Status`.
+//! status fits in one `u64` bitmask (see
+//! [`crate::obs::Registry::leader_groups`]).
 
 use crate::clock::TimeInterval;
 use crate::raft::{Node, Output};

@@ -213,9 +213,20 @@ pub fn run_one(sc: &Scenario, mode: ConsistencyMode, seed: u64) -> ScenarioOutco
 }
 
 /// As [`run_one`], honoring caller parameter overrides.
+///
+/// When a mode that *promises* linearizability fails the check, the
+/// flight-recorder window around the first violation is dumped to
+/// stderr automatically — the matrix verdict arrives with its evidence
+/// trail instead of a bare op id.
 pub fn run_one_from(sc: &Scenario, user: &Params, mode: ConsistencyMode) -> ScenarioOutcome {
     let rep = run_report_from(sc, user, mode);
-    let violations = linearizability::check(&rep.history).len();
+    let viol = linearizability::check(&rep.history);
+    if mode != ConsistencyMode::Inconsistent {
+        if let Some(v) = viol.first() {
+            eprintln!("{}", dump_first_violation(sc.name, mode, &rep, v));
+        }
+    }
+    let violations = viol.len();
     let reads = rep.series.window_totals(true, 0, i64::MAX);
     let writes = rep.series.window_totals(false, 0, i64::MAX);
     ScenarioOutcome {
@@ -235,6 +246,34 @@ pub fn run_one_from(sc: &Scenario, user: &Params, mode: ConsistencyMode) -> Scen
         faults_injected: rep.faults_injected,
         events_processed: rep.events_processed,
     }
+}
+
+/// Padding around a violating op's `[start_ts, end_ts]` when slicing
+/// flight-recorder dumps: wide enough to cover the election /
+/// lease-handoff activity that produced the stale read.
+const DUMP_PAD_US: i64 = 250_000;
+
+/// Render the flight-recorder evidence for the first violation of a
+/// run that promised linearizability (public so driver binaries and
+/// integration tests can reuse the exact dump the matrix emits).
+pub fn dump_first_violation(
+    scenario: &str,
+    mode: ConsistencyMode,
+    rep: &RunReport,
+    v: &linearizability::Violation,
+) -> String {
+    // The violation carries the op id; its history entry has the
+    // real-time window the op occupied.
+    let (from, to) = rep
+        .history
+        .entries
+        .iter()
+        .find(|e| e.op == v.op)
+        .map(|e| (e.start_ts - DUMP_PAD_US, e.end_ts + DUMP_PAD_US))
+        .unwrap_or((0, i64::MAX));
+    let title =
+        format!("{scenario}/{mode}: op {} key {} — {}", v.op, v.key, v.detail);
+    rep.dump_flight_window(&title, from, to)
 }
 
 /// The full matrix: every catalog scenario × every matrix mode, in
@@ -260,6 +299,34 @@ pub fn run_matrix_from(user: &Params) -> Vec<ScenarioOutcome> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn violation_dump_covers_the_op_window() {
+        // Exercise the exact dump path the matrix runs on failure: take
+        // a real report, point a (fabricated) violation at one of its
+        // ops, and require the evidence trail to cover that op's window.
+        let sc = &catalog()[0];
+        let rep = run_report(sc, ConsistencyMode::LeaseGuard, 42);
+        let e = rep.history.entries.iter().find(|e| e.success).expect("a successful op");
+        let v = linearizability::Violation {
+            op: e.op,
+            key: e.key,
+            detail: "fabricated for dump test".to_string(),
+        };
+        let dump = dump_first_violation(sc.name, ConsistencyMode::LeaseGuard, &rep, &v);
+        assert!(dump.contains("flight recorder dump"), "{dump}");
+        assert!(dump.contains(&format!("op {}", e.op)), "{dump}");
+        // Every node appears, labeled g<group>/n<process>.
+        for n in 0..3 {
+            assert!(dump.contains(&format!("g0/n{n}")), "missing node {n}:\n{dump}");
+        }
+        // The recorder was on (default params), so the crash+failover
+        // window is not empty: some protocol event made it in.
+        assert!(
+            rep.recorders.iter().any(|r| r.total_recorded() > 0),
+            "default-on recorder captured nothing"
+        );
+    }
 
     #[test]
     fn catalog_names_unique_and_plentiful() {

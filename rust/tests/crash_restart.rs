@@ -139,7 +139,7 @@ fn no_double_vote_across_restart() {
     expect_hello(&mut from1, 0, "peer-1 relink");
     expect_hello(&mut from2, 0, "peer-2 relink");
     assert!(
-        !h.status.is_leader.load(Ordering::Relaxed),
+        !h.status.group(0).is_leader.load(Ordering::Relaxed),
         "a restart must never resurrect leadership (the lease is re-derived, not reloaded)"
     );
     thread::sleep(Duration::from_millis(50));
@@ -193,7 +193,7 @@ fn durable_cluster_survives_leader_crash_and_restart() {
         RealCluster::spawn_durable(&p, Duration::ZERO, None, &paths, FsyncPolicy::Group)
             .expect("spawn");
     let leader = cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
-    let pre_term = cluster.handles[leader].as_ref().unwrap().status.term.load(Ordering::Relaxed);
+    let pre_term = cluster.handles[leader].as_ref().unwrap().status.group(0).term.get();
 
     let addrs = cluster.addrs.clone();
     let applies = cluster.applies.clone();
@@ -207,7 +207,7 @@ fn durable_cluster_survives_leader_crash_and_restart() {
     cluster.respawn(leader).expect("respawn");
 
     let rep = client.join().unwrap().expect("client");
-    let post_term = cluster.handles[leader].as_ref().unwrap().status.term.load(Ordering::Relaxed);
+    let post_term = cluster.handles[leader].as_ref().unwrap().status.group(0).term.get();
     cluster.shutdown();
 
     // The respawned node booted from its recovered term and then caught

@@ -218,6 +218,47 @@ fn determinism_guard_zero_copy_refactor() {
 }
 
 #[test]
+fn determinism_guard_tracing() {
+    // The flight recorder's determinism contract (see obs::recorder):
+    // recording draws no RNG and reads no clock, so a fixed-seed
+    // crash-failover run must produce a byte-identical client history
+    // with the recorder ON (default capacity), at a different capacity,
+    // and fully OFF. A recorder that perturbed event order or timing
+    // would diverge here.
+    let run = |enabled: bool, capacity: usize| {
+        let mut p = Params::default();
+        p.consistency = ConsistencyMode::LeaseGuard;
+        p.seed = 0xD57E11;
+        p.duration_us = 1_500_000;
+        p.interarrival_us = 400.0;
+        p.crash_leader_at_us = 300_000;
+        p.flight_recorder = enabled;
+        p.flight_recorder_capacity = capacity;
+        Cluster::new(p).run()
+    };
+    let on = run(true, 1024);
+    let small = run(true, 8);
+    let off = run(false, 1024);
+    for (label, other) in [("capacity 8", &small), ("recorder off", &off)] {
+        assert_eq!(on.events_processed, other.events_processed, "{label}: event counts diverged");
+        assert_eq!(on.t0, other.t0, "{label}");
+        assert_eq!(on.elections, other.elections, "{label}");
+        assert_eq!(on.limbo_len, other.limbo_len, "{label}");
+        assert_eq!(
+            format!("{:?}", on.history.entries),
+            format!("{:?}", other.history.entries),
+            "{label}: history diverged — tracing perturbed the simulation"
+        );
+    }
+    // The knobs actually took effect: traced runs captured events,
+    // the disabled run stored nothing.
+    assert!(on.recorders.iter().any(|r| r.total_recorded() > 0), "recorder on captured nothing");
+    assert!(small.recorders.iter().all(|r| r.len() <= 8));
+    assert!(off.recorders.iter().all(|r| !r.is_enabled() && r.len() == 0));
+    assert!(on.elections >= 2, "scenario must actually fail over");
+}
+
+#[test]
 fn nemesis_matrix_linearizable_where_promised() {
     // The standing scenario-matrix regression: every catalog scenario x
     // every matrix mode. LeaseGuard and Quorum promise linearizability

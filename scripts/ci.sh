@@ -13,6 +13,10 @@
 #   5. 2-group real-cluster smoke — a short bench-cluster run with
 #      groups=2 over real loopback TCP: every group must elect, serve,
 #      and pass the per-shard linearizability check.
+#   6. live introspection smoke — three real `serve` processes with
+#      groups=2; `leaseguard stat --json` against each must return the
+#      per-group lease-accounting counters, and some server must report
+#      leadership of each group.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +38,39 @@ if [[ "${1:-}" != "--fast" ]]; then
         --param groups=2 \
         --param duration_us=1000000 \
         --param interarrival_us=1000
+
+    echo "== live introspection smoke (leaseguard stat) =="
+    BIN=target/release/leaseguard
+    PEERS="127.0.0.1:7451,127.0.0.1:7452,127.0.0.1:7453"
+    PIDS=()
+    cleanup() { kill "${PIDS[@]}" 2>/dev/null || true; }
+    trap cleanup EXIT
+    for i in 0 1 2; do
+        "$BIN" serve --node "$i" --peers "$PEERS" --param groups=2 &
+        PIDS+=($!)
+    done
+    # Wait for every group to elect somewhere, then check the snapshot
+    # carries the lease-accounting counters per group.
+    ok=""
+    for _ in $(seq 1 50); do
+        sleep 0.2
+        combined=""
+        for port in 7451 7452 7453; do
+            combined+=$("$BIN" stat --addr "127.0.0.1:$port" --json 2>/dev/null || true)
+        done
+        if [[ "$combined" == *'"is_leader": true'* ]]; then
+            ok="$combined"
+            break
+        fi
+    done
+    [[ -n "$ok" ]] || { echo "stat smoke: no group elected a leader"; exit 1; }
+    for key in '"group": 1' '"reads_lease_local"' '"reads_lease_inherited"' \
+               '"writes_blocked_transfer"' '"stages"' '"events"'; do
+        [[ "$ok" == *"$key"* ]] || { echo "stat smoke: missing $key in snapshot"; exit 1; }
+    done
+    cleanup
+    trap - EXIT
+    echo "stat smoke: ok"
 fi
 
 echo "ci: all gates passed"
