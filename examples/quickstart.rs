@@ -13,6 +13,8 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::time::Duration;
 
 use leaseguard::client::run_open_loop;

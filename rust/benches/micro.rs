@@ -6,6 +6,8 @@
 //! machine-readable trajectory (default `BENCH_micro.json` at the repo
 //! root) — see `scripts/bench.sh`.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 fn main() {
     // cargo passes `--bench` to harness=false targets; ignore unknowns.
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -11,6 +11,8 @@
 //! the kv read path (Arc snapshot vs. per-read deep copy), multi-group
 //! sim throughput, histogram recording, and the client-frame codec.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::time::Instant;
@@ -43,6 +45,7 @@ fn bench<F: FnMut() -> u64>(out: &mut Vec<BenchResult>, name: &str, mut f: F) {
     let mut best = 0.0f64;
     let mut last_ops = 0;
     for _ in 0..3 {
+        // lint:allow(R1): bench timing measures real elapsed wall time by definition
         let t0 = Instant::now();
         let ops = f();
         let dt = t0.elapsed().as_secs_f64().max(1e-9);

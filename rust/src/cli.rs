@@ -11,6 +11,8 @@
 //! leaseguard serve --node 0 --listen 127.0.0.1:7100 --peers 127.0.0.1:7101,127.0.0.1:7102
 //! ```
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]

@@ -21,6 +21,8 @@
 //!   simulator's timeout semantics) so a silent server cannot strand
 //!   operations in `pending` until the end of the run.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::TcpStream;

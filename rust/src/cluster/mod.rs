@@ -10,7 +10,9 @@
 //! onto the same rails); finally drain, fail leftover operations as
 //! timeouts, and return a [`RunReport`].
 
-use std::collections::HashMap;
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
+use std::collections::BTreeMap;
 
 use crate::clock::sim::{SimClock, SimClockConfig};
 use crate::clock::TimeInterval;
@@ -131,8 +133,11 @@ pub struct Cluster {
     /// clients give up on a target that persistently fails (e.g. a
     /// deposed leader answering NoLease forever after a partition).
     fail_streak: Vec<u32>,
-    pending: HashMap<OpId, PendingOp>,
-    last_target_for: HashMap<OpId, NodeId>,
+    // BTreeMap (lint R2): both maps are iterated on paths that feed
+    // the history (end-of-run drain, crash sweep), so their order must
+    // be OpId order, not hash order.
+    pending: BTreeMap<OpId, PendingOp>,
+    last_target_for: BTreeMap<OpId, NodeId>,
     next_op_id: OpId,
 
     // recording
@@ -206,8 +211,8 @@ impl Cluster {
             client_rng,
             probe_next: vec![0; groups],
             fail_streak: vec![0; groups],
-            pending: HashMap::new(),
-            last_target_for: HashMap::new(),
+            pending: BTreeMap::new(),
+            last_target_for: BTreeMap::new(),
             next_op_id: 1,
             t0: 0,
             read_latency: Histogram::new(),
@@ -280,11 +285,11 @@ impl Cluster {
             self.handle(ev);
         }
 
-        // Drain: remaining in-flight ops are client timeouts. Sorted so
-        // the history tail is independent of HashMap iteration order.
+        // Drain: remaining in-flight ops are client timeouts. BTreeMap
+        // iteration is already OpId-ordered, so the history tail is
+        // deterministic without a sort.
         let now = self.queue.now();
-        let mut pending: Vec<OpId> = self.pending.keys().copied().collect();
-        pending.sort_unstable();
+        let pending: Vec<OpId> = self.pending.keys().copied().collect();
         for op in pending {
             self.finish_op(op, OpResult::Failed(FailReason::Timeout), now);
         }
@@ -654,13 +659,14 @@ impl Cluster {
     fn crash_node(&mut self, v: NodeId, restart_after_us: Option<Micros>) {
         self.net.crash(v);
         let now = self.queue.now();
-        let mut dead: Vec<OpId> = self
+        // BTreeMap iteration is OpId-ordered, so the timeout schedule
+        // is deterministic without a sort.
+        let dead: Vec<OpId> = self
             .last_target_for
             .iter()
             .filter(|&(op, &t)| t == v && self.pending.contains_key(op))
             .map(|(&op, _)| op)
             .collect();
-        dead.sort_unstable(); // HashMap order is not deterministic
         for op in dead {
             self.queue.schedule(now + CRASH_DETECT_US, Event::OpTimeout(op));
         }
@@ -708,8 +714,32 @@ mod tests {
         let a = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 7)).run();
         let b = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 7)).run();
         assert_eq!(a.events_processed, b.events_processed);
-        assert_eq!(a.history.entries.len(), b.history.entries.len());
         assert_eq!(a.t0, b.t0);
+        // Byte-identical histories, entry for entry — not just counts.
+        // This is the regression guard for the R2 class of bugs
+        // (unordered-map iteration feeding the history).
+        assert_eq!(a.history.entries.len(), b.history.entries.len());
+        for (ea, eb) in a.history.entries.iter().zip(b.history.entries.iter()) {
+            assert_eq!(format!("{ea:?}"), format!("{eb:?}"));
+        }
+    }
+
+    #[test]
+    fn deterministic_runs_under_crash_drain() {
+        // Crash + end-of-run drain both iterate the pending-op maps;
+        // replays must stay identical on those paths too (the maps are
+        // BTreeMaps precisely so this holds).
+        let mut p = base_params(ConsistencyMode::LeaseGuard, 23);
+        p.duration_us = 2_000_000;
+        p.crash_leader_at_us = 400_000;
+        p.interarrival_us = 400.0;
+        let a = Cluster::new(p.clone()).run();
+        let b = Cluster::new(p).run();
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.history.entries.len(), b.history.entries.len());
+        for (ea, eb) in a.history.entries.iter().zip(b.history.entries.iter()) {
+            assert_eq!(format!("{ea:?}"), format!("{eb:?}"));
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! goes through [`Params::set`], which validates keys and values so typos
 //! fail loudly instead of silently using defaults.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::BTreeMap;
 use std::fmt;
 use std::str::FromStr;

@@ -12,6 +12,8 @@
 //! sweep at group counts 1, 2, 4, …, G to show aggregate throughput
 //! scaling as one process hosts many lease-guarded groups.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::time::Duration;
 
 use anyhow::Result;

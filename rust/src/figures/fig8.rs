@@ -10,6 +10,8 @@
 //! (`use_xla_admission`), which must agree (the ablation doubles as an
 //! end-to-end check of the Layer-1/2 artifact).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use anyhow::Result;
 
 use crate::clock::TimeInterval;

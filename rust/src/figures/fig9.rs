@@ -11,6 +11,8 @@
 //! paper's EC2 fleet; the default here is 2 ops/ms (scale with
 //! `--param interarrival_us=...`) — the *shape* is the deliverable.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::time::Duration;
 
 use anyhow::Result;

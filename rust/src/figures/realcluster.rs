@@ -5,15 +5,19 @@
 //! drills: a respawned server reboots from its WAL and hard-state file
 //! on the same fixed port.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::clock::real::RealClock;
 use crate::config::Params;
 use crate::runtime::EngineHandle;
 use crate::server::server::{Server, ServerConfig, ServerHandle, SharedApplies};
 use crate::storage::FsyncPolicy;
+use crate::Micros;
 
 pub struct RealCluster {
     pub handles: Vec<Option<ServerHandle>>,
@@ -86,8 +90,13 @@ impl RealCluster {
 
     /// Wait until some server reports leadership (with commit), up to
     /// `timeout`. Returns its index.
+    ///
+    /// Deadlines here use [`RealClock::monotonic_us`] — the same
+    /// process-epoch monotonic timeline the servers run on — rather
+    /// than ad-hoc `Instant::now()` reads (lint R1: wall-clock stays
+    /// behind the clock module outside `server/`/`client/`).
     pub fn wait_for_leader(&self, timeout: Duration) -> Option<usize> {
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = RealClock::monotonic_us() + timeout.as_micros() as Micros;
         loop {
             for (i, h) in self.handles.iter().enumerate() {
                 if let Some(h) = h {
@@ -98,7 +107,7 @@ impl RealCluster {
                     }
                 }
             }
-            if std::time::Instant::now() > deadline {
+            if RealClock::monotonic_us() > deadline {
                 return None;
             }
             std::thread::sleep(Duration::from_millis(5));
@@ -112,7 +121,7 @@ impl RealCluster {
     /// spread across servers.
     pub fn wait_for_all_leaders(&self, groups: usize, timeout: Duration) -> Option<Vec<usize>> {
         let want: u64 = if groups == 64 { u64::MAX } else { (1u64 << groups) - 1 };
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = RealClock::monotonic_us() + timeout.as_micros() as Micros;
         loop {
             let mut covered = 0u64;
             let mut leader_of = vec![usize::MAX; groups];
@@ -130,7 +139,7 @@ impl RealCluster {
             if covered & want == want {
                 return Some(leader_of);
             }
-            if std::time::Instant::now() > deadline {
+            if RealClock::monotonic_us() > deadline {
                 return None;
             }
             std::thread::sleep(Duration::from_millis(5));

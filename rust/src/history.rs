@@ -6,7 +6,7 @@
 //! committing leader). Omniscient execution timestamps are what let the
 //! checker avoid the NP-complete general case (§6.2).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::raft::types::{FailReason, OpId};
 use crate::Micros;
@@ -43,7 +43,9 @@ pub struct HistoryEntry {
 #[derive(Debug, Clone, Default)]
 pub struct ApplyLog {
     /// (key, value) -> (true time, global apply sequence number).
-    first_applied: HashMap<(u32, u64), (Micros, u64)>,
+    /// BTreeMap (lint R2): this map is iterated to build the checker's
+    /// ground-truth sequences, so its order must be deterministic.
+    first_applied: BTreeMap<(u32, u64), (Micros, u64)>,
     seq: u64,
 }
 
@@ -81,8 +83,8 @@ impl ApplyLog {
     /// All per-key apply sequences in one pass (the checker's input —
     /// per-key rescanning was the top profile entry in large runs, see
     /// EXPERIMENTS.md §Perf iteration 6).
-    pub fn sequences(&self) -> HashMap<u32, Vec<(Micros, u64, u64)>> {
-        let mut out: HashMap<u32, Vec<(Micros, u64, u64)>> = HashMap::new();
+    pub fn sequences(&self) -> BTreeMap<u32, Vec<(Micros, u64, u64)>> {
+        let mut out: BTreeMap<u32, Vec<(Micros, u64, u64)>> = BTreeMap::new();
         for (&(key, value), &(t, s)) in &self.first_applied {
             out.entry(key).or_default().push((t, s, value));
         }

@@ -1,6 +1,6 @@
 //! Append-only-list store + limbo-region read gate (paper §6.1, §7.1).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap};
 
 use crate::raft::types::Values;
 
@@ -30,7 +30,9 @@ pub struct Store {
     applied: u64,
     /// Keys written by limbo-region entries (paper §7.1's
     /// `unordered_set<string>`); empty = no limbo restriction.
-    limbo_keys: HashSet<u32>,
+    /// BTreeSet (lint R2): [`Store::limbo_keys`] iterates it to feed
+    /// the admission engine, so the hash order must be deterministic.
+    limbo_keys: BTreeSet<u32>,
     /// Shared empty list returned for absent keys, so a miss is also
     /// just a pointer clone.
     empty: Values,
@@ -41,7 +43,7 @@ impl Default for Store {
         Store {
             data: HashMap::new(),
             applied: 0,
-            limbo_keys: HashSet::new(),
+            limbo_keys: BTreeSet::new(),
             empty: Values::default(),
         }
     }

@@ -14,6 +14,8 @@
 //! not involved (the paper notes Ongaro shortens the lease slightly for
 //! clock drift and that their implementation, like ours, omits it).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::BTreeMap;
 
 use crate::{Micros, NodeId};

@@ -42,6 +42,7 @@
 //! | [`cluster`] | in-process simulated replica set harness |
 //! | [`figures`] | one driver per paper figure (Figs 5-11) |
 //! | [`config`], [`cli`] | params system + hand-rolled CLI |
+//! | [`lint`] | self-hosted determinism/protocol linter (`leaseguard lint`) |
 //! | [`testkit`] | mini property-testing framework (proptest substitute) |
 
 pub mod bench;
@@ -54,6 +55,7 @@ pub mod history;
 pub mod kv;
 pub mod lease;
 pub mod linearizability;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod prob;

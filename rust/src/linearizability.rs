@@ -21,7 +21,7 @@
 //! observing never-applied values, and execution points outside the
 //! invocation window.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::history::{History, OpKind};
 use crate::Micros;
@@ -39,7 +39,7 @@ pub fn check(history: &History) -> Vec<Violation> {
     let mut violations = Vec::new();
 
     // Per-key ground-truth apply sequences, built in one pass.
-    let mut seqs: HashMap<u32, Vec<(Micros, u64, u64)>> = history.applies.sequences();
+    let mut seqs: BTreeMap<u32, Vec<(Micros, u64, u64)>> = history.applies.sequences();
     for e in &history.entries {
         seqs.entry(e.key).or_default();
     }

@@ -1,0 +1,349 @@
+//! Hand-rolled Rust lexer for the self-hosted linter (no `syn` — the
+//! container is offline). Produces a flat token stream with line
+//! numbers: enough structure for the per-rule visitors in
+//! [`super::rules`], which match on token *sequences* rather than a
+//! real AST.
+//!
+//! Handled: line/doc comments, nested block comments, string / raw
+//! string / byte-string / char literals (including the `'a'`-char vs
+//! `'a`-lifetime ambiguity), numbers (without eating `..` ranges),
+//! identifiers, and multi-char operators that matter for matching
+//! (`::`). Everything else is a single-char punct. Comments are kept as
+//! tokens because waivers (`// lint:allow(...)`) live in them.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub kind: Kind,
+    /// Source text. For comments, the full text including delimiters.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    /// `'a`, `'static`, `'_`
+    Lifetime,
+    /// String / char / byte / numeric literal.
+    Literal,
+    /// `//…` or `/*…*/`, text preserved for waiver parsing.
+    Comment,
+    /// `::` or a single punctuation character.
+    Punct,
+}
+
+/// Lex `src` into tokens. Never fails: unterminated constructs are
+/// closed at end-of-input (the linter must degrade gracefully on any
+/// input — it runs on fixture files that are deliberately broken).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        let start_line = line;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                let s = i;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                toks.push(tok(Kind::Comment, &b[s..i], start_line));
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                let s = i;
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                toks.push(tok(Kind::Comment, &b[s..i], start_line));
+            }
+            '"' => {
+                let (end, nl) = scan_string(&b, i + 1, 0);
+                toks.push(tok(Kind::Literal, &b[i..end], start_line));
+                line += nl;
+                i = end;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&b, i) => {
+                let s = i;
+                // Skip the prefix letters (`r`, `b`, `br`, `rb`).
+                while i < b.len() && (b[i] == 'r' || b[i] == 'b') {
+                    i += 1;
+                }
+                let mut hashes = 0;
+                while i < b.len() && b[i] == '#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                // Now at the opening quote.
+                let raw = b[s..i].contains(&'r');
+                let (end, nl) = if raw {
+                    scan_raw_string(&b, i + 1, hashes)
+                } else {
+                    scan_string(&b, i + 1, 0)
+                };
+                toks.push(tok(Kind::Literal, &b[s..end], start_line));
+                line += nl;
+                i = end;
+            }
+            'b' if i + 1 < b.len() && b[i + 1] == '\'' => {
+                let end = scan_char(&b, i + 2);
+                toks.push(tok(Kind::Literal, &b[i..end], start_line));
+                i = end;
+            }
+            '\'' => {
+                // Char literal or lifetime? A lifetime is always
+                // ident-like (`'a`, `'static`, `'_`) and is NOT followed
+                // by a closing quote right after its first character.
+                let next = b.get(i + 1).copied();
+                let after = b.get(i + 2).copied();
+                let ident_start =
+                    next.map(|c| c.is_alphabetic() || c == '_').unwrap_or(false);
+                if ident_start && after != Some('\'') {
+                    // Lifetime: consume ident chars.
+                    let s = i;
+                    i += 1;
+                    while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                        i += 1;
+                    }
+                    toks.push(tok(Kind::Lifetime, &b[s..i], start_line));
+                } else {
+                    let end = scan_char(&b, i + 1);
+                    toks.push(tok(Kind::Literal, &b[i..end], start_line));
+                    i = end;
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let s = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                toks.push(tok(Kind::Ident, &b[s..i], start_line));
+            }
+            c if c.is_ascii_digit() => {
+                let s = i;
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if d.is_alphanumeric() || d == '_' {
+                        i += 1;
+                    } else if d == '.' {
+                        // Don't eat `..` ranges: `0..n` is three tokens.
+                        if b.get(i + 1) == Some(&'.') {
+                            break;
+                        }
+                        i += 1;
+                    } else if (d == '+' || d == '-')
+                        && matches!(b.get(i - 1), Some('e') | Some('E'))
+                    {
+                        // Exponent sign: `1e-9`.
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(tok(Kind::Literal, &b[s..i], start_line));
+            }
+            ':' if b.get(i + 1) == Some(&':') => {
+                toks.push(tok(Kind::Punct, &b[i..i + 2], start_line));
+                i += 2;
+            }
+            _ => {
+                toks.push(tok(Kind::Punct, &b[i..i + 1], start_line));
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+fn tok(kind: Kind, chars: &[char], line: usize) -> Tok {
+    Tok { kind, text: chars.iter().collect(), line }
+}
+
+/// Is `b[i]` the start of `r"`, `r#"`, `b"`, `br"`, `br#"` …?
+fn starts_raw_or_byte_string(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    let mut saw_r = false;
+    let mut saw_b = false;
+    while j < b.len() {
+        match b[j] {
+            'r' if !saw_r => {
+                saw_r = true;
+                j += 1;
+            }
+            'b' if !saw_b => {
+                saw_b = true;
+                j += 1;
+            }
+            _ => break,
+        }
+    }
+    if j >= b.len() || j == i {
+        return false;
+    }
+    while j < b.len() && b[j] == '#' {
+        if !saw_r {
+            return false; // `b#` is not a string prefix
+        }
+        j += 1;
+    }
+    j < b.len() && b[j] == '"' && (saw_r || b[j - 1] == '"' || j == i + 1)
+}
+
+/// Scan a (cooked) string body starting after the opening quote.
+/// Returns (index past closing quote, newlines crossed).
+fn scan_string(b: &[char], mut i: usize, _hashes: usize) -> (usize, usize) {
+    let mut nl = 0;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                nl += 1;
+                i += 1;
+            }
+            '"' => return (i + 1, nl),
+            _ => i += 1,
+        }
+    }
+    (i, nl)
+}
+
+/// Scan a raw string body; closes on `"` followed by `hashes` `#`s.
+fn scan_raw_string(b: &[char], mut i: usize, hashes: usize) -> (usize, usize) {
+    let mut nl = 0;
+    while i < b.len() {
+        if b[i] == '\n' {
+            nl += 1;
+            i += 1;
+        } else if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes {
+            return (i + 1 + hashes, nl);
+        } else {
+            i += 1;
+        }
+    }
+    (i, nl)
+}
+
+/// Scan a char literal body starting after the opening quote; returns
+/// the index past the closing quote.
+fn scan_char(b: &[char], mut i: usize) -> usize {
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_stream() {
+        let toks = lex("let x: u32 = 7;");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["let", "x", ":", "u32", "=", "7", ";"]);
+    }
+
+    #[test]
+    fn double_colon_is_one_token() {
+        let toks = lex("Instant::now()");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["Instant", "::", "now", "(", ")"]);
+    }
+
+    #[test]
+    fn comments_preserved_with_lines() {
+        let toks = lex("a\n// lint:allow(R1): why\nb /* block\nstill */ c");
+        let comments: Vec<(&str, usize)> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Comment)
+            .map(|t| (t.text.as_str(), t.line))
+            .collect();
+        assert_eq!(comments[0], ("// lint:allow(R1): why", 2));
+        assert!(comments[1].0.contains("block"));
+        assert_eq!(comments[1].1, 3);
+        // Line numbers keep counting after multi-line block comments.
+        let c = toks.iter().find(|t| t.text == "c").unwrap();
+        assert_eq!(c.line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* outer /* inner */ still-comment */ x");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1].text, "x");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("impl<'a> Dec<'a> { split(','); let c = 'x'; let e = '\\n'; }");
+        let lifetimes: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Lifetime).map(|t| t.text.as_str()).collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let lits: Vec<&str> =
+            toks.iter().filter(|t| t.kind == Kind::Literal).map(|t| t.text.as_str()).collect();
+        assert_eq!(lits, vec!["','", "'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn strings_do_not_leak_tokens() {
+        // `HashMap` inside a string or comment must not look like code.
+        assert_eq!(idents(r#"let s = "HashMap::iter() // not code";"#), vec!["let", "s"]);
+        let raw = lex("let s = r#\"no \"escape\" here\"#; y");
+        assert_eq!(raw.last().unwrap().text, "y");
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let texts: Vec<String> = lex("for i in 0..10 {}").into_iter().map(|t| t.text).collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"10".to_string()));
+        // Floats and exponents still lex as one literal.
+        let f = lex("1e-9 0.25");
+        assert_eq!(f[0].text, "1e-9");
+        assert_eq!(f[1].text, "0.25");
+    }
+
+    #[test]
+    fn unterminated_inputs_do_not_hang() {
+        // Fixture files may be arbitrarily broken; the lexer must
+        // terminate on all of them.
+        for src in ["\"abc", "/* never closed", "'x", "r#\"open", "b'"] {
+            let _ = lex(src);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Self-hosted determinism & protocol-discipline linter.
+//!
+//! `leaseguard lint [--root DIR] [--json]` walks a Rust source tree
+//! (default: the crate's own `rust/src/`) with a dependency-free
+//! hand-rolled lexer and enforces the repo's determinism and protocol
+//! invariants as machine-checked rules R1–R5 (see [`rules`] for the
+//! catalog). Exceptions are documented inline with
+//! `// lint:allow(<rule>): <reason>` waivers; the waiver itself is
+//! checked (W0 malformed, W1 unused).
+//!
+//! Self-hosting: a tier-1 test (`rust/tests/lint_suite.rs`) runs
+//! [`lint_tree`] over `rust/src/` and fails on any unwaived finding,
+//! so the invariants hold on every commit without needing clippy or
+//! network access.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_source, Finding};
+
+/// Aggregate result of linting a tree.
+#[derive(Debug)]
+pub struct Report {
+    /// All findings, waived and not, ordered by (file, line, rule).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Findings not covered by a waiver — the ones that fail the run.
+    pub fn unwaived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none())
+    }
+
+    pub fn unwaived_count(&self) -> usize {
+        self.unwaived().count()
+    }
+
+    /// Human-readable report: unwaived findings in full, waived ones as
+    /// a one-line audit trail, then a summary.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in self.unwaived() {
+            let _ = writeln!(s, "{}: {}:{}: {}", f.rule, f.file, f.line, f.what);
+            let _ = writeln!(s, "    note: {}", f.why);
+        }
+        let waived: Vec<&Finding> = self.findings.iter().filter(|f| f.waived.is_some()).collect();
+        if !waived.is_empty() {
+            let _ = writeln!(s, "waivers in effect ({}):", waived.len());
+            for f in &waived {
+                let _ = writeln!(
+                    s,
+                    "    {} {}:{} {} — {}",
+                    f.rule,
+                    f.file,
+                    f.line,
+                    f.what,
+                    f.waived.as_deref().unwrap_or("")
+                );
+            }
+        }
+        let _ = writeln!(
+            s,
+            "lint: {} file(s), {} finding(s), {} waived, {} unwaived",
+            self.files_scanned,
+            self.findings.len(),
+            waived.len(),
+            self.unwaived_count()
+        );
+        s
+    }
+
+    /// Machine-readable report (hand-rolled JSON; no serde in-tree).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"files_scanned\": ");
+        let _ = write!(s, "{}", self.files_scanned);
+        let _ = write!(s, ",\n  \"unwaived\": {}", self.unwaived_count());
+        s.push_str(",\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"what\": \"{}\", \"why\": \"{}\", \"waived\": ",
+                json_escape(f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.what),
+                json_escape(f.why)
+            );
+            match &f.waived {
+                Some(r) => {
+                    let _ = write!(s, "\"{}\"}}", json_escape(r));
+                }
+                None => s.push_str("null}"),
+            }
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `root`. Files are visited in sorted
+/// relative-path order so the report (and its JSON) is deterministic.
+pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    let files_scanned = files.len();
+    for rel in files {
+        let src = std::fs::read_to_string(root.join(&rel))?;
+        let rel_str = rel
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        findings.extend(lint_source(&rel_str, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Report { findings, files_scanned })
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn mini_report() -> Report {
+        let findings = lint_source(
+            "raft/node.rs",
+            "// lint:allow(R1): legit reason\nlet a = Instant::now();\nlet b = Instant::now();\n",
+        );
+        Report { findings, files_scanned: 1 }
+    }
+
+    #[test]
+    fn report_counts_waived_vs_unwaived() {
+        let r = mini_report();
+        assert_eq!(r.findings.len(), 2);
+        assert_eq!(r.unwaived_count(), 1);
+        let text = r.render_text();
+        assert!(text.contains("R1: raft/node.rs:3"), "{text}");
+        assert!(text.contains("waivers in effect (1)"), "{text}");
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let r = mini_report();
+        let j = r.to_json();
+        assert!(j.contains("\"unwaived\": 1"), "{j}");
+        assert!(j.contains("\"rule\": \"R1\""));
+        assert!(j.contains("\"waived\": null"));
+        assert!(j.contains("\"waived\": \"legit reason\""));
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,700 @@
+//! The rule visitors for `leaseguard lint`.
+//!
+//! Each rule walks the token stream produced by [`super::lexer`] and
+//! emits [`Finding`]s. Rules are deliberately token-pattern matchers,
+//! not type-checked analyses: they over-approximate (a flagged site
+//! that is actually fine takes a `// lint:allow(<rule>): <reason>`
+//! waiver, which is the point — every exception becomes documented).
+//!
+//! Rule catalog (see DESIGN.md for the prose version):
+//! - **R1** wall-clock reads (`Instant::now` / `SystemTime::now`)
+//!   outside `clock/real.rs`, `server/`, `client/`.
+//! - **R2** iteration over `HashMap`/`HashSet` in protocol/sim paths
+//!   (`sim/`, `raft/`, `shard/`, `lease/`, `cluster/`, `kv/`,
+//!   `history.rs`, `linearizability.rs`) — unordered iteration feeding
+//!   a history or report is exactly the nondeterminism class the
+//!   fixed-seed replay tests exist to catch.
+//! - **R3** ambient randomness (`thread_rng`, `rand::random`,
+//!   `RandomState`) anywhere — all randomness flows from seeded
+//!   `prob.rs` generators.
+//! - **R4** panic paths (`unwrap()` / `expect()` / `panic!` /
+//!   slice-indexing) in the untrusted-input decoder `server/wire.rs`.
+//! - **R5** routing discipline in `server/server.rs::main_loop`: every
+//!   `router.handle(..)` must be preceded by a `persist_all` since the
+//!   previous route (persist-before-route), and no direct
+//!   `write_frame` outside that discipline.
+//!
+//! Plus two meta rules about waivers themselves: **W0** malformed
+//! waiver (unknown rule name or missing reason) and **W1** waiver that
+//! matched no finding (stale — delete it).
+//!
+//! All rules skip `#[cfg(test)]` regions: tests may use wall clocks,
+//! unwraps and hash iteration freely.
+
+use super::lexer::{lex, Kind, Tok};
+
+/// One lint finding. `waived` carries the waiver reason when an inline
+/// `// lint:allow(<rule>): <reason>` covers the site.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    pub line: usize,
+    /// What was matched, e.g. `Instant::now` or `pending.iter()`.
+    pub what: String,
+    /// Why the rule exists (one line, stable per rule).
+    pub why: &'static str,
+    pub waived: Option<String>,
+}
+
+const WHY_R1: &str = "wall-clock reads outside clock/real.rs, server/, client/ break simulated-time determinism";
+const WHY_R2: &str = "HashMap/HashSet iteration order is nondeterministic; use BTreeMap/BTreeSet or collect-and-sort";
+const WHY_R3: &str = "ambient RNG bypasses the seeded prob.rs plumbing; replays stop being reproducible";
+const WHY_R4: &str = "every wire byte is untrusted; decode must return errors, never panic";
+const WHY_R5: &str = "main_loop must persist (persist_all) before routing (router.handle): persist-before-route durability";
+const WHY_W0: &str = "waiver is malformed: expected `lint:allow(<R1..R5>): <non-empty reason>`";
+const WHY_W1: &str = "waiver matched no finding on its own or the next line; delete or move it";
+
+/// A parsed `// lint:allow(<rule>): <reason>` comment.
+struct Waiver {
+    rule: String,
+    line: usize,
+    reason: String,
+    used: bool,
+}
+
+/// Lint one file's source text. `relpath` is the path relative to the
+/// lint root (e.g. `raft/node.rs`), `/`-separated — rules are scoped
+/// by it. This is the unit-testable entry point; [`super::lint_tree`]
+/// drives it over a directory.
+pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
+    let toks = strip_test_regions(&lex(src));
+    let mut waivers = collect_waivers(&toks);
+    // Code-only view: comments out of the way so adjacency patterns
+    // like `.unwrap(` match across a trailing comment.
+    let code: Vec<&Tok> = toks.iter().filter(|t| t.kind != Kind::Comment).collect();
+
+    let mut findings = Vec::new();
+    if !r1_exempt(relpath) {
+        r1_wall_clock(relpath, &code, &mut findings);
+    }
+    if r2_in_scope(relpath) {
+        r2_hash_iteration(relpath, &code, &mut findings);
+    }
+    r3_ambient_rng(relpath, &code, &mut findings);
+    if relpath == "server/wire.rs" {
+        r4_panic_paths(relpath, &code, &mut findings);
+    }
+    if relpath == "server/server.rs" {
+        r5_persist_before_route(relpath, &code, &mut findings);
+    }
+
+    // Apply waivers: a waiver covers findings of its rule on its own
+    // line and the next line.
+    for f in &mut findings {
+        if let Some(w) = waivers
+            .iter_mut()
+            .find(|w| w.rule == f.rule && (w.line == f.line || w.line + 1 == f.line))
+        {
+            w.used = true;
+            f.waived = Some(w.reason.clone());
+        }
+    }
+    // Meta rules: malformed (already emitted by collect_waivers via
+    // empty rule) and unused waivers.
+    for w in &waivers {
+        if w.rule == "W0" {
+            findings.push(Finding {
+                rule: "W0",
+                file: relpath.to_string(),
+                line: w.line,
+                what: w.reason.clone(),
+                why: WHY_W0,
+                waived: None,
+            });
+        } else if !w.used {
+            findings.push(Finding {
+                rule: "W1",
+                file: relpath.to_string(),
+                line: w.line,
+                what: format!("unused lint:allow({})", w.rule),
+                why: WHY_W1,
+                waived: None,
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+const RULES: [&str; 5] = ["R1", "R2", "R3", "R4", "R5"];
+
+/// Extract waivers from comment tokens. Malformed ones come back with
+/// `rule == "W0"` and the problem description in `reason`.
+fn collect_waivers(toks: &[Tok]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        // A waiver must BEGIN the comment (after `//`/`//!`/`/*`
+        // decoration) — prose that merely mentions `lint:allow(...)`,
+        // like this module's own docs, is not a waiver.
+        let body = t.text.trim_end_matches("*/").trim_start_matches(['/', '*', '!']).trim();
+        let Some(rest) = body.strip_prefix("lint:allow(") else { continue };
+        let Some(close) = rest.find(')') else {
+            out.push(Waiver {
+                rule: "W0".into(),
+                line: t.line,
+                reason: "unclosed lint:allow(".into(),
+                used: false,
+            });
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let after = &rest[close + 1..];
+        let reason = after.strip_prefix(':').map(|r| r.trim().to_string());
+        match (RULES.contains(&rule.as_str()), reason) {
+            (true, Some(r)) if !r.is_empty() => {
+                out.push(Waiver { rule, line: t.line, reason: r, used: false });
+            }
+            (false, _) => out.push(Waiver {
+                rule: "W0".into(),
+                line: t.line,
+                reason: format!("unknown rule `{rule}` in lint:allow"),
+                used: false,
+            }),
+            (true, _) => out.push(Waiver {
+                rule: "W0".into(),
+                line: t.line,
+                reason: format!("lint:allow({rule}) has no reason"),
+                used: false,
+            }),
+        }
+    }
+    out
+}
+
+/// Drop every `#[cfg(test)] <item>` region from the stream. The item
+/// is brace-matched (`mod tests { … }`, `fn t() { … }`); attribute-only
+/// items ending in `;` are skipped to the `;`.
+fn strip_test_regions(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // Skip the attribute itself (7 tokens: # [ cfg ( test ) ]).
+            i += 7;
+            // Skip the attributed item: to matching `}` or to `;`,
+            // whichever structure appears first.
+            let mut depth = 0usize;
+            while i < toks.len() {
+                match toks[i].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    ";" if depth == 0 => {
+                        i += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+        } else {
+            out.push(toks[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    let texts = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + texts.len() && texts.iter().enumerate().all(|(k, s)| toks[i + k].text == *s)
+}
+
+// ---------------------------------------------------------------- R1
+
+fn r1_exempt(relpath: &str) -> bool {
+    relpath == "clock/real.rs" || relpath.starts_with("server/") || relpath.starts_with("client/")
+}
+
+fn r1_wall_clock(relpath: &str, code: &[&Tok], findings: &mut Vec<Finding>) {
+    for w in code.windows(3) {
+        if w[1].text == "::"
+            && w[2].text == "now"
+            && (w[0].text == "Instant" || w[0].text == "SystemTime")
+        {
+            findings.push(Finding {
+                rule: "R1",
+                file: relpath.to_string(),
+                line: w[2].line,
+                what: format!("{}::now", w[0].text),
+                why: WHY_R1,
+                waived: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+fn r2_in_scope(relpath: &str) -> bool {
+    const DIRS: [&str; 6] = ["sim/", "raft/", "shard/", "lease/", "cluster/", "kv/"];
+    DIRS.iter().any(|d| relpath.starts_with(d))
+        || relpath == "history.rs"
+        || relpath == "linearizability.rs"
+}
+
+const ITER_METHODS: [&str; 8] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+
+fn r2_hash_iteration(relpath: &str, code: &[&Tok], findings: &mut Vec<Finding>) {
+    let hashy = collect_hash_typed_idents(code);
+    // `name.iter()` and friends, where `name` is hash-typed.
+    for i in 2..code.len() {
+        if code[i].text == "("
+            && code[i - 1].kind == Kind::Ident
+            && ITER_METHODS.contains(&code[i - 1].text.as_str())
+            && code[i - 2].text == "."
+            && i >= 3
+            && code[i - 3].kind == Kind::Ident
+            && hashy.contains(&code[i - 3].text)
+        {
+            findings.push(Finding {
+                rule: "R2",
+                file: relpath.to_string(),
+                line: code[i - 1].line,
+                what: format!("{}.{}()", code[i - 3].text, code[i - 1].text),
+                why: WHY_R2,
+                waived: None,
+            });
+        }
+    }
+    // `for pat in <expr ending in hash-typed name> {` — the implicit
+    // IntoIterator case with no method call to anchor on.
+    let mut i = 0;
+    while i < code.len() {
+        if code[i].text == "for" {
+            if let Some(f) = r2_check_for_loop(relpath, code, i, &hashy) {
+                findings.push(f);
+            }
+        }
+        i += 1;
+    }
+}
+
+/// First pass: which identifiers in this file are (probably) HashMaps
+/// or HashSets? Matches type annotations (`name: HashMap<..>` up to a
+/// top-level `,;){=`) and initializers (`let [mut] name =
+/// HashMap::new/with_capacity/from(..)`).
+fn collect_hash_typed_idents(code: &[&Tok]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for i in 0..code.len() {
+        // `name : <type tokens containing HashMap/HashSet>`
+        if code[i].kind == Kind::Ident && i + 2 < code.len() && code[i + 1].text == ":" {
+            let mut angle = 0i32;
+            for t in code.iter().skip(i + 2).take(40) {
+                match t.text.as_str() {
+                    "<" => angle += 1,
+                    ">" => angle -= 1,
+                    "," | ";" | ")" | "{" | "=" if angle <= 0 => break,
+                    "HashMap" | "HashSet" => {
+                        out.push(code[i].text.clone());
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // `let [mut] name = HashMap::…` / `HashSet::…`
+        if code[i].text == "let" {
+            let mut j = i + 1;
+            if j < code.len() && code[j].text == "mut" {
+                j += 1;
+            }
+            if j + 2 < code.len()
+                && code[j].kind == Kind::Ident
+                && code[j + 1].text == "="
+                && (code[j + 2].text == "HashMap" || code[j + 2].text == "HashSet")
+            {
+                out.push(code[j].text.clone());
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// `for pat in expr {` where `expr` is a plain place expression
+/// (idents, `.`, `&`, `mut` — no calls) ending in a hash-typed name.
+fn r2_check_for_loop(
+    relpath: &str,
+    code: &[&Tok],
+    for_idx: usize,
+    hashy: &[String],
+) -> Option<Finding> {
+    // Find `in` before the body `{`, at bracket depth 0 (destructuring
+    // patterns like `for (k, v) in …` put the `in` after a `)`).
+    let mut depth = 0i32;
+    let mut in_idx = None;
+    for (j, t) in code.iter().enumerate().skip(for_idx + 1).take(30) {
+        match t.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "in" if depth == 0 => {
+                in_idx = Some(j);
+                break;
+            }
+            "{" => break, // `impl Trait for Type {` — not a loop
+            _ => {}
+        }
+    }
+    let in_idx = in_idx?;
+    // Expr tokens: from after `in` to the body `{` at depth 0.
+    let mut expr: Vec<&Tok> = Vec::new();
+    depth = 0;
+    for t in code.iter().skip(in_idx + 1).take(30) {
+        match t.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" if depth == 0 => break,
+            _ => {}
+        }
+        expr.push(t);
+    }
+    // Plain place expression only — anything with a call or index is
+    // either covered by the method check or too complex to judge here.
+    if expr.is_empty()
+        || !expr.iter().all(|t| t.kind == Kind::Ident || t.text == "." || t.text == "&")
+    {
+        return None;
+    }
+    let last = expr.last()?;
+    if last.kind == Kind::Ident && hashy.contains(&last.text) {
+        return Some(Finding {
+            rule: "R2",
+            file: relpath.to_string(),
+            line: code[for_idx].line,
+            what: format!("for … in {}", last.text),
+            why: WHY_R2,
+            waived: None,
+        });
+    }
+    None
+}
+
+// ---------------------------------------------------------------- R3
+
+fn r3_ambient_rng(relpath: &str, code: &[&Tok], findings: &mut Vec<Finding>) {
+    for (i, t) in code.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            "thread_rng" | "RandomState" => true,
+            "random" => {
+                i >= 2 && code[i - 1].text == "::" && code[i - 2].text == "rand"
+            }
+            _ => false,
+        };
+        if hit {
+            let what =
+                if t.text == "random" { "rand::random".to_string() } else { t.text.clone() };
+            findings.push(Finding {
+                rule: "R3",
+                file: relpath.to_string(),
+                line: t.line,
+                what,
+                why: WHY_R3,
+                waived: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "let" | "mut" | "in" | "if" | "else" | "match" | "return" | "as" | "ref" | "move"
+    )
+}
+
+fn r4_panic_paths(relpath: &str, code: &[&Tok], findings: &mut Vec<Finding>) {
+    for (i, t) in code.iter().enumerate() {
+        let what: Option<String> = match t.text.as_str() {
+            // `.unwrap(` / `.expect(` — exact ident, so `unwrap_or` is
+            // fine (it lexes as one ident and never matches).
+            "unwrap" | "expect"
+                if i >= 1
+                    && code[i - 1].text == "."
+                    && code.get(i + 1).map(|n| n.text == "(").unwrap_or(false) =>
+            {
+                Some(format!(".{}()", t.text))
+            }
+            "panic" | "unreachable" | "assert" | "debug_assert"
+                if code.get(i + 1).map(|n| n.text == "!").unwrap_or(false) =>
+            {
+                Some(format!("{}!", t.text))
+            }
+            // Slice indexing: `[` after an ident, `]`, or `)`. This
+            // shape excludes `vec![`, attributes `#[`, array literals
+            // `= [`, and keyword-led patterns like `let [b] = …`.
+            "[" if i >= 1
+                && ((code[i - 1].kind == Kind::Ident && !is_keyword(&code[i - 1].text))
+                    || code[i - 1].text == "]"
+                    || code[i - 1].text == ")") =>
+            {
+                Some(format!("{}[..] indexing", code[i - 1].text))
+            }
+            _ => None,
+        };
+        if let Some(what) = what {
+            findings.push(Finding {
+                rule: "R4",
+                file: relpath.to_string(),
+                line: t.line,
+                what,
+                why: WHY_R4,
+                waived: None,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+fn r5_persist_before_route(relpath: &str, code: &[&Tok], findings: &mut Vec<Finding>) {
+    // Locate `fn main_loop` and brace-match its body.
+    let mut start = None;
+    for i in 0..code.len().saturating_sub(1) {
+        if code[i].text == "fn" && code[i + 1].text == "main_loop" {
+            start = Some(i);
+            break;
+        }
+    }
+    let Some(start) = start else {
+        findings.push(Finding {
+            rule: "R5",
+            file: relpath.to_string(),
+            line: 1,
+            what: "fn main_loop not found (renamed? update the linter's R5 anchor)".to_string(),
+            why: WHY_R5,
+            waived: None,
+        });
+        return;
+    };
+    // Body = first `{` after the signature to its matching `}`.
+    let mut i = start;
+    while i < code.len() && code[i].text != "{" {
+        i += 1;
+    }
+    let body_start = i;
+    let mut depth = 0i32;
+    let mut body_end = code.len();
+    while i < code.len() {
+        match code[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    body_end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let body = &code[body_start..body_end];
+
+    // Discipline: every `router.handle(` needs a `persist_all` since
+    // the previous route.
+    let mut persisted = false;
+    for (j, t) in body.iter().enumerate() {
+        if t.text == "persist_all" {
+            persisted = true;
+        } else if t.text == "router"
+            && body.get(j + 1).map(|n| n.text == ".").unwrap_or(false)
+            && body.get(j + 2).map(|n| n.text == "handle").unwrap_or(false)
+        {
+            if !persisted {
+                findings.push(Finding {
+                    rule: "R5",
+                    file: relpath.to_string(),
+                    line: t.line,
+                    what: "router.handle without persist_all since previous route".to_string(),
+                    why: WHY_R5,
+                    waived: None,
+                });
+            }
+            persisted = false;
+        } else if t.text == "write_frame" {
+            findings.push(Finding {
+                rule: "R5",
+                file: relpath.to_string(),
+                line: t.line,
+                what: "direct write_frame inside main_loop".to_string(),
+                why: WHY_R5,
+                waived: None,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn unwaived(relpath: &str, src: &str) -> Vec<Finding> {
+        lint_source(relpath, src).into_iter().filter(|f| f.waived.is_none()).collect()
+    }
+
+    #[test]
+    fn r1_flags_wall_clock_outside_allowed_paths() {
+        let src = "fn f() { let t = Instant::now(); }";
+        let f = unwaived("raft/node.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "R1");
+        assert_eq!(f[0].what, "Instant::now");
+        // Allowed paths: clock/real.rs, server/, client/.
+        assert!(unwaived("clock/real.rs", src).is_empty());
+        assert!(unwaived("server/transport.rs", src).is_empty());
+        assert!(unwaived("client/mod.rs", src).is_empty());
+        // SystemTime too, including fully-qualified paths.
+        let sys = "fn f() { let t = std::time::SystemTime::now(); }";
+        assert_eq!(unwaived("sim/event_loop.rs", sys).len(), 1);
+    }
+
+    #[test]
+    fn r1_waiver_suppresses_and_is_marked_used() {
+        let src = "// lint:allow(R1): bench timing is real time by definition\nlet t0 = Instant::now();";
+        let all = lint_source("figures/fig8.rs", src);
+        assert_eq!(all.len(), 1, "{all:?}");
+        assert!(all[0].waived.is_some());
+        // No W1 (waiver used), no unwaived findings.
+        assert!(all.iter().all(|f| f.rule != "W1"));
+    }
+
+    #[test]
+    fn r2_flags_hash_iteration_by_annotation_and_initializer() {
+        let src = "struct S { m: HashMap<u32, u64> }\n\
+                   impl S { fn f(&self) { for k in self.m.keys() { use_(k); } } }";
+        let f = unwaived("raft/node.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "R2");
+        assert!(f[0].what.contains("m.keys"));
+
+        let src2 = "fn f() { let mut seen = HashMap::new(); for (k, v) in seen { g(k, v); } }";
+        let f2 = unwaived("history.rs", src2);
+        assert_eq!(f2.len(), 1, "{f2:?}");
+        assert!(f2[0].what.contains("for … in seen"));
+    }
+
+    #[test]
+    fn r2_out_of_scope_and_non_hash_receivers_pass() {
+        let src = "struct S { m: HashMap<u32, u64> }\n\
+                   impl S { fn f(&self) { for k in self.m.keys() { use_(k); } } }";
+        // Not a protocol path: no finding.
+        assert!(unwaived("obs/registry.rs", src).is_empty());
+        // BTreeMap iteration in scope: fine.
+        let ordered = "struct S { m: BTreeMap<u32, u64> }\n\
+                       impl S { fn f(&self) { for k in self.m.keys() { use_(k); } } }";
+        assert!(unwaived("raft/node.rs", ordered).is_empty());
+        // Non-iterating HashMap use (index/len/insert): fine.
+        let touch = "struct S { m: HashMap<u32, u64> }\n\
+                     impl S { fn f(&mut self) { self.m.insert(1, 2); let n = self.m.len(); } }";
+        assert!(unwaived("raft/node.rs", touch).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_ambient_rng_everywhere() {
+        assert_eq!(unwaived("obs/registry.rs", "let r = thread_rng();")[0].rule, "R3");
+        assert_eq!(unwaived("report.rs", "let x: u8 = rand::random();")[0].rule, "R3");
+        assert_eq!(unwaived("kv/store.rs", "let s = RandomState::new();")[0].rule, "R3");
+        // `random` alone (not rand::random) is not flagged.
+        assert!(unwaived("report.rs", "let x = self.random;").is_empty());
+    }
+
+    #[test]
+    fn r4_flags_panic_paths_only_in_wire() {
+        let src = "fn d(b: &[u8]) -> u8 { let x = b[0]; opt.unwrap(); r.expect(\"m\"); panic!(\"no\"); x }";
+        let f = unwaived("server/wire.rs", src);
+        let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert_eq!(rules, vec!["R4", "R4", "R4", "R4"], "{f:?}");
+        // Same code in another file: not R4's business.
+        assert!(unwaived("raft/log.rs", src).is_empty());
+        // unwrap_or / vec![ / #[attr] are not flagged.
+        let ok = "#[derive(Debug)] fn d() { let v = vec![1]; x.unwrap_or(0); }";
+        assert!(unwaived("server/wire.rs", ok).is_empty(), "{:?}", unwaived("server/wire.rs", ok));
+    }
+
+    #[test]
+    fn r5_checks_persist_before_route() {
+        let good = "fn main_loop() { pending.push(op); persist_all(); router.handle(op); }";
+        assert!(unwaived("server/server.rs", good).is_empty());
+        let bad = "fn main_loop() { router.handle(op); }";
+        let f = unwaived("server/server.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "R5");
+        // Two routes, one persist: second route is flagged.
+        let half = "fn main_loop() { persist_all(); router.handle(a); router.handle(b); }";
+        assert_eq!(unwaived("server/server.rs", half).len(), 1);
+        // Renamed main_loop trips the anchor guard.
+        let renamed = "fn run_loop() { persist_all(); router.handle(a); }";
+        let f2 = unwaived("server/server.rs", renamed);
+        assert_eq!(f2.len(), 1);
+        assert!(f2[0].what.contains("not found"));
+        // write_frame inside main_loop is flagged (waiverable).
+        let wf = "fn main_loop() { persist_all(); router.handle(a); write_frame(s, f); }";
+        assert_eq!(unwaived("server/server.rs", wf).len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { let x = Instant::now(); thread_rng(); }\n\
+                   }";
+        assert!(unwaived("raft/node.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "fn f() { let s = \"Instant::now() thread_rng()\"; }\n// Instant::now in prose\n";
+        assert!(unwaived("raft/node.rs", src).is_empty());
+    }
+
+    #[test]
+    fn w0_malformed_and_w1_unused_waivers() {
+        // Missing reason.
+        let f = lint_source("raft/node.rs", "// lint:allow(R1)\nlet t = Instant::now();");
+        assert!(f.iter().any(|x| x.rule == "W0"), "{f:?}");
+        // Unknown rule.
+        let f2 = lint_source("raft/node.rs", "// lint:allow(R9): nope\n");
+        assert!(f2.iter().any(|x| x.rule == "W0"));
+        // Unused (nothing to waive on the next line).
+        let f3 = lint_source("raft/node.rs", "// lint:allow(R1): stale\nlet x = 1;");
+        assert!(f3.iter().any(|x| x.rule == "W1"), "{f3:?}");
+    }
+
+    #[test]
+    fn waiver_on_same_line_works() {
+        let src = "let t = Instant::now(); // lint:allow(R1): trailing waiver\n";
+        let f = lint_source("raft/node.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].waived.is_some());
+    }
+}

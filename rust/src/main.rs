@@ -8,6 +8,7 @@
 //! leaseguard stat     --addr HOST:PORT [--json] [--tail N] live server introspection
 //! leaseguard bench-cluster [--param k=v ...]     in-process real cluster + open-loop client
 //! leaseguard check    [--artifacts DIR]          verify AOT artifacts load & agree with scalar
+//! leaseguard lint     [--root DIR] [--json]      determinism/protocol linter over the source tree
 //! leaseguard params                              dump default parameters
 //! ```
 
@@ -69,6 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bench-cluster") => cmd_bench_cluster(args, params),
         Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(&params),
+        Some("lint") => cmd_lint(args),
         Some("params") => {
             print!("{}", params.dump());
             Ok(())
@@ -83,7 +85,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|stat|bench|bench-cluster|check|params> [--param k=v ...]
+const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|stat|bench|bench-cluster|check|lint|params> [--param k=v ...]
   sim                     one simulated run (availability timeline + latency + linearizability)
   scenarios               Nemesis fault matrix: every scenario x {leaseguard,quorum,inconsistent},
                           linearizability-checked (--json [PATH] writes SCENARIOS.json).
@@ -100,6 +102,8 @@ const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|stat|bench|be
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
   bench-cluster           in-process 3-node TCP cluster + open-loop client
   check                   load AOT artifacts, cross-check engine vs scalar oracle
+  lint                    self-hosted determinism/protocol linter (--root DIR, default rust/src;
+                          --json for machine-readable output; exits nonzero on unwaived findings)
   params                  print all parameters and defaults";
 
 fn cmd_sim(params: Params) -> Result<()> {
@@ -360,6 +364,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("wrote {path}");
     }
     println!("== done ==");
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    // Root resolution: --root wins; else prefer ./rust/src (running
+    // from the repo root), else the manifest-relative source dir
+    // (running via `cargo run` from anywhere inside the workspace).
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd_src = std::path::Path::new("rust/src");
+            if cwd_src.is_dir() {
+                cwd_src.to_path_buf()
+            } else {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+            }
+        }
+    };
+    let report = leaseguard::lint::lint_tree(&root)
+        .map_err(|e| anyhow!("lint walk of {} failed: {e}", root.display()))?;
+    if args.get("json").is_some() {
+        print!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.unwaived_count() > 0 {
+        bail!("{} unwaived lint finding(s)", report.unwaived_count());
+    }
     Ok(())
 }
 

@@ -22,6 +22,8 @@
 //! mid-update is merely slightly stale, never torn in a way that
 //! matters (each field is individually atomic).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 
 use crate::metrics::{self, Histogram};

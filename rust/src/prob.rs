@@ -8,6 +8,8 @@
 //! given a seed — the property the paper "carefully engineered" for
 //! reproducibility (§6).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 /// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush; more than
 /// adequate for workload generation and fault scheduling.
 #[derive(Debug, Clone)]

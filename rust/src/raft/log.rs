@@ -3,6 +3,8 @@
 //! Fig 2 line 5), and lease validity is derived purely from entry
 //! timestamps — no extra messages or data structures.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use crate::clock::TimeInterval;
 use crate::kv::Command;
 

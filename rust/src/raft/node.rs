@@ -7,6 +7,8 @@
 //! touches a socket — which is what makes runs deterministic under the
 //! simulator and the protocol logic identical across both testbeds.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 

@@ -3,6 +3,8 @@
 //! be re-plotted elsewhere. Everything the figure drivers print flows
 //! through here.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;

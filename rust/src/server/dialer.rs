@@ -21,6 +21,8 @@
 //! Invariant: a peer is either in the router's map or pending in the
 //! dialer — never neither — so every down link is eventually redialed.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};

@@ -16,6 +16,8 @@
 //! for a configured one-way delay before writing it, preserving
 //! per-link FIFO order.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::io::{self, BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};

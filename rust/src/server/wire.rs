@@ -332,12 +332,27 @@ impl<'a> Dec<'a> {
         Dec { b, pos: 0 }
     }
     fn take(&mut self, n: usize) -> R<&'a [u8]> {
-        if self.pos + n > self.b.len() {
-            return Err(DecodeError(format!("truncated at {} want {n}", self.pos)));
-        }
-        let s = &self.b[self.pos..self.pos + n];
-        self.pos += n;
+        // get() instead of slice-indexing: every byte here is
+        // attacker-controlled, so even the bounds check must be an
+        // error path, never a panic path (lint rule R4).
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| DecodeError(format!("length overflow at {} want {n}", self.pos)))?;
+        let s = self
+            .b
+            .get(self.pos..end)
+            .ok_or_else(|| DecodeError(format!("truncated at {} want {n}", self.pos)))?;
+        self.pos = end;
         Ok(s)
+    }
+    /// Fixed-size read without panic paths: `try_into` only fails if
+    /// `take` returned the wrong length, which it cannot, but the error
+    /// is still an error — not an unwrap.
+    fn arr<const N: usize>(&mut self) -> R<[u8; N]> {
+        self.take(N)?
+            .try_into()
+            .map_err(|_| DecodeError(format!("bad fixed read of {N} at {}", self.pos)))
     }
     /// Bytes left in the frame body.
     fn remaining(&self) -> usize {
@@ -363,16 +378,17 @@ impl<'a> Dec<'a> {
         Ok(n)
     }
     pub(crate) fn u8(&mut self) -> R<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.arr::<1>()?;
+        Ok(b)
     }
     pub(crate) fn u32(&mut self) -> R<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.arr()?))
     }
     pub(crate) fn u64(&mut self) -> R<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.arr()?))
     }
     pub(crate) fn i64(&mut self) -> R<i64> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(i64::from_le_bytes(self.arr()?))
     }
     fn bytes(&mut self) -> R<Vec<u8>> {
         let n = self.u32()? as usize;
@@ -585,6 +601,7 @@ pub fn decode(b: &[u8]) -> R<Frame> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // tests only — production decode above stays panic-free (lint R4)
 mod tests {
     use super::*;
 
@@ -714,6 +731,67 @@ mod tests {
         b.extend_from_slice(&u32::MAX.to_le_bytes()); // poison count
         let err = decode(&b).unwrap_err();
         assert!(err.0.contains("exceeds remaining"), "{err:?}");
+    }
+
+    #[test]
+    fn every_truncated_prefix_rejected_without_panic() {
+        // Every strict prefix of a valid frame must come back as a
+        // decode ERROR — never a panic, never a silent partial parse.
+        // (A prefix can't decode cleanly: field order is fixed and
+        // counts are explicit, so truncation always lands mid-field.)
+        let frames = [
+            Frame::Raft {
+                from: 0,
+                group: 5,
+                msg: Message::AppendEntries {
+                    term: 4,
+                    leader: 0,
+                    prev_index: 10,
+                    prev_term: 3,
+                    entries: vec![
+                        Entry { term: 4, command: Command::Noop, written_at: TimeInterval::new(5, 9) },
+                        Entry {
+                            term: 4,
+                            command: Command::Put { key: 7, value: 70, payload_bytes: 64 },
+                            written_at: TimeInterval::new(100, 180),
+                        },
+                    ]
+                    .into(),
+                    leader_commit: 10,
+                    seq: 42,
+                },
+            },
+            Frame::ClientReq(ClientReq { op: 10, key: 3, write_value: Some(33), payload: vec![0xCD; 100] }),
+            Frame::ClientResp(ClientResp {
+                op: 9,
+                exec_us: 123,
+                result: OpResult::ReadOk(vec![1, 2, 3].into()),
+            }),
+            Frame::StatusReq { tail: 16 },
+        ];
+        for f in &frames {
+            let enc = encode(f);
+            for cut in 0..enc.len() {
+                assert!(
+                    decode(&enc[..cut]).is_err(),
+                    "prefix of len {cut}/{} decoded cleanly for {f:?}",
+                    enc.len()
+                );
+            }
+        }
+        // Seeded single-byte corruption sweep: a flipped byte may still
+        // decode (it might just change a value) — the invariant is that
+        // decode RETURNS on every input rather than panicking.
+        let mut rng = crate::prob::Rng::new(0xC0FFEE);
+        for f in &frames {
+            let enc = encode(f);
+            for _ in 0..200 {
+                let mut b = enc.clone();
+                let i = rng.below(b.len() as u64) as usize;
+                b[i] ^= 1 << rng.below(8);
+                let _ = decode(&b);
+            }
+        }
     }
 
     #[test]

@@ -20,6 +20,8 @@
 //! status fits in one `u64` bitmask (see
 //! [`crate::obs::Registry::leader_groups`]).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use crate::clock::TimeInterval;
 use crate::raft::{Node, Output};
 

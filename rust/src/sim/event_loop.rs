@@ -11,6 +11,8 @@
 //! for the same virtual instant always execute in the order they were
 //! scheduled — the property that makes runs a pure function of the seed.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 

@@ -15,6 +15,8 @@
 //! `(scenario, mode, seed)` — same inputs, byte-identical history
 //! (guarded by `nemesis_determinism_*` in `rust/tests/integration_sim.rs`).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use crate::cluster::{Cluster, RunReport};
 use crate::config::{ConsistencyMode, Params};
 use crate::linearizability;

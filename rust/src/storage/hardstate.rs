@@ -12,6 +12,8 @@
 //! the log: the atomic rewrite means corruption here implies the write
 //! never reported durable, so no vote built on it was ever sent.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::fs::{self, File};
 use std::io::{self, Write};
 use std::path::Path;

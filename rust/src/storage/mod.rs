@@ -15,6 +15,8 @@
 //! The simulator keeps using the in-memory `DurableState` directly —
 //! virtual time has no disks — so everything here is real-path only.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};

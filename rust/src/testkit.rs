@@ -7,6 +7,8 @@
 //! properties.rs` to explore randomized fault schedules against the
 //! protocol invariants.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use crate::prob::Rng;
 
 /// Configuration for one property run.

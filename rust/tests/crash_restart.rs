@@ -21,6 +21,8 @@
 //! `CRASHTEST_SEED` varies the workload seed (used by
 //! scripts/crashtest.sh to run many distinct schedules).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;

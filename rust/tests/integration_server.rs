@@ -2,6 +2,8 @@
 //! These are slower than the simulator tests, so workloads are modest;
 //! the heavy versions live in the fig9-11 benches.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::time::Duration;
 
 use leaseguard::client::run_open_loop;

@@ -2,6 +2,8 @@
 //! injection, across every consistency mode the paper evaluates, plus
 //! the Nemesis scenario-matrix regression suite.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use leaseguard::cluster::Cluster;
 use leaseguard::config::{ConsistencyMode, Params};
 use leaseguard::linearizability;

@@ -4,6 +4,8 @@
 //! "Always be suspicious of success" (§5.4) — a checker that can't see
 //! injected bugs proves nothing.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use leaseguard::cluster::Cluster;
 use leaseguard::config::{ConsistencyMode, Params};
 use leaseguard::history::{History, OpKind};

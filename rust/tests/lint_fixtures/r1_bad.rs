@@ -1,0 +1,10 @@
+// Lint fixture (never compiled): R1 must flag a wall-clock read in a
+// protocol path. Linted under the logical path `raft/tick.rs`.
+
+pub fn election_deadline_us(timeout_us: i64) -> i64 {
+    let t0 = std::time::Instant::now();
+    let _ = t0;
+    let wall = std::time::SystemTime::now();
+    let _ = wall;
+    timeout_us
+}

@@ -1,0 +1,11 @@
+// Lint fixture (never compiled): the waivered twin of r1_bad.rs —
+// every wall-clock read carries a reasoned waiver, so the file passes.
+
+pub fn election_deadline_us(timeout_us: i64) -> i64 {
+    // lint:allow(R1): fixture demonstrating a documented wall-clock exception
+    let t0 = std::time::Instant::now();
+    let _ = t0;
+    let wall = std::time::SystemTime::now(); // lint:allow(R1): trailing-comment waiver form
+    let _ = wall;
+    timeout_us
+}

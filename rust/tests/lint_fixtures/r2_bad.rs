@@ -1,0 +1,20 @@
+// Lint fixture (never compiled): R2 must flag HashMap/HashSet
+// iteration in a protocol path. Linted under `sim/tally.rs`.
+
+use std::collections::HashMap;
+
+pub struct Tally {
+    counts: HashMap<u32, u64>,
+}
+
+impl Tally {
+    pub fn dump(&self) {
+        for (k, v) in self.counts.iter() {
+            println!("{k} {v}");
+        }
+        let fresh = HashMap::new();
+        for k in fresh {
+            drop(k);
+        }
+    }
+}

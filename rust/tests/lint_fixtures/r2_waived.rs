@@ -1,0 +1,20 @@
+// Lint fixture (never compiled): the waivered twin of r2_bad.rs.
+// (In real code the fix is BTreeMap or collect-and-sort; the waiver
+// form exists for sites where order provably cannot leak.)
+
+use std::collections::HashMap;
+
+pub struct Tally {
+    counts: HashMap<u32, u64>,
+}
+
+impl Tally {
+    pub fn sum(&self) -> u64 {
+        let mut acc = 0;
+        // lint:allow(R2): summation is order-insensitive; nothing ordered escapes
+        for (_k, v) in self.counts.iter() {
+            acc += v;
+        }
+        acc
+    }
+}

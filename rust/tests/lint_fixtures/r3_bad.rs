@@ -1,0 +1,10 @@
+// Lint fixture (never compiled): R3 must flag ambient RNG anywhere in
+// the tree. Linted under `metrics.rs`.
+
+pub fn jitter() -> u64 {
+    let mut rng = thread_rng();
+    let x: u64 = rand::random();
+    let s = std::collections::hash_map::RandomState::new();
+    let _ = (&mut rng, s);
+    x
+}

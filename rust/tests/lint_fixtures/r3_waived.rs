@@ -1,0 +1,8 @@
+// Lint fixture (never compiled): the waivered twin of r3_bad.rs.
+
+pub fn jitter() -> u64 {
+    // lint:allow(R3): fixture-only; real code draws from the seeded prob::Rng
+    let mut rng = thread_rng();
+    let _ = &mut rng;
+    7
+}

@@ -1,0 +1,13 @@
+// Lint fixture (never compiled): R4 must flag panic paths in the
+// untrusted-byte decoder. Linted under `server/wire.rs`.
+
+pub fn decode_header(b: &[u8]) -> (u8, u32) {
+    let magic = b[0];
+    let len = u32::from_le_bytes(b[1..5].try_into().unwrap());
+    if magic != 0xA7 {
+        panic!("bad magic {magic}");
+    }
+    let tail = b.get(5).copied().expect("tail byte");
+    let _ = tail;
+    (magic, len)
+}

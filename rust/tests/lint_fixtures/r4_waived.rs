@@ -1,0 +1,9 @@
+// Lint fixture (never compiled): the waivered twin of r4_bad.rs.
+// (Real wire.rs has zero waivers: decode is fully panic-free. The
+// waiver form exists for hypothetical trusted-prefix fast paths.)
+
+pub fn decode_header(b: &[u8; 8]) -> u8 {
+    // lint:allow(R4): fixed-size array ref, bound checked by the type, fixture only
+    let magic = b[0];
+    magic
+}

@@ -1,0 +1,14 @@
+// Lint fixture (never compiled): R5 must flag a route with no persist
+// since the previous route, and a direct write_frame in main_loop.
+// Linted under `server/server.rs`.
+
+fn main_loop(router: &mut Router, shards: &mut Shards) {
+    loop {
+        let mut pending = collect_outputs(shards);
+        persist_all(shards);
+        router.handle(&mut pending);
+        let mut more = collect_outputs(shards);
+        router.handle(&mut more); // no persist_all since last route
+        write_frame(stream, &bytes); // bypasses the pending buffer
+    }
+}

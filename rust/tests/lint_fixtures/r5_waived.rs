@@ -1,0 +1,13 @@
+// Lint fixture (never compiled): the waivered twin of r5_bad.rs —
+// persist-before-route alternation is clean, and the one direct
+// write_frame carries a reasoned waiver.
+
+fn main_loop(router: &mut Router, shards: &mut Shards) {
+    loop {
+        let mut pending = collect_outputs(shards);
+        persist_all(shards);
+        router.handle(&mut pending);
+        // lint:allow(R5): read-only introspection reply, nothing to persist first
+        write_frame(stream, &bytes);
+    }
+}

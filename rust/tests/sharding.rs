@@ -15,6 +15,8 @@
 //!   and read throughput to recover — the paper's crash drill, per shard.
 //! * Durable multi-group recovery: kill + respawn from per-group WALs.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use std::time::Duration;
 
 use leaseguard::client::run_open_loop;

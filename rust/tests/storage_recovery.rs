@@ -7,6 +7,8 @@
 //! (`rust/src/storage/`); this suite drives the public API and adds a
 //! randomized corruption property via `testkit`.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use leaseguard::clock::TimeInterval;
 use leaseguard::kv::Command;
 use leaseguard::raft::Entry;

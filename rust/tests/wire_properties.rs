@@ -7,6 +7,8 @@
 //! `EntryBatch` and multi-Raft framing refactors could plausibly have
 //! perturbed — plus header tampering (magic / version) on every shape.
 
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
 use leaseguard::clock::TimeInterval;
 use leaseguard::kv::Command;
 use leaseguard::prob::Rng;

@@ -6,14 +6,16 @@
 #
 # Stages:
 #   1. cargo fmt --check        — formatting is not negotiable
-#   2. cargo clippy -D warnings — lints are errors
-#   3. cargo build --release    — lib + bin + tests compile
-#   4. cargo test               — unit + integration suites (includes the
-#                                 multi-Raft sharding suite)
-#   5. 2-group real-cluster smoke — a short bench-cluster run with
+#   2. leaseguard lint          — self-hosted determinism/protocol linter
+#                                 (R1-R5; zero unwaived findings)
+#   3. cargo clippy -D warnings — lints are errors
+#   4. cargo build --release    — lib + bin + tests compile
+#   5. cargo test               — unit + integration suites (includes the
+#                                 multi-Raft sharding suite + lint suite)
+#   6. 2-group real-cluster smoke — a short bench-cluster run with
 #      groups=2 over real loopback TCP: every group must elect, serve,
 #      and pass the per-shard linearizability check.
-#   6. live introspection smoke — three real `serve` processes with
+#   7. live introspection smoke — three real `serve` processes with
 #      groups=2; `leaseguard stat --json` against each must return the
 #      per-group lease-accounting counters, and some server must report
 #      leadership of each group.
@@ -22,6 +24,9 @@ cd "$(dirname "$0")/.."
 
 echo "== fmt =="
 cargo fmt --all -- --check
+
+echo "== lint (self-hosted) =="
+scripts/lint.sh
 
 echo "== clippy =="
 cargo clippy --all-targets --release -- -D warnings

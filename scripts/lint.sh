@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Run the self-hosted determinism/protocol linter over rust/src.
+#
+#   scripts/lint.sh            # human-readable report, exit 1 on unwaived findings
+#   scripts/lint.sh --json     # machine-readable report (same exit semantics)
+#
+# The linter is the `leaseguard lint` subcommand (rust/src/lint/): a
+# dependency-free lexer + rule pass enforcing R1 (no wall-clock outside
+# clock/real.rs, server/, client/), R2 (no HashMap/HashSet iteration in
+# protocol/sim paths), R3 (no ambient RNG), R4 (panic-free wire decode),
+# R5 (persist-before-route in server main_loop). Exceptions are inline
+# `// lint:allow(<rule>): <reason>` waivers. The same pass also runs as
+# a tier-1 test (rust/tests/lint_suite.rs), so CI fails on violations
+# even if this script is skipped.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+exec cargo run --release --quiet -- lint "$@"
