@@ -71,6 +71,7 @@ fn fanout_leader(entries: u64) -> (Node, TimeInterval) {
         heartbeat_us: 75_000,
         lease_renew_fraction: 0.0,
         max_entries_per_append: 1024,
+        snapshot_threshold: 0,
         group: 0,
         recorder_capacity: 0, // bench the hot path without tracing
     };
@@ -343,6 +344,98 @@ pub fn run_suite() -> Vec<BenchResult> {
             rep.events_processed
         });
     }
+
+    // ---- snapshots & recovery ---------------------------------------
+    // The tentpole claim for log compaction: recovery cost tracks the
+    // WAL *suffix*, not history length. Same 10k-entry history both
+    // ways; the snapshot row replays 10x fewer records.
+    {
+        use crate::raft::log::Log;
+        use crate::storage::{FsyncPolicy, Storage};
+
+        let entry_at = |i: u64| Entry {
+            term: 1,
+            command: Command::Put { key: (i % 64) as u32, value: i, payload_bytes: 0 },
+            written_at: TimeInterval::exact(i as i64),
+        };
+        // Dir A: 10k entries, no snapshot — recovery replays everything.
+        let full = crate::testkit::TempDir::new("bench-recover-full");
+        {
+            let (mut s, _) = Storage::open(full.path(), FsyncPolicy::Never).expect("open");
+            for i in 1..=10_000u64 {
+                s.append(i, &entry_at(i)).expect("append");
+            }
+            s.sync().expect("sync");
+        }
+        // Dir B: same history, snapshot at 9000 — recovery replays 1k.
+        let compacted = crate::testkit::TempDir::new("bench-recover-snap");
+        {
+            let (mut s, _) = Storage::open(compacted.path(), FsyncPolicy::Never).expect("open");
+            let mut log = Log::default();
+            let mut store = crate::kv::Store::new();
+            for i in 1..=10_000u64 {
+                let e = entry_at(i);
+                log.append(e);
+                s.append(i, &e).expect("append");
+                if i <= 9_000 {
+                    store.apply(&e.command);
+                }
+            }
+            s.sync().expect("sync");
+            log.compact_to(9_000);
+            let snap = crate::snap::encode(
+                &store,
+                crate::snap::SnapMeta {
+                    group: 0,
+                    last_index: log.base(),
+                    last_term: log.base_term(),
+                    last_written_at: log.base_written_at(),
+                    applied: store.applied(),
+                },
+            );
+            s.install_snapshot(&snap, &log).expect("rotate");
+        }
+        bench(&mut out, "recovery: 10k-entry WAL, no snapshot (full replay)", || {
+            let reps = 20u64;
+            for _ in 0..reps {
+                let (_, ds) = Storage::open(full.path(), FsyncPolicy::Never).expect("recover");
+                assert_eq!(ds.log.last_index(), 10_000);
+                assert_eq!(ds.log.base(), 0);
+            }
+            reps * 10_000
+        });
+        bench(&mut out, "recovery: 10k entries, snapshot@9000 + 1k suffix", || {
+            let reps = 20u64;
+            for _ in 0..reps {
+                let (_, ds) = Storage::open(compacted.path(), FsyncPolicy::Never).expect("recover");
+                assert_eq!(ds.log.last_index(), 10_000);
+                assert_eq!(ds.log.base(), 9_000);
+            }
+            reps * 10_000
+        });
+    }
+
+    bench(&mut out, "snap: encode 10k-key store", || {
+        let mut store = crate::kv::Store::new();
+        for k in 0..10_000u32 {
+            store.apply(&Command::Put { key: k, value: k as u64, payload_bytes: 0 });
+        }
+        let meta = crate::snap::SnapMeta {
+            group: 0,
+            last_index: 10_000,
+            last_term: 1,
+            last_written_at: TimeInterval::exact(10_000),
+            applied: 10_000,
+        };
+        let reps = 100u64;
+        let mut bytes = 0u64;
+        for _ in 0..reps {
+            let snap = crate::snap::encode(&store, meta);
+            bytes += snap.size() as u64;
+        }
+        std::hint::black_box(bytes);
+        reps * 10_000 // keys encoded
+    });
 
     bench(&mut out, "metrics: histogram record+p99", || {
         let mut h = Histogram::new();

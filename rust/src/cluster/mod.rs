@@ -379,7 +379,18 @@ impl Cluster {
             match o {
                 Output::Send { to, msg } => {
                     let epoch = self.net.epoch(to);
-                    match self.net.send(from, to) {
+                    // Snapshot chunks are *sized* deliveries: the chunk
+                    // occupies line time proportional to its bytes, so a
+                    // multi-chunk transfer spans many events and Nemesis
+                    // faults can land mid-transfer. Everything else stays
+                    // payload-agnostic (and RNG-identical to before).
+                    let verdict = match &msg {
+                        Message::SnapInstall { data, .. } => {
+                            self.net.send_sized(from, to, data.len())
+                        }
+                        _ => self.net.send(from, to),
+                    };
+                    match verdict {
                         Delivery::After(d) => {
                             self.queue.schedule(now + d, Event::Deliver { to, group, msg, epoch });
                         }
@@ -811,6 +822,45 @@ mod tests {
         // flowing during the double outage.
         let during = rep.series.window_totals(true, 700_000, 1_000_000);
         assert!(during.ok > 100, "quorum survived the double crash: {during:?}");
+    }
+
+    #[test]
+    fn compaction_armed_but_never_firing_is_byte_identical() {
+        // The determinism guard for the snapshot subsystem: with the
+        // threshold unreachable, maybe_take_snapshot is a compare and a
+        // return — no RNG draws, no trace, no control-flow change — so
+        // the run must replay byte-identically to threshold 0.
+        let off = Cluster::new(base_params(ConsistencyMode::LeaseGuard, 7)).run();
+        let mut p = base_params(ConsistencyMode::LeaseGuard, 7);
+        p.snapshot_threshold = u64::MAX;
+        let armed = Cluster::new(p).run();
+        assert_eq!(off.events_processed, armed.events_processed);
+        assert_eq!(off.t0, armed.t0);
+        assert_eq!(off.history.entries.len(), armed.history.entries.len());
+        for (ea, eb) in off.history.entries.iter().zip(armed.history.entries.iter()) {
+            assert_eq!(format!("{ea:?}"), format!("{eb:?}"));
+        }
+        assert!(armed.node_stats.iter().all(|s| s.snapshots_taken == 0));
+    }
+
+    #[test]
+    fn compaction_with_follower_outage_installs_snapshot_and_stays_linearizable() {
+        // Aggressive compaction + a follower down long enough that the
+        // leader's log base moves past it: catch-up must go through the
+        // chunked InstallSnapshot path, and the history must still
+        // linearize.
+        let mut p = base_params(ConsistencyMode::LeaseGuard, 31);
+        p.duration_us = 3_000_000;
+        p.interarrival_us = 300.0;
+        p.snapshot_threshold = 20;
+        let sched = NemesisSchedule::new()
+            .at(600_000, Fault::CrashFollower { restart_after_us: Some(800_000) });
+        let rep = Cluster::new(p).with_nemesis(sched).run();
+        linearizability::assert_linearizable(&rep.history);
+        let taken: u64 = rep.node_stats.iter().map(|s| s.snapshots_taken).sum();
+        let installed: u64 = rep.node_stats.iter().map(|s| s.snapshots_installed).sum();
+        assert!(taken > 0, "threshold 20 must compact under this write load");
+        assert!(installed > 0, "restarted follower must catch up via InstallSnapshot");
     }
 
     #[test]

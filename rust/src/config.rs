@@ -123,6 +123,12 @@ pub struct Params {
     pub lease_renew_fraction: f64,
     /// Max entries per AppendEntries message.
     pub max_entries_per_append: usize,
+    /// Take a state-machine snapshot and compact the log once
+    /// `commit_index - log.base()` reaches this many entries. 0 disables
+    /// compaction entirely (the default): with it off, every code path
+    /// is byte-identical to the pre-snapshot protocol, which is what the
+    /// fixed-seed determinism guard pins.
+    pub snapshot_threshold: u64,
 
     // ---- clocks ----
     pub clock_error_us: Micros,
@@ -194,6 +200,7 @@ impl Default for Params {
             heartbeat_us: 75_000,
             lease_renew_fraction: 0.5,
             max_entries_per_append: 1024,
+            snapshot_threshold: 0,
             clock_error_us: 50,
             clock_drift: 1e-5,
             clock_broken: false,
@@ -244,6 +251,7 @@ impl Params {
             "heartbeat_us" => self.heartbeat_us = p(key, value)?,
             "lease_renew_fraction" => self.lease_renew_fraction = p(key, value)?,
             "max_entries_per_append" => self.max_entries_per_append = p(key, value)?,
+            "snapshot_threshold" => self.snapshot_threshold = p(key, value)?,
             "clock_error_us" => self.clock_error_us = p(key, value)?,
             "clock_drift" => self.clock_drift = p(key, value)?,
             "clock_broken" => self.clock_broken = p(key, value)?,
@@ -329,6 +337,7 @@ impl Params {
         m.insert("lease_duration_us", self.lease_duration_us.to_string());
         m.insert("heartbeat_us", self.heartbeat_us.to_string());
         m.insert("lease_renew_fraction", self.lease_renew_fraction.to_string());
+        m.insert("snapshot_threshold", self.snapshot_threshold.to_string());
         m.insert("clock_error_us", self.clock_error_us.to_string());
         m.insert("clock_drift", self.clock_drift.to_string());
         m.insert("clock_broken", self.clock_broken.to_string());

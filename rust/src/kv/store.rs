@@ -1,6 +1,6 @@
 //! Append-only-list store + limbo-region read gate (paper §6.1, §7.1).
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::raft::types::Values;
 
@@ -26,7 +26,10 @@ pub enum ReadOutcome {
 /// degenerates to a plain push while no read result holds the list.
 #[derive(Debug, Clone)]
 pub struct Store {
-    data: HashMap<u32, Values>,
+    /// BTreeMap (lint R2 + snapshots): iterated both to feed the
+    /// admission engine and to serialize state-machine snapshots, so
+    /// the order must be deterministic across processes and replays.
+    data: BTreeMap<u32, Values>,
     applied: u64,
     /// Keys written by limbo-region entries (paper §7.1's
     /// `unordered_set<string>`); empty = no limbo restriction.
@@ -41,7 +44,7 @@ pub struct Store {
 impl Default for Store {
     fn default() -> Self {
         Store {
-            data: HashMap::new(),
+            data: BTreeMap::new(),
             applied: 0,
             limbo_keys: BTreeSet::new(),
             empty: Values::default(),
@@ -122,6 +125,22 @@ impl Store {
     pub fn key_count(&self) -> usize {
         self.data.len()
     }
+
+    /// All key → value-list pairs in ascending key order — the
+    /// deterministic walk behind state-machine snapshot encoding.
+    pub fn entries_sorted(&self) -> impl Iterator<Item = (u32, &Values)> {
+        self.data.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Replace the whole state machine from decoded snapshot contents
+    /// (snapshot install / recovery). Volatile lease bookkeeping — the
+    /// limbo region — is deliberately *not* part of a snapshot and is
+    /// cleared: it is re-derived at the next election from the live log.
+    pub fn install(&mut self, data: Vec<(u32, Values)>, applied: u64) {
+        self.data = data.into_iter().collect();
+        self.applied = applied;
+        self.limbo_keys.clear();
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +206,24 @@ mod tests {
         // A read is a pointer clone of the stored list, not a copy.
         let cur = s.read(1);
         assert_eq!(std::sync::Arc::strong_count(&cur), 2);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_via_install() {
+        let mut s = Store::new();
+        s.apply(&put(3, 30));
+        s.apply(&put(1, 10));
+        s.apply(&put(1, 11));
+        s.set_limbo_region([put(1, 0)].iter());
+        let pairs: Vec<(u32, Values)> =
+            s.entries_sorted().map(|(k, v)| (k, v.clone())).collect();
+        assert_eq!(pairs.iter().map(|(k, _)| *k).collect::<Vec<_>>(), vec![1, 3]);
+        let mut t = Store::new();
+        t.install(pairs, s.applied());
+        assert_eq!(*t.read(1), vec![10, 11]);
+        assert_eq!(*t.read(3), vec![30]);
+        assert_eq!(t.applied(), 3);
+        assert!(!t.has_limbo_region(), "limbo is volatile, never installed");
     }
 
     #[test]

@@ -38,6 +38,7 @@
 //! | [`runtime`] | PJRT artifact loading + batched read admission |
 //! | [`server`], [`client`] | real-mode TCP cluster + open-loop client (§7) |
 //! | [`shard`] | multi-Raft sharding: ShardMap keyspace partition + per-group routing |
+//! | [`snap`] | state-machine snapshots + log compaction (bounded storage, fast catch-up) |
 //! | [`storage`] | real-mode WAL + hard-state durability (crash recovery) |
 //! | [`cluster`] | in-process simulated replica set harness |
 //! | [`figures`] | one driver per paper figure (Figs 5-11) |
@@ -66,6 +67,7 @@ pub mod server;
 pub mod client;
 pub mod shard;
 pub mod sim;
+pub mod snap;
 pub mod storage;
 pub mod testkit;
 pub mod workload;

@@ -18,7 +18,8 @@
 //!   `RandomState`) anywhere — all randomness flows from seeded
 //!   `prob.rs` generators.
 //! - **R4** panic paths (`unwrap()` / `expect()` / `panic!` /
-//!   slice-indexing) in the untrusted-input decoder `server/wire.rs`.
+//!   slice-indexing) in the untrusted-input decoders `server/wire.rs`
+//!   and `snap/mod.rs` (snapshot bytes arrive over the wire too).
 //! - **R5** routing discipline in `server/server.rs::main_loop`: every
 //!   `router.handle(..)` must be preceded by a `persist_all` since the
 //!   previous route (persist-before-route), and no direct
@@ -83,7 +84,7 @@ pub fn lint_source(relpath: &str, src: &str) -> Vec<Finding> {
         r2_hash_iteration(relpath, &code, &mut findings);
     }
     r3_ambient_rng(relpath, &code, &mut findings);
-    if relpath == "server/wire.rs" {
+    if relpath == "server/wire.rs" || relpath == "snap/mod.rs" {
         r4_panic_paths(relpath, &code, &mut findings);
     }
     if relpath == "server/server.rs" {
@@ -633,6 +634,9 @@ mod tests {
         let f = unwaived("server/wire.rs", src);
         let rules: Vec<&str> = f.iter().map(|x| x.rule).collect();
         assert_eq!(rules, vec!["R4", "R4", "R4", "R4"], "{f:?}");
+        // The snapshot codec decodes wire bytes too: same scope.
+        let f = unwaived("snap/mod.rs", src);
+        assert_eq!(f.iter().filter(|x| x.rule == "R4").count(), 4, "{f:?}");
         // Same code in another file: not R4's business.
         assert!(unwaived("raft/log.rs", src).is_empty());
         // unwrap_or / vec![ / #[attr] are not flagged.

@@ -67,6 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("serve") => cmd_serve(args, params),
         Some("stat") => cmd_stat(args),
+        Some("client") => cmd_client(args, params),
         Some("bench-cluster") => cmd_bench_cluster(args, params),
         Some("bench") => cmd_bench(args),
         Some("check") => cmd_check(&params),
@@ -95,10 +96,13 @@ const USAGE: &str = "usage: leaseguard <sim|scenarios|figure|serve|stat|bench|be
   figure <5..11>          regenerate a paper figure (--scale F, --out DIR;
                           figure 11 also takes --groups G for the multi-Raft axis)
   serve                   one real server (--node I --listen ADDR --peers A,B,C
-                          --data-dir PATH for crash durability, --fsync always|group|never)
+                          --data-dir PATH for crash durability, --fsync always|group|never,
+                          --snapshot-threshold N to compact the log every N committed entries)
   stat                    live introspection of a running server (--addr HOST:PORT;
                           --json for machine-readable output, --tail N flight-recorder
                           events per group, default 32)
+  client                  open-loop workload against an already-running external cluster
+                          (--peers A,B,C; shape it with --param duration_us/interarrival_us)
   bench                   hot-path microbenches (--json [PATH] writes BENCH_micro.json)
   bench-cluster           in-process 3-node TCP cluster + open-loop client
   check                   load AOT artifacts, cross-check engine vs scalar oracle
@@ -215,7 +219,12 @@ fn cmd_scenarios(args: &Args, params: Params) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args, params: Params) -> Result<()> {
+fn cmd_serve(args: &Args, mut params: Params) -> Result<()> {
+    // `--snapshot-threshold N` (sugar for `--param snapshot_threshold=N`):
+    // snapshot + compact the log every N committed entries; 0 = never.
+    if let Some(t) = args.get_parse::<u64>("snapshot-threshold").map_err(|e| anyhow!(e))? {
+        params.snapshot_threshold = t;
+    }
     let id: usize = args
         .get_parse("node")
         .map_err(|e| anyhow!(e))?
@@ -259,6 +268,28 @@ fn cmd_serve(args: &Args, params: Params) -> Result<()> {
     }
 }
 
+/// Drive the open-loop workload against servers this process does NOT
+/// own (`serve` instances on other PIDs) — the shell-level smoke's load
+/// generator. No in-process apply log, so no linearizability verdict
+/// here; the smoke asserts recovery via `stat` instead.
+fn cmd_client(args: &Args, params: Params) -> Result<()> {
+    let addrs: Vec<String> = args
+        .get("peers")
+        .ok_or_else(|| anyhow!("--peers A,B,C required"))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let rep = leaseguard::client::run_open_loop(&addrs, &params, None)?;
+    println!(
+        "sent={} completed={} read p90={} write p90={}",
+        rep.sent,
+        rep.completed,
+        fmt_us(rep.read_latency.p90()),
+        fmt_us(rep.write_latency.p90())
+    );
+    Ok(())
+}
+
 fn cmd_stat(args: &Args) -> Result<()> {
     let addr = args.get("addr").ok_or_else(|| anyhow!("--addr HOST:PORT required"))?;
     let tail: u32 = args.get_parse("tail").map_err(|e| anyhow!(e))?.unwrap_or(32);
@@ -293,6 +324,10 @@ fn cmd_stat(args: &Args) -> Result<()> {
         println!(
             "  writes: accepted={} blocked_transfer={} rejected_gate={}  elections_won={}",
             g.writes_accepted, g.writes_blocked_transfer, g.writes_rejected_gate, g.elections_won
+        );
+        println!(
+            "  snaps:  taken={} installed={} rejected={} last_snapshot_index={}",
+            g.snapshots_taken, g.snapshots_installed, g.snapshots_rejected, g.last_snapshot_index
         );
         for (name, st) in leaseguard::obs::registry::STAGE_NAMES.iter().zip(g.stages.iter()) {
             if st.count > 0 {

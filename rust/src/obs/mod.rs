@@ -68,6 +68,11 @@ pub struct GroupSnapshot {
     pub writes_blocked_transfer: u64,
     pub writes_rejected_gate: u64,
     pub elections_won: u64,
+    pub snapshots_taken: u64,
+    pub snapshots_installed: u64,
+    pub snapshots_rejected: u64,
+    /// Boundary index of the newest local snapshot (0 = none yet).
+    pub last_snapshot_index: u64,
     /// Indexed by `registry::STAGE_*`; names in `registry::STAGE_NAMES`.
     pub stages: [StageSummary; 6],
     /// Most recent flight-recorder events, oldest → newest.
@@ -110,6 +115,10 @@ impl Registry {
             writes_blocked_transfer: m.writes_blocked_transfer.get(),
             writes_rejected_gate: m.writes_rejected_gate.get(),
             elections_won: m.elections_won.get(),
+            snapshots_taken: m.snapshots_taken.get(),
+            snapshots_installed: m.snapshots_installed.get(),
+            snapshots_rejected: m.snapshots_rejected.get(),
+            last_snapshot_index: m.last_snapshot_index.get().max(0) as u64,
             stages,
             events: Vec::new(),
         }
@@ -153,6 +162,10 @@ impl StatusSnapshot {
             s.push_str(&format!("\"writes_blocked_transfer\": {}, ", g.writes_blocked_transfer));
             s.push_str(&format!("\"writes_rejected_gate\": {}, ", g.writes_rejected_gate));
             s.push_str(&format!("\"elections_won\": {},\n     ", g.elections_won));
+            s.push_str(&format!("\"snapshots_taken\": {}, ", g.snapshots_taken));
+            s.push_str(&format!("\"snapshots_installed\": {}, ", g.snapshots_installed));
+            s.push_str(&format!("\"snapshots_rejected\": {}, ", g.snapshots_rejected));
+            s.push_str(&format!("\"last_snapshot_index\": {},\n     ", g.last_snapshot_index));
             s.push_str("\"stages\": {");
             for (j, (name, st)) in registry::STAGE_NAMES.iter().zip(g.stages.iter()).enumerate() {
                 if j > 0 {
@@ -202,9 +215,13 @@ mod tests {
         r.group(0).writes_accepted.add(7);
         r.group(1).stages[registry::STAGE_QUEUE].record(150);
         r.group(1).stages[registry::STAGE_REPLY].record(80);
+        r.group(0).snapshots_taken.add(2);
+        r.group(0).last_snapshot_index.set(42);
         r.wal_barriers.add(5);
         let snap = r.snapshot();
         assert_eq!(snap.groups.len(), 2);
+        assert_eq!(snap.groups[0].snapshots_taken, 2);
+        assert_eq!(snap.groups[0].last_snapshot_index, 42);
         assert_eq!(snap.groups[1].reads_lease_inherited, 42);
         assert_eq!(snap.groups[1].reads_rejected_limbo, 3);
         assert_eq!(snap.groups[0].writes_accepted, 7);
@@ -233,6 +250,10 @@ mod tests {
             "\"reads_deferred\"",
             "\"reads_rejected_no_lease\"",
             "\"writes_blocked_transfer\"",
+            "\"snapshots_taken\"",
+            "\"snapshots_installed\"",
+            "\"snapshots_rejected\"",
+            "\"last_snapshot_index\"",
             "\"stages\"",
             "\"queue\"",
             "\"persist\"",

@@ -65,6 +65,15 @@ pub enum EventKind {
     WalBarrier = 15,
     /// Commit index advanced. a = new commit index.
     CommitAdvance = 16,
+    /// Node snapshotted its own state machine and compacted the log.
+    /// a = snapshot boundary (last included index), b = entries dropped.
+    SnapshotTaken = 17,
+    /// Follower installed a leader's snapshot. a = boundary index,
+    /// b = snapshot bytes.
+    SnapshotInstalled = 18,
+    /// Snapshot install rejected (corrupt payload, wrong group, or
+    /// boundary below commit). a = boundary index, b = offset reached.
+    SnapshotRejected = 19,
 }
 
 impl EventKind {
@@ -87,6 +96,9 @@ impl EventKind {
             EventKind::AppendFanout => "append_fanout",
             EventKind::WalBarrier => "wal_barrier",
             EventKind::CommitAdvance => "commit_advance",
+            EventKind::SnapshotTaken => "snapshot_taken",
+            EventKind::SnapshotInstalled => "snapshot_installed",
+            EventKind::SnapshotRejected => "snapshot_rejected",
         }
     }
 
@@ -111,6 +123,9 @@ impl EventKind {
             14 => EventKind::AppendFanout,
             15 => EventKind::WalBarrier,
             16 => EventKind::CommitAdvance,
+            17 => EventKind::SnapshotTaken,
+            18 => EventKind::SnapshotInstalled,
+            19 => EventKind::SnapshotRejected,
             _ => return None,
         })
     }
@@ -342,7 +357,7 @@ mod tests {
                 assert_eq!(k as u8, raw);
                 assert!(!k.name().is_empty());
             } else {
-                assert!(raw > 16, "kind {raw} should decode");
+                assert!(raw > 19, "kind {raw} should decode");
             }
         }
     }

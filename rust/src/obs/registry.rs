@@ -184,6 +184,17 @@ pub struct GroupMetrics {
     /// Elections won by this node for this group.
     pub elections_won: Counter,
 
+    // -- snapshots & log compaction --
+    /// Snapshots this node took of its own state machine.
+    pub snapshots_taken: Counter,
+    /// Snapshots installed from a leader's chunked transfer.
+    pub snapshots_installed: Counter,
+    /// Snapshot installs rejected (corrupt payload, boundary mismatch).
+    pub snapshots_rejected: Counter,
+    /// Log index the newest local snapshot covers (the log's base);
+    /// 0 until the first snapshot exists.
+    pub last_snapshot_index: Gauge,
+
     /// Per-stage op latency: queue → persist → replicate → commit →
     /// apply → reply, indexed by the `STAGE_*` constants.
     pub stages: [ConcurrentHistogram; 6],

@@ -2,6 +2,16 @@
 //! entry carries the leader's `intervalNow()` at creation (paper §3,
 //! Fig 2 line 5), and lease validity is derived purely from entry
 //! timestamps — no extra messages or data structures.
+//!
+//! Snapshots & compaction: the log may be *compacted* up to a snapshot
+//! point. Everything at or below `base` lives only in the snapshot; the
+//! in-memory (and on-disk WAL-segment) suffix starts at `base + 1`. The
+//! boundary keeps `(base, base_term, base_written_at)` so consistency
+//! checks and the LeaseGuard commit-gate arithmetic still work at the
+//! seam: `base_written_at.latest` is folded over the *entire* compacted
+//! prefix (not just the boundary entry), so a deposed leader's lease
+//! deadline derived from it is never early even under cross-term clock
+//! skew among compacted entries.
 
 #![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
 
@@ -21,20 +31,45 @@ pub struct Entry {
     pub written_at: TimeInterval,
 }
 
-/// 1-based append-only log with the usual Raft truncation-on-conflict.
+/// 1-based append-only log with the usual Raft truncation-on-conflict,
+/// plus a compaction watermark (`base`).
 ///
 /// The log additionally tracks which suffix has changed since the last
 /// [`Log::take_dirty`] — the real-mode server drains this watermark into
 /// the WAL before externalizing any message that depends on the entries
 /// (Raft's persist-before-send rule). The simulator never drains it;
 /// virtual time has no disks, and an unread watermark costs nothing.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Log {
+    /// `entries[i]` holds index `base + 1 + i`.
     entries: Vec<Entry>,
+    /// Compaction watermark: highest index covered by the snapshot
+    /// (0 = never compacted; the log starts at index 1 as always).
+    base: Index,
+    /// Term of the entry at `base` (0 when `base == 0` — the empty
+    /// prefix matches anything, as in vanilla Raft).
+    base_term: Term,
+    /// `written_at` folded over the whole compacted prefix: `latest` is
+    /// the max over every compacted entry, so lease-deadline math that
+    /// can no longer scan those entries stays conservative-safe.
+    base_written_at: TimeInterval,
     /// Lowest index appended since the last `take_dirty` (1-based).
     dirty_from: Option<Index>,
     /// Whether a truncation happened since the last `take_dirty`.
     truncated: bool,
+}
+
+impl Default for Log {
+    fn default() -> Self {
+        Log {
+            entries: Vec::new(),
+            base: 0,
+            base_term: 0,
+            base_written_at: TimeInterval::exact(0),
+            dirty_from: None,
+            truncated: false,
+        }
+    }
 }
 
 impl Log {
@@ -42,32 +77,64 @@ impl Log {
         Log::default()
     }
 
-    /// Index of the last entry (0 if empty).
+    /// A log whose prefix up to `(base, base_term)` lives in a snapshot.
+    pub fn with_base(base: Index, base_term: Term, base_written_at: TimeInterval) -> Self {
+        Log { base, base_term, base_written_at, ..Log::default() }
+    }
+
+    /// Compaction watermark: highest index covered by the snapshot.
+    #[inline]
+    pub fn base(&self) -> Index {
+        self.base
+    }
+
+    /// Term at the compaction watermark.
+    #[inline]
+    pub fn base_term(&self) -> Term {
+        self.base_term
+    }
+
+    /// Folded `written_at` of the compacted prefix (see type docs).
+    #[inline]
+    pub fn base_written_at(&self) -> TimeInterval {
+        self.base_written_at
+    }
+
+    /// Index of the first entry still held in memory (`base + 1`).
+    #[inline]
+    pub fn first_index(&self) -> Index {
+        self.base + 1
+    }
+
+    /// Index of the last entry (`base` if the suffix is empty; 0 for a
+    /// fresh, never-compacted log).
     #[inline]
     pub fn last_index(&self) -> Index {
-        self.entries.len() as Index
+        self.base + self.entries.len() as Index
     }
 
-    /// Term of the last entry (0 if empty).
+    /// Term of the last entry (`base_term` if the suffix is empty).
     #[inline]
     pub fn last_term(&self) -> Term {
-        self.entries.last().map(|e| e.term).unwrap_or(0)
+        self.entries.last().map(|e| e.term).unwrap_or(self.base_term)
     }
 
-    /// Entry at 1-based `index`.
+    /// Entry at 1-based `index`; `None` at or below the compaction
+    /// watermark (those entries live only in the snapshot).
     #[inline]
     pub fn get(&self, index: Index) -> Option<&Entry> {
-        if index == 0 {
+        if index <= self.base {
             return None;
         }
-        self.entries.get(index as usize - 1)
+        self.entries.get((index - self.base - 1) as usize)
     }
 
-    /// Term at `index`; 0 for index 0 (the empty prefix matches anything).
+    /// Term at `index`: `base_term` at the watermark itself (0 for a
+    /// fresh log's empty prefix), `None` below it (compacted away).
     #[inline]
     pub fn term_at(&self, index: Index) -> Option<Term> {
-        if index == 0 {
-            return Some(0);
+        if index == self.base {
+            return Some(self.base_term);
         }
         self.get(index).map(|e| e.term)
     }
@@ -81,13 +148,66 @@ impl Log {
     }
 
     /// Truncate the log so `last_index() == index` (drop entries after
-    /// `index`). Used when a follower detects a conflict.
+    /// `index`). Used when a follower detects a conflict. Clamped to the
+    /// compaction watermark: the snapshot prefix is committed state and
+    /// can never conflict.
     pub fn truncate_after(&mut self, index: Index) {
-        if (index as usize) < self.entries.len() {
+        let index = index.max(self.base);
+        if index < self.last_index() {
             self.truncated = true;
             self.dirty_from = Some(self.dirty_from.map_or(index + 1, |d| d.min(index + 1)));
         }
-        self.entries.truncate(index as usize);
+        self.entries.truncate((index - self.base) as usize);
+    }
+
+    /// Compact the in-memory prefix up to `index` (inclusive): the
+    /// caller has captured everything `..= index` in a snapshot. Folds
+    /// the dropped entries' `written_at.latest` into the boundary
+    /// interval and discards the dirty watermark below the new base
+    /// (the storage layer rewrites the surviving suffix wholesale when
+    /// it rotates to a fresh WAL segment).
+    pub fn compact_to(&mut self, index: Index) {
+        if index <= self.base || index > self.last_index() {
+            return;
+        }
+        let drop = (index - self.base) as usize;
+        let boundary = self.entries[drop - 1];
+        let mut latest = self.base_written_at.latest;
+        for e in &self.entries[..drop] {
+            latest = latest.max(e.written_at.latest);
+        }
+        self.entries.drain(..drop);
+        self.base = index;
+        self.base_term = boundary.term;
+        self.base_written_at =
+            TimeInterval { earliest: boundary.written_at.earliest, latest };
+        self.dirty_from = None;
+        self.truncated = false;
+    }
+
+    /// Install a snapshot boundary received over the wire. If the local
+    /// log already holds the boundary entry with a matching term, the
+    /// suffix past it is retained (vanilla Raft's InstallSnapshot rule);
+    /// otherwise the whole log is replaced by the snapshot point.
+    pub fn install_snapshot_meta(
+        &mut self,
+        index: Index,
+        term: Term,
+        written_at: TimeInterval,
+    ) {
+        if self.term_at(index) == Some(term) {
+            self.compact_to(index);
+            // Fold the sender's boundary interval too: it covers the
+            // whole snapshotted prefix from the leader's perspective.
+            self.base_written_at.latest = self.base_written_at.latest.max(written_at.latest);
+            return;
+        }
+        self.entries.clear();
+        self.base = index;
+        self.base_term = term;
+        self.base_written_at = written_at;
+        self.dirty_from = None;
+        self.truncated = false;
     }
 
     /// Drain the unpersisted-change watermark: `(first dirty index,
@@ -105,26 +225,31 @@ impl Log {
         }
     }
 
-    /// Entries in `(from, to]`, for AppendEntries construction.
+    /// Entries in `(from, to]`, for AppendEntries construction. The
+    /// range is clamped to what is still in memory: entries at or below
+    /// the compaction watermark are never returned (callers that need
+    /// them send a snapshot instead).
     pub fn slice(&self, from_exclusive: Index, to_inclusive: Index) -> &[Entry] {
-        let lo = from_exclusive as usize;
-        let hi = (to_inclusive as usize).min(self.entries.len());
+        let lo = (from_exclusive.max(self.base) - self.base) as usize;
+        let hi = ((to_inclusive.max(self.base) - self.base) as usize).min(self.entries.len());
         if lo >= hi {
             return &[];
         }
         &self.entries[lo..hi]
     }
 
-    /// Iterate entries in `(from, to]` with their 1-based indexes.
+    /// Iterate entries in `(from, to]` with their 1-based indexes
+    /// (clamped to the in-memory suffix, like [`Log::slice`]).
     pub fn iter_range(
         &self,
         from_exclusive: Index,
         to_inclusive: Index,
     ) -> impl Iterator<Item = (Index, &Entry)> {
-        self.slice(from_exclusive, to_inclusive)
+        let from = from_exclusive.max(self.base);
+        self.slice(from, to_inclusive)
             .iter()
             .enumerate()
-            .map(move |(i, e)| (from_exclusive + 1 + i as Index, e))
+            .map(move |(i, e)| (from + 1 + i as Index, e))
     }
 
     /// Raft §5.4.1 up-to-date check: is a candidate with (last_term,
@@ -137,10 +262,17 @@ impl Log {
     /// deposed leader's lease deadline basis. The paper caches
     /// `lastEntryInPreviousTermIndex` (§7.1); we additionally take the
     /// max timestamp to stay correct even if clocks skew across terms.
-    /// O(suffix): scans back only past entries with term >= t.
+    /// O(suffix): scans back only past entries with term >= t. When the
+    /// newest prior-term entry has been compacted away, the folded
+    /// boundary interval answers for the whole snapshot prefix
+    /// (conservative: never earlier than the true deadline).
     pub fn max_prior_term_latest(&self, t: Term) -> Option<crate::Micros> {
-        // Find the newest entry with term < t...
-        let idx = self.entries.iter().rposition(|e| e.term < t)?;
+        let from_base = (self.base > 0 && self.base_term < t)
+            .then_some(self.base_written_at.latest);
+        let idx = match self.entries.iter().rposition(|e| e.term < t) {
+            Some(i) => i,
+            None => return from_base,
+        };
         let mut best = self.entries[idx].written_at.latest;
         // ...then widen over a bounded lookback window: timestamps are
         // near-monotone within a log, so the newest prior-term entry
@@ -152,16 +284,25 @@ impl Log {
                 best = best.max(p.written_at.latest);
             }
         }
+        if lo == 0 {
+            if let Some(b) = from_base {
+                best = best.max(b);
+            }
+        }
         Some(best)
     }
 
-    /// The newest entry with term < `t` (the deposed leader's final
-    /// act — used to detect a §5.1 end-lease relinquishment).
+    /// The newest *in-memory* entry with term < `t` (the deposed
+    /// leader's final act — used to detect a §5.1 end-lease
+    /// relinquishment). A compacted relinquishment entry returns `None`:
+    /// the gate then falls back to the timed wait, which is safe (a
+    /// snapshot point is committed state, so the wait is bounded).
     pub fn last_prior_term_entry(&self, t: Term) -> Option<&Entry> {
         let idx = self.entries.iter().rposition(|e| e.term < t)?;
         Some(&self.entries[idx])
     }
 
+    /// In-memory suffix length (entries past the compaction watermark).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -276,5 +417,122 @@ mod tests {
         l.append(e(1, 200));
         l.append(e(2, 600));
         assert_eq!(l.max_prior_term_latest(2), Some(500));
+    }
+
+    #[test]
+    fn compaction_moves_the_base_and_keeps_the_suffix() {
+        let mut l = Log::new();
+        for i in 1..=5 {
+            l.append(e(1, i * 10));
+        }
+        l.compact_to(3);
+        assert_eq!(l.base(), 3);
+        assert_eq!(l.base_term(), 1);
+        assert_eq!(l.first_index(), 4);
+        assert_eq!(l.last_index(), 5);
+        assert_eq!(l.len(), 2);
+        // Compacted entries are gone; the watermark itself answers term
+        // queries; below it is unknown.
+        assert_eq!(l.get(3), None);
+        assert_eq!(l.term_at(3), Some(1));
+        assert_eq!(l.term_at(2), None);
+        assert_eq!(l.get(4).unwrap().written_at.latest, 40);
+        // Appends continue from the tip.
+        assert_eq!(l.append(e(2, 60)), 6);
+        assert_eq!(l.last_term(), 2);
+        // Out-of-range compactions are no-ops.
+        l.compact_to(2);
+        assert_eq!(l.base(), 3);
+        l.compact_to(99);
+        assert_eq!(l.base(), 3);
+    }
+
+    #[test]
+    fn compaction_folds_written_at_over_the_prefix() {
+        // A compacted entry with a later timestamp than the boundary
+        // entry (cross-term skew) must still dominate the folded bound.
+        let mut l = Log::new();
+        l.append(e(1, 900)); // skewed late
+        l.append(e(1, 200));
+        l.compact_to(2);
+        assert_eq!(l.base_written_at().latest, 900);
+        // Gate arithmetic sees the folded bound for prior-term queries.
+        assert_eq!(l.max_prior_term_latest(2), Some(900));
+        // An in-memory prior-term entry still folds the base in.
+        l.append(e(2, 300));
+        assert_eq!(l.max_prior_term_latest(3), Some(900));
+    }
+
+    #[test]
+    fn truncate_never_crosses_the_base() {
+        let mut l = Log::new();
+        for i in 1..=4 {
+            l.append(e(1, i));
+        }
+        l.compact_to(3);
+        l.truncate_after(1); // clamped to base = 3
+        assert_eq!(l.last_index(), 3);
+        assert_eq!(l.base(), 3);
+        assert_eq!(l.last_term(), 1);
+    }
+
+    #[test]
+    fn install_meta_keeps_matching_suffix_or_resets() {
+        // Matching boundary: suffix retained.
+        let mut l = Log::new();
+        for i in 1..=4 {
+            l.append(e(1, i * 10));
+        }
+        l.install_snapshot_meta(2, 1, TimeInterval::exact(25));
+        assert_eq!(l.base(), 2);
+        assert_eq!(l.last_index(), 4);
+        assert!(l.base_written_at().latest >= 25);
+        // Conflicting boundary term: log replaced wholesale.
+        let mut l = Log::new();
+        for i in 1..=4 {
+            l.append(e(1, i * 10));
+        }
+        l.install_snapshot_meta(3, 2, TimeInterval::exact(99));
+        assert_eq!(l.base(), 3);
+        assert_eq!(l.base_term(), 2);
+        assert_eq!(l.last_index(), 3);
+        assert!(l.is_empty());
+        assert_eq!(l.base_written_at().latest, 99);
+        // Boundary beyond the log: replace too.
+        let mut l = Log::new();
+        l.append(e(1, 10));
+        l.install_snapshot_meta(7, 3, TimeInterval::exact(70));
+        assert_eq!(l.base(), 7);
+        assert_eq!(l.last_index(), 7);
+        assert_eq!(l.last_term(), 3);
+    }
+
+    #[test]
+    fn slices_clamp_to_the_compacted_suffix() {
+        let mut l = Log::new();
+        for i in 1..=6 {
+            l.append(e(1, i * 10));
+        }
+        l.compact_to(3);
+        // (0, 6] clamps to (3, 6].
+        assert_eq!(l.slice(0, 6).len(), 3);
+        let idx: Vec<Index> = l.iter_range(0, 6).map(|(i, _)| i).collect();
+        assert_eq!(idx, vec![4, 5, 6]);
+        assert_eq!(l.slice(4, 6).len(), 2);
+    }
+
+    #[test]
+    fn compaction_discards_the_dirty_watermark_below_base() {
+        // Storage rotates to a fresh segment at compaction time and
+        // rewrites the suffix wholesale, so the pre-compaction dirty
+        // range must not leak through take_dirty.
+        let mut l = Log::new();
+        for i in 1..=5 {
+            l.append(e(1, i));
+        }
+        l.compact_to(4);
+        assert_eq!(l.take_dirty(), None);
+        l.append(e(2, 9));
+        assert_eq!(l.take_dirty(), Some((6, false)));
     }
 }

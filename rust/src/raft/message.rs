@@ -1,10 +1,16 @@
-//! Raft RPCs. LeaseGuard adds **no messages and no fields** beyond
-//! vanilla Raft (paper §3: "no changes to Raft messages, no additional
-//! messages") — the only addition anywhere is the timestamp inside each
-//! log entry. `seq` on AppendEntries is a round identifier LogCabin-style
+//! Raft RPCs. Every message here is vanilla Raft: LeaseGuard adds **no
+//! messages and no fields** (paper §3: "no changes to Raft messages, no
+//! additional messages") — the only lease-related addition anywhere is
+//! the timestamp inside each log entry. `seq` on AppendEntries is a
+//! round identifier LogCabin-style
 //! implementations already need for quorum reads (ReadIndex) and that the
 //! Ongaro-lease comparator uses to match acks to send times; it does not
 //! carry lease information.
+//!
+//! `SnapInstall`/`SnapAck` are vanilla Raft too: the InstallSnapshot RPC
+//! from the Raft paper (§7), chunked for flow control. They carry
+//! state-machine bytes and the compaction boundary — never lease state,
+//! which is volatile by construction (see [`crate::snap`]).
 
 use super::batch::EntryBatch;
 use super::types::{Index, Term};
@@ -46,6 +52,42 @@ pub enum Message {
         /// Echo of the AppendEntries round id.
         seq: u64,
     },
+    /// One chunk of a snapshot transfer (Raft §7 InstallSnapshot),
+    /// sent when a follower's `next_index` has fallen below the
+    /// leader's compaction point. Stop-and-wait: one chunk in flight
+    /// per peer, the next sent on the matching [`Message::SnapAck`].
+    SnapInstall {
+        term: Term,
+        leader: NodeId,
+        /// Snapshot boundary: the transfer's identity. A follower
+        /// buffering chunks for one boundary discards them if the next
+        /// chunk names a different one (the leader re-compacted).
+        last_index: Index,
+        last_term: Term,
+        /// Byte offset of `data` within the snapshot payload.
+        offset: u64,
+        /// At most [`crate::snap::SNAP_CHUNK_BYTES`] payload bytes.
+        data: Vec<u8>,
+        /// True on the final chunk: the follower decodes and installs.
+        done: bool,
+        /// Round id, same numbering as AppendEntries `seq`.
+        seq: u64,
+    },
+    /// Follower progress/result report for a snapshot transfer.
+    SnapAck {
+        term: Term,
+        from: NodeId,
+        /// Echo of the transfer's snapshot boundary.
+        last_index: Index,
+        /// Bytes buffered so far (the next offset the follower wants);
+        /// 0 asks the leader to restart the transfer.
+        offset: u64,
+        /// True once the snapshot is decoded and installed (or the
+        /// follower already has everything through `last_index`).
+        installed: bool,
+        /// Echo of the SnapInstall round id.
+        seq: u64,
+    },
 }
 
 impl Message {
@@ -55,7 +97,9 @@ impl Message {
             Message::RequestVote { term, .. }
             | Message::VoteReply { term, .. }
             | Message::AppendEntries { term, .. }
-            | Message::AppendReply { term, .. } => *term,
+            | Message::AppendReply { term, .. }
+            | Message::SnapInstall { term, .. }
+            | Message::SnapAck { term, .. } => *term,
         }
     }
 
@@ -66,6 +110,8 @@ impl Message {
             Message::VoteReply { .. } => "VoteReply",
             Message::AppendEntries { .. } => "AppendEntries",
             Message::AppendReply { .. } => "AppendReply",
+            Message::SnapInstall { .. } => "SnapInstall",
+            Message::SnapAck { .. } => "SnapAck",
         }
     }
 }

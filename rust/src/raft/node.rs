@@ -19,6 +19,7 @@ use crate::lease::{LeaseGuardState, OngaroState, ReadGate};
 use crate::obs::{EventKind, FlightRecorder};
 use crate::prob::Rng;
 use crate::shard::GroupId;
+use crate::snap::{self, SnapContents, SnapMeta, Snapshot, MAX_SNAPSHOT_BYTES, SNAP_CHUNK_BYTES};
 use crate::{Micros, NodeId};
 
 use super::batch::EntryBatch;
@@ -43,6 +44,10 @@ pub struct NodeConfig {
     pub group: GroupId,
     /// Flight-recorder ring capacity (0 = tracing disabled).
     pub recorder_capacity: usize,
+    /// Take a state-machine snapshot and compact the log once this many
+    /// applied entries have accumulated above the compaction base.
+    /// 0 = compaction disabled (the log grows without bound).
+    pub snapshot_threshold: u64,
 }
 
 impl NodeConfig {
@@ -59,6 +64,7 @@ impl NodeConfig {
             max_entries_per_append: p.max_entries_per_append,
             group: 0,
             recorder_capacity: if p.flight_recorder { p.flight_recorder_capacity } else { 0 },
+            snapshot_threshold: p.snapshot_threshold,
         }
     }
 
@@ -122,6 +128,16 @@ struct BatchCache {
     arc: Arc<[Entry]>,
 }
 
+/// Follower-side reassembly buffer for an in-progress snapshot
+/// transfer. Volatile: a crash mid-transfer simply restarts it.
+#[derive(Debug)]
+struct SnapRecv {
+    /// Transfer identity — the sender's snapshot boundary.
+    last_index: Index,
+    last_term: Term,
+    buf: Vec<u8>,
+}
+
 /// Per-run protocol counters (merged into figure outputs).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NodeStats {
@@ -141,6 +157,12 @@ pub struct NodeStats {
     pub writes_rejected_gate: u64,
     pub commit_gate_blocks: u64,
     pub append_entries_sent: u64,
+    /// Snapshots this node took of its own state machine (compactions).
+    pub snapshots_taken: u64,
+    /// Snapshots received over the wire and installed wholesale.
+    pub snapshots_installed: u64,
+    /// Inbound snapshots rejected (undecodable or boundary mismatch).
+    pub snapshots_rejected: u64,
 }
 
 /// Raft's durable state — what a node persists and recovers after a
@@ -164,6 +186,13 @@ pub struct DurableState {
     pub current_term: Term,
     pub voted_for: Option<NodeId>,
     pub log: Log,
+    /// Newest durable state-machine snapshot, if the log has ever been
+    /// compacted. Its boundary equals the log's compaction base: boot
+    /// rebuilds the store from it and resumes applying at `base + 1`.
+    /// Note what is *absent*: the snapshot carries state-machine bytes
+    /// only — lease and Ongaro state stay volatile even across a
+    /// snapshot-assisted recovery (same §3 argument as the log).
+    pub snapshot: Option<Snapshot>,
 }
 
 #[derive(Debug)]
@@ -176,6 +205,9 @@ pub struct Node {
     current_term: Term,
     voted_for: Option<NodeId>,
     log: Log,
+    /// Newest snapshot (boundary == `log.base()` whenever the log is
+    /// compacted). Serves wire transfers and rides [`DurableState`].
+    durable_snap: Option<Snapshot>,
 
     // ---- volatile ----
     role: Role,
@@ -202,6 +234,17 @@ pub struct Node {
     lease: Option<LeaseGuardState>,
     ongaro: Option<OngaroState>,
     batch_cache: Option<BatchCache>,
+    /// Per-peer outbound snapshot transfer: `Some(next_offset)` while a
+    /// stop-and-wait transfer is active (leader only, volatile).
+    snap_offset: Vec<Option<usize>>,
+    /// Inbound transfer reassembly buffer (follower only, volatile).
+    snap_recv: Option<SnapRecv>,
+    /// Snapshot taken/installed since the driver last drained it — the
+    /// real server persists this (atomic file write + WAL segment
+    /// rotation) before routing any of the same batch's outputs, the
+    /// same persist-before-route discipline as the WAL itself. The
+    /// simulator leaves it in place (virtual time has no disks).
+    pending_snap: Option<Snapshot>,
 
     pub stats: NodeStats,
     /// Protocol-event flight recorder (obs). Like `stats`, this is
@@ -245,16 +288,31 @@ impl Node {
     ) -> (Self, Vec<Output>) {
         let n = cfg.n;
         let recorder = FlightRecorder::new(cfg.recorder_capacity, cfg.group);
+        // A snapshot is the one durable input to otherwise-volatile
+        // state: the store and commit index restart from its boundary
+        // (instead of zero) because the covered log prefix is gone and
+        // can never be re-applied. Everything above the boundary is
+        // re-derived exactly as before — and lease/Ongaro state is
+        // re-derived from scratch, snapshot or not.
+        let mut store = Store::new();
+        let mut commit_index = 0;
+        if let Some(s) = &durable.snapshot {
+            if let Ok(c) = snap::decode(&s.data) {
+                store.install(c.pairs, c.meta.applied);
+                commit_index = c.meta.last_index;
+            }
+        }
         let mut node = Node {
             rng,
             cfg,
             current_term: durable.current_term,
             voted_for: durable.voted_for,
             log: durable.log,
+            durable_snap: durable.snapshot,
             role: Role::Follower,
-            commit_index: 0,
+            commit_index,
             leader_hint: None,
-            store: Store::new(),
+            store,
             heard_leader_at: Micros::MIN,
             election_deadline: 0,
             votes: HashSet::new(),
@@ -268,6 +326,9 @@ impl Node {
             lease: None,
             ongaro: None,
             batch_cache: None,
+            snap_offset: vec![None; n],
+            snap_recv: None,
+            pending_snap: None,
             stats: NodeStats::default(),
             recorder,
         };
@@ -292,6 +353,17 @@ impl Node {
     /// outputs; the simulator leaves it untouched.
     pub fn take_log_dirty(&mut self) -> Option<(Index, bool)> {
         self.log.take_dirty()
+    }
+    /// Drain the snapshot taken/installed since the last drain. Real-mode
+    /// servers persist it (atomic file + WAL segment rotation) before
+    /// routing outputs, mirroring [`Self::take_log_dirty`].
+    pub fn take_pending_snap(&mut self) -> Option<Snapshot> {
+        self.pending_snap.take()
+    }
+    /// The newest snapshot this node holds (boundary == log base when
+    /// the log is compacted).
+    pub fn durable_snapshot(&self) -> Option<&Snapshot> {
+        self.durable_snap.as_ref()
     }
     pub fn commit_index(&self) -> Index {
         self.commit_index
@@ -454,8 +526,11 @@ impl Node {
             self.match_index[p] = 0;
             self.inflight[p] = false;
             self.last_ack_seq[p] = 0;
+            self.snap_offset[p] = None;
         }
         self.match_index[self.cfg.id] = last;
+        // A leader is nobody's snapshot sink.
+        self.snap_recv = None;
         // LeaseGuard state: prior leader's lease deadline + limbo region
         // (paper §3.1-§3.3), fixed at election.
         if self.cfg.mode.uses_log_lease() {
@@ -506,6 +581,10 @@ impl Node {
         self.lease = None;
         self.ongaro = None;
         self.batch_cache = None;
+        // Outbound transfer windows are leader state; drop them.
+        for o in self.snap_offset.iter_mut() {
+            *o = None;
+        }
         self.store.set_limbo_region([].iter());
         // Pending writes may have replicated and may yet commit: the
         // client must treat them as ambiguous (§6.2; checker branches).
@@ -544,6 +623,14 @@ impl Node {
             }
             Message::AppendReply { term, from, success, match_index, seq } => {
                 self.on_append_reply(now, term, from, success, match_index, seq, &mut out)
+            }
+            Message::SnapInstall { term, leader, last_index, last_term, offset, data, done, seq } => {
+                self.on_snap_install(
+                    now, term, leader, last_index, last_term, offset, data, done, seq, &mut out,
+                )
+            }
+            Message::SnapAck { term, from, last_index, offset, installed, seq } => {
+                self.on_snap_ack(now, term, from, last_index, offset, installed, seq, &mut out)
             }
         }
         out
@@ -654,6 +741,12 @@ impl Node {
             let mut idx = prev_index;
             for &e in entries.iter() {
                 idx += 1;
+                // Entries at or below the compaction base are already
+                // covered by our snapshot (a delayed append can overlap
+                // a prefix we compacted): committed state, skip.
+                if idx <= self.log.base() {
+                    continue;
+                }
                 match self.log.term_at(idx) {
                     Some(t) if t == e.term => { /* duplicate, skip */ }
                     Some(_) => {
@@ -673,6 +766,7 @@ impl Node {
             if new_commit > self.commit_index {
                 self.apply_range(self.commit_index + 1, new_commit, out);
                 self.commit_index = new_commit;
+                self.maybe_take_snapshot(now);
             }
         }
         out.push(Output::Send {
@@ -717,11 +811,230 @@ impl Node {
                 self.send_append(from, now, out);
             }
         } else {
-            // Back up and retry (coarse: halve toward 1).
+            // Back up and retry (coarse: halve toward 1). If this walks
+            // next_index below the compaction base, the resend routes to
+            // a snapshot transfer (see `send_append_with_seq`).
             let ni = &mut self.next_index[from];
             *ni = (*ni / 2).max(1);
             self.send_append(from, now, out);
         }
+    }
+
+    /// Follower side of InstallSnapshot: buffer chunks, and on the final
+    /// one decode + install the state machine wholesale. Lease and
+    /// Ongaro state are deliberately untouched — a snapshot carries
+    /// committed state-machine contents only, and volatile lease state
+    /// must stay volatile (same argument as [`Self::restart`]).
+    #[allow(clippy::too_many_arguments)]
+    fn on_snap_install(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        leader: NodeId,
+        last_index: Index,
+        last_term: Term,
+        offset: u64,
+        data: Vec<u8>,
+        done: bool,
+        seq: u64,
+        out: &mut Vec<Output>,
+    ) {
+        let nack = |me: &Self, offset: u64, installed: bool| Output::Send {
+            to: leader,
+            msg: Message::SnapAck {
+                term: me.current_term,
+                from: me.cfg.id,
+                last_index,
+                offset,
+                installed,
+                seq,
+            },
+        };
+        if term < self.current_term {
+            out.push(nack(self, 0, false));
+            return;
+        }
+        // Equal term: a candidate yields to the elected leader, and this
+        // counts as leader contact exactly like AppendEntries does.
+        if self.role != Role::Follower {
+            self.step_down(now, term, out);
+        }
+        self.leader_hint = Some(leader);
+        self.heard_leader_at = Self::local_now(now);
+        let jitter = if self.cfg.election_jitter_us > 0 {
+            self.rng.range_i64(0, self.cfg.election_jitter_us)
+        } else {
+            0
+        };
+        self.election_deadline = Self::local_now(now) + self.cfg.election_timeout_us + jitter;
+
+        // Everything through the boundary is already committed here (a
+        // stale leader view, e.g. after its restart): report success so
+        // the leader resumes AppendEntries at last_index + 1.
+        if last_index <= self.commit_index {
+            self.snap_recv = None;
+            out.push(nack(self, offset.saturating_add(data.len() as u64), true));
+            return;
+        }
+        let mut buf = match self.snap_recv.take() {
+            // In-order continuation of the transfer we were buffering.
+            Some(r)
+                if r.last_index == last_index
+                    && r.last_term == last_term
+                    && r.buf.len() == offset as usize =>
+            {
+                r.buf
+            }
+            // Duplicate or reordered old chunk (chaos nets): keep the
+            // buffer and report actual progress so the leader realigns.
+            Some(r)
+                if r.last_index == last_index
+                    && r.last_term == last_term
+                    && (offset as usize) < r.buf.len() =>
+            {
+                let got = r.buf.len() as u64;
+                self.snap_recv = Some(r);
+                out.push(nack(self, got, false));
+                return;
+            }
+            // A fresh transfer may start any time the chunk is at 0.
+            _ if offset == 0 => Vec::new(),
+            // Gap (or a different snapshot mid-buffer): restart.
+            _ => {
+                out.push(nack(self, 0, false));
+                return;
+            }
+        };
+        if buf.len().saturating_add(data.len()) > MAX_SNAPSHOT_BYTES {
+            self.stats.snapshots_rejected += 1;
+            self.trace(now, EventKind::SnapshotRejected, last_index, buf.len() as u64);
+            out.push(nack(self, 0, false));
+            return;
+        }
+        buf.extend_from_slice(&data);
+        if !done {
+            let got = buf.len() as u64;
+            self.snap_recv = Some(SnapRecv { last_index, last_term, buf });
+            out.push(nack(self, got, false));
+            return;
+        }
+        let size = buf.len() as u64;
+        match snap::decode(&buf) {
+            Ok(c)
+                if c.meta.last_index == last_index
+                    && c.meta.last_term == last_term
+                    && c.meta.group == self.cfg.group =>
+            {
+                self.install_snapshot(now, c, buf);
+                out.push(nack(self, size, true));
+            }
+            _ => {
+                // Undecodable or boundary/group mismatch: refuse and ask
+                // for a restart rather than install corrupt state.
+                self.stats.snapshots_rejected += 1;
+                self.trace(now, EventKind::SnapshotRejected, last_index, size);
+                out.push(nack(self, 0, false));
+            }
+        }
+    }
+
+    /// Install decoded snapshot contents wholesale: replace the store,
+    /// move the log's compaction base (keeping any matching suffix),
+    /// and advance the commit index to the boundary. The covered
+    /// entries were committed by definition, so this never un-commits
+    /// anything. Volatile lease state is NOT resurrected — the limbo
+    /// region is cleared by the store install and `lease`/`ongaro`
+    /// stay `None` (a follower holds none to begin with).
+    fn install_snapshot(&mut self, now: TimeInterval, c: SnapContents, payload: Vec<u8>) {
+        let meta = c.meta;
+        let size = payload.len() as u64;
+        self.store.install(c.pairs, meta.applied);
+        self.log.install_snapshot_meta(meta.last_index, meta.last_term, meta.last_written_at);
+        self.commit_index = self.commit_index.max(meta.last_index);
+        self.batch_cache = None;
+        let s = Snapshot { meta, data: Arc::new(payload) };
+        self.durable_snap = Some(s.clone());
+        self.pending_snap = Some(s);
+        self.stats.snapshots_installed += 1;
+        self.trace(now, EventKind::SnapshotInstalled, meta.last_index, size);
+    }
+
+    /// Leader side of the transfer: advance the stop-and-wait window on
+    /// progress acks, and on `installed` resume ordinary AppendEntries
+    /// from the boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn on_snap_ack(
+        &mut self,
+        now: TimeInterval,
+        term: Term,
+        from: NodeId,
+        last_index: Index,
+        offset: u64,
+        installed: bool,
+        seq: u64,
+        out: &mut Vec<Output>,
+    ) {
+        if self.role != Role::Leader || term != self.current_term {
+            return;
+        }
+        self.inflight[from] = false;
+        self.last_ack_seq[from] = self.last_ack_seq[from].max(seq);
+        if let Some(o) = self.ongaro.as_mut() {
+            o.record_ack(from, seq);
+        }
+        if installed {
+            self.snap_offset[from] = None;
+            if last_index > self.match_index[from] {
+                self.match_index[from] = last_index;
+            }
+            self.next_index[from] = self.next_index[from].max(last_index + 1);
+            self.try_advance_commit(now, out);
+            self.serve_ready_quorum_reads(now, out);
+            if self.next_index[from] <= self.log.last_index() {
+                self.send_append(from, now, out);
+            }
+            return;
+        }
+        // Progress ack: trust the follower's buffered length as the next
+        // offset — unless it is for a snapshot we since replaced, in
+        // which case the transfer restarts from zero.
+        let current = self.durable_snap.as_ref().map(|s| s.meta.last_index);
+        self.snap_offset[from] =
+            if current == Some(last_index) { Some(offset as usize) } else { Some(0) };
+        self.send_append(from, now, out);
+    }
+
+    /// Compact once the applied prefix outgrows the configured
+    /// threshold: move the log base to the commit index, serialize the
+    /// store at that boundary, and queue the snapshot for the driver to
+    /// persist. With `snapshot_threshold == 0` (the default) this is a
+    /// no-op and a fixed-seed run is byte-identical to pre-compaction
+    /// builds.
+    fn maybe_take_snapshot(&mut self, now: TimeInterval) {
+        let threshold = self.cfg.snapshot_threshold;
+        if threshold == 0 {
+            return;
+        }
+        let boundary = self.commit_index;
+        if boundary <= self.log.base() || boundary - self.log.base() < threshold {
+            return;
+        }
+        self.log.compact_to(boundary);
+        self.batch_cache = None;
+        let meta = SnapMeta {
+            group: self.cfg.group,
+            last_index: self.log.base(),
+            last_term: self.log.base_term(),
+            last_written_at: self.log.base_written_at(),
+            applied: self.store.applied(),
+        };
+        let s = snap::encode(&self.store, meta);
+        self.stats.snapshots_taken += 1;
+        self.trace(now, EventKind::SnapshotTaken, meta.last_index, s.size() as u64);
+        self.durable_snap = Some(s.clone());
+        self.pending_snap = Some(s);
+        // In-flight transfers of the replaced snapshot self-correct: the
+        // next ack names the old boundary and restarts from offset 0.
     }
 
     // -------------------------------------------------------- replication
@@ -758,6 +1071,14 @@ impl Node {
             return;
         }
         let prev_index = self.next_index[peer] - 1;
+        if prev_index < self.log.base() {
+            // The entries this peer needs were compacted away: ship the
+            // snapshot instead (Raft §7 InstallSnapshot). Same round id,
+            // same inflight window — a snapshot chunk *is* this round's
+            // message to the peer.
+            self.send_snapshot_chunk(peer, seq, now, out);
+            return;
+        }
         let prev_term = self.log.term_at(prev_index).unwrap_or(0);
         let hi = self
             .log
@@ -778,6 +1099,52 @@ impl Node {
                 prev_term,
                 entries,
                 leader_commit: self.commit_index,
+                seq,
+            },
+        });
+    }
+
+    /// Send the next chunk of the current snapshot to `peer`
+    /// (stop-and-wait: one chunk per inflight window; the follower's
+    /// ack opens the next). Offsets live in `snap_offset[peer]` and are
+    /// only advanced by acks, so a lost chunk is retransmitted at the
+    /// same offset on the next heartbeat round.
+    fn send_snapshot_chunk(
+        &mut self,
+        peer: NodeId,
+        seq: u64,
+        now: TimeInterval,
+        out: &mut Vec<Output>,
+    ) {
+        let Some(snap) = self.durable_snap.clone() else {
+            // Unreachable in practice: base > 0 implies a snapshot was
+            // taken or installed. Degrade by resyncing from the suffix
+            // we still have rather than wedging replication.
+            self.next_index[peer] = self.log.base() + 1;
+            return;
+        };
+        let offset = self.snap_offset[peer].unwrap_or(0);
+        let Some((chunk, done)) = snap.chunk(offset, SNAP_CHUNK_BYTES) else {
+            // Offset out of range: the snapshot was replaced mid-transfer.
+            // Restart from zero on the next round.
+            self.snap_offset[peer] = Some(0);
+            return;
+        };
+        self.snap_offset[peer] = Some(offset);
+        if let Some(o) = self.ongaro.as_mut() {
+            o.record_send(peer, seq, Self::local_now(now));
+        }
+        self.inflight[peer] = true;
+        out.push(Output::Send {
+            to: peer,
+            msg: Message::SnapInstall {
+                term: self.current_term,
+                leader: self.cfg.id,
+                last_index: snap.meta.last_index,
+                last_term: snap.meta.last_term,
+                offset: offset as u64,
+                data: chunk.to_vec(),
+                done,
                 seq,
             },
         });
@@ -875,6 +1242,7 @@ impl Node {
         self.apply_range(self.commit_index + 1, candidate, out);
         self.commit_index = candidate;
         self.trace(now, EventKind::CommitAdvance, candidate, 0);
+        self.maybe_take_snapshot(now);
         if relinquishing {
             // Ack everything committed, then relinquish leadership.
             while let Some(w) = self.pending_writes.front() {
@@ -1195,6 +1563,11 @@ impl Node {
             current_term: self.current_term,
             voted_for: self.voted_for,
             log: std::mem::take(&mut self.log),
+            // The snapshot is durable by the time it exists (the real
+            // driver persists it before routing; the sim treats the
+            // in-memory copy as its disk) — it survives the reboot and
+            // boot() reseeds the store from it.
+            snapshot: self.durable_snap.take(),
         };
         // The RNG stream continues across the reboot (a fresh seed would
         // replay the pre-crash jitter sequence); stats and the flight
@@ -1260,6 +1633,7 @@ mod tests {
             max_entries_per_append: 1024,
             group: 0,
             recorder_capacity: 64,
+            snapshot_threshold: 0,
         }
     }
 
@@ -1879,5 +2253,258 @@ mod tests {
             .filter(|o| matches!(o, Output::Applied { key: 3, value: 30 }))
             .collect();
         assert_eq!(applied.len(), 1);
+    }
+
+    // ------------------------------------------------ snapshots/compaction
+
+    fn make_leader_with(c: NodeConfig, now: TimeInterval) -> Node {
+        let (mut n, _) = Node::new(c, 1, t(0));
+        n.on_timer(now, TimerKind::Election);
+        let term = n.term();
+        n.on_message(now, Message::VoteReply { term, voter: 1, granted: true });
+        assert!(n.is_leader());
+        n
+    }
+
+    /// Leader with `writes` committed puts of `key` (values 0..writes),
+    /// peer 1 acking everything and peer 2 silent (lagging).
+    fn compacted_leader(threshold: u64, writes: u64, key: u32) -> Node {
+        let mut c = cfg(0, ConsistencyMode::LeaseGuard);
+        c.snapshot_threshold = threshold;
+        let now = t(ET);
+        let mut n = make_leader_with(c, now);
+        ack_all(&mut n, now, 1);
+        for i in 0..writes {
+            let at = t(ET + 1000 * (i as Micros + 1));
+            n.client_write(at, i, key, i, 0);
+            ack_all(&mut n, at, 1);
+        }
+        n
+    }
+
+    #[test]
+    fn threshold_compaction_moves_base_and_restart_resumes_from_snapshot() {
+        let mut n = compacted_leader(3, 6, 2);
+        // Commits ran 1..=7 (noop + 6 writes); threshold 3 compacts at
+        // commit 3 and again at commit 6.
+        assert_eq!(n.commit_index(), 7);
+        assert_eq!(n.log().base(), 6, "two compactions: 3 then 6");
+        assert_eq!(n.log().last_index(), 7, "uncompacted suffix survives");
+        assert_eq!(n.stats.snapshots_taken, 2);
+        let snap = n.take_pending_snap().expect("driver drains the snapshot");
+        assert_eq!(snap.meta.last_index, 6);
+        assert_eq!(snap.meta.group, 0);
+        assert!(n.take_pending_snap().is_none(), "drain is one-shot");
+        // Reads still see the full (partly compacted-away) history.
+        let out = n.client_read(t(ET + 50_000), 99, 2);
+        assert!(
+            out.iter().any(|o| matches!(
+                o,
+                Output::Reply { result: OpResult::ReadOk(v), .. } if **v == vec![0, 1, 2, 3, 4, 5]
+            )),
+            "{out:?}"
+        );
+        // Restart: term/vote durable, store + commit resume from the
+        // snapshot boundary instead of zero, lease stays dead.
+        let term = n.term();
+        n.restart(t(ET + 60_000));
+        assert_eq!(n.term(), term);
+        assert_eq!(n.commit_index(), 6, "boot resumes from the snapshot");
+        assert_eq!(n.store().applied(), 6);
+        assert_eq!(*n.store().read(2), vec![0, 1, 2, 3, 4], "suffix entry 7 is uncommitted again");
+        assert!(n.lease_state().is_none(), "lease never rides a snapshot");
+        assert_eq!(n.role(), Role::Follower);
+        assert_eq!(n.log().base(), 6);
+        assert_eq!(n.log().last_index(), 7);
+    }
+
+    #[test]
+    fn zero_threshold_never_compacts() {
+        let mut n = compacted_leader(0, 8, 1);
+        assert_eq!(n.log().base(), 0);
+        assert_eq!(n.stats.snapshots_taken, 0);
+        assert!(n.take_pending_snap().is_none());
+    }
+
+    #[test]
+    fn lagging_follower_catches_up_via_snapshot_and_resumes_appends() {
+        let mut leader = compacted_leader(2, 5, 7);
+        assert_eq!(leader.log().base(), 6, "fully compacted");
+        let (mut f, _) = Node::new(cfg(2, ConsistencyMode::LeaseGuard), 3, t(0));
+        // Pump heartbeats + node-2 traffic both ways until installed.
+        let mut installed_round = None;
+        for round in 0..20 {
+            let at = t(ET + 100_000 + (round as Micros) * 1000);
+            let outs = leader.on_timer(at, TimerKind::Heartbeat);
+            let to_f: Vec<Message> = outs
+                .into_iter()
+                .filter_map(|o| match o {
+                    Output::Send { to: 2, msg } => Some(msg),
+                    _ => None,
+                })
+                .collect();
+            let mut back = Vec::new();
+            for m in to_f {
+                assert!(
+                    matches!(m, Message::SnapInstall { .. }) || installed_round.is_some(),
+                    "pre-install traffic to a lagging peer must be snapshot chunks"
+                );
+                for o in f.on_message(at, m) {
+                    if let Output::Send { to: 0, msg } = o {
+                        back.push(msg);
+                    }
+                }
+            }
+            for m in back {
+                leader.on_message(at, m);
+            }
+            if f.stats.snapshots_installed > 0 && installed_round.is_none() {
+                installed_round = Some(round);
+            }
+            if installed_round.is_some() {
+                break;
+            }
+        }
+        assert!(installed_round.is_some(), "transfer never completed");
+        assert_eq!(f.commit_index(), 6);
+        assert_eq!(f.store().applied(), 6);
+        assert_eq!(*f.store().read(7), vec![0, 1, 2, 3, 4]);
+        assert_eq!(f.log().base(), 6, "follower log base moved to the boundary");
+        assert!(f.lease_state().is_none(), "install must not resurrect lease state");
+        assert_eq!(f.role(), Role::Follower);
+        assert!(f.take_pending_snap().is_some(), "driver persists the installed snapshot");
+        // Ordinary replication resumes: next round is AppendEntries and
+        // the follower accepts it.
+        let at = t(ET + 300_000);
+        let outs = leader.on_timer(at, TimerKind::Heartbeat);
+        let m = outs
+            .into_iter()
+            .find_map(|o| match o {
+                Output::Send { to: 2, msg: m @ Message::AppendEntries { .. } } => Some(m),
+                _ => None,
+            })
+            .expect("post-install traffic reverts to AppendEntries");
+        let out = f.on_message(at, m);
+        assert!(
+            out.iter().any(|o| matches!(
+                o,
+                Output::Send { msg: Message::AppendReply { success: true, .. }, .. }
+            )),
+            "{out:?}"
+        );
+        // And the new state is itself crash-durable on the follower.
+        f.restart(t(ET + 400_000));
+        assert_eq!(f.commit_index(), 6);
+        assert_eq!(*f.store().read(7), vec![0, 1, 2, 3, 4]);
+        assert!(f.lease_state().is_none());
+    }
+
+    #[test]
+    fn snapshot_chunks_buffer_dedupe_and_reject_gaps() {
+        let mut leader = compacted_leader(1, 3, 5);
+        let snap = leader.durable_snapshot().expect("compacted").clone();
+        let data = &snap.data;
+        assert!(data.len() >= 4);
+        let half = data.len() / 2;
+        let term = leader.term() + 1;
+        let si = |offset: usize, chunk: &[u8], done: bool, seq: u64| Message::SnapInstall {
+            term,
+            leader: 0,
+            last_index: snap.meta.last_index,
+            last_term: snap.meta.last_term,
+            offset: offset as u64,
+            data: chunk.to_vec(),
+            done,
+            seq,
+        };
+        let ack = |out: &[Output]| -> (u64, bool) {
+            out.iter()
+                .find_map(|o| match o {
+                    Output::Send {
+                        msg: Message::SnapAck { offset, installed, .. }, ..
+                    } => Some((*offset, *installed)),
+                    _ => None,
+                })
+                .expect("every chunk is acked")
+        };
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 4, t(0));
+        // First half buffers.
+        let out = f.on_message(t(10), si(0, &data[..half], false, 1));
+        assert_eq!(ack(&out), (half as u64, false));
+        // Duplicate delivery of the same chunk: progress reported, no
+        // double-buffering.
+        let out = f.on_message(t(20), si(0, &data[..half], false, 2));
+        assert_eq!(ack(&out), (half as u64, false));
+        // Gap: an offset beyond the buffer restarts the transfer.
+        let out = f.on_message(t(30), si(half + 3, &data[half + 3..], true, 3));
+        assert_eq!(ack(&out), (0, false));
+        // Retransmit from scratch completes the install.
+        let out = f.on_message(t(40), si(0, &data[..half], false, 4));
+        assert_eq!(ack(&out), (half as u64, false));
+        let out = f.on_message(t(50), si(half, &data[half..], true, 5));
+        assert_eq!(ack(&out), (data.len() as u64, true));
+        assert_eq!(f.stats.snapshots_installed, 1);
+        assert_eq!(f.commit_index(), snap.meta.last_index);
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_snapshot_is_rejected_not_installed() {
+        let mut leader = compacted_leader(1, 2, 9);
+        let snap = leader.durable_snapshot().expect("compacted").clone();
+        let mut bad = (*snap.data).clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        let (mut f, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 6, t(0));
+        let out = f.on_message(
+            t(10),
+            Message::SnapInstall {
+                term: leader.term(),
+                leader: 0,
+                last_index: snap.meta.last_index,
+                last_term: snap.meta.last_term,
+                offset: 0,
+                data: bad,
+                done: true,
+                seq: 1,
+            },
+        );
+        assert!(
+            out.iter().any(|o| matches!(
+                o,
+                Output::Send { msg: Message::SnapAck { installed: false, offset: 0, .. }, .. }
+            )),
+            "{out:?}"
+        );
+        assert_eq!(f.stats.snapshots_rejected, 1);
+        assert_eq!(f.stats.snapshots_installed, 0);
+        assert_eq!(f.commit_index(), 0, "nothing installed");
+        assert_eq!(f.store().applied(), 0);
+        // A stale-term chunk is ignored outright (no step down, no buffer).
+        let (mut g, _) = Node::new(cfg(1, ConsistencyMode::LeaseGuard), 7, t(0));
+        g.on_message(
+            t(10),
+            Message::RequestVote { term: 5, candidate: 0, last_log_index: 9, last_log_term: 5 },
+        );
+        let out = g.on_message(
+            t(20),
+            Message::SnapInstall {
+                term: 4,
+                leader: 2,
+                last_index: snap.meta.last_index,
+                last_term: snap.meta.last_term,
+                offset: 0,
+                data: (*snap.data).clone(),
+                done: true,
+                seq: 1,
+            },
+        );
+        assert!(
+            out.iter().any(|o| matches!(
+                o,
+                Output::Send { msg: Message::SnapAck { installed: false, .. }, .. }
+            )),
+            "{out:?}"
+        );
+        assert_eq!(g.stats.snapshots_installed, 0);
     }
 }

@@ -352,6 +352,7 @@ fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, sta
     let Some(ms) = storage.as_mut() else {
         for (_, node) in shards.iter_mut() {
             node.take_log_dirty();
+            node.take_pending_snap();
         }
         return;
     };
@@ -359,6 +360,17 @@ fn persist_all(shards: &mut ShardRouter, storage: &mut Option<MultiStorage>, sta
     for (g, node) in shards.iter_mut() {
         let s = ms.group(g as usize);
         s.persist_hard_state(node.term(), node.voted_for()).expect("hard-state persist");
+        if let Some(snap) = node.take_pending_snap() {
+            // Snapshot taken or installed this batch: the atomic file
+            // write + WAL segment rotation subsumes the dirty suffix
+            // (the fresh segment is seeded with the node's entire
+            // in-memory tail), so the watermark is drained and dropped.
+            // install_snapshot syncs internally — rotation is rare
+            // enough that it pays its own barrier.
+            s.install_snapshot(&snap, node.log()).expect("snapshot persist");
+            node.take_log_dirty();
+            continue;
+        }
         if let Some((from, truncated)) = node.take_log_dirty() {
             if truncated {
                 s.truncate(from - 1).expect("wal truncate");
@@ -482,6 +494,10 @@ fn main_loop(
             m.writes_blocked_transfer.set(st.commit_gate_blocks);
             m.writes_rejected_gate.set(st.writes_rejected_gate);
             m.elections_won.set(st.elections_won);
+            m.snapshots_taken.set(st.snapshots_taken);
+            m.snapshots_installed.set(st.snapshots_installed);
+            m.snapshots_rejected.set(st.snapshots_rejected);
+            m.last_snapshot_index.set(n.log().base() as i64);
         }
     };
 

@@ -163,6 +163,10 @@ impl Enc {
         self.u64(g.writes_blocked_transfer);
         self.u64(g.writes_rejected_gate);
         self.u64(g.elections_won);
+        self.u64(g.snapshots_taken);
+        self.u64(g.snapshots_installed);
+        self.u64(g.snapshots_rejected);
+        self.u64(g.last_snapshot_index);
         for st in &g.stages {
             self.stage(st);
         }
@@ -252,6 +256,26 @@ pub fn encode_raft_into(from: NodeId, group: GroupId, msg: &Message, e: &mut Enc
             e.u32(*f as u32);
             e.u8(*success as u8);
             e.u64(*match_index);
+            e.u64(*seq);
+        }
+        Message::SnapInstall { term, leader, last_index, last_term, offset, data, done, seq } => {
+            e.u8(4);
+            e.u64(*term);
+            e.u32(*leader as u32);
+            e.u64(*last_index);
+            e.u64(*last_term);
+            e.u64(*offset);
+            e.u8(*done as u8);
+            e.u64(*seq);
+            e.bytes(data);
+        }
+        Message::SnapAck { term, from: f, last_index, offset, installed, seq } => {
+            e.u8(5);
+            e.u64(*term);
+            e.u32(*f as u32);
+            e.u64(*last_index);
+            e.u64(*offset);
+            e.u8(*installed as u8);
             e.u64(*seq);
         }
     }
@@ -366,8 +390,10 @@ impl<'a> Dec<'a> {
     /// bytes actually left in the frame (each element occupies at
     /// least `min_bytes` on the wire), so a tiny corrupt frame cannot
     /// force a multi-GB `Vec::with_capacity` before per-element
-    /// decoding hits Eof.
-    fn count(&mut self, min_bytes: usize) -> R<usize> {
+    /// decoding hits Eof. `pub(crate)`: the snapshot payload decoder
+    /// ([`crate::snap::decode`]) is held to the same standard and
+    /// reuses this guard.
+    pub(crate) fn count(&mut self, min_bytes: usize) -> R<usize> {
         let n = self.u32()? as usize;
         if n.saturating_mul(min_bytes) > self.remaining() {
             return Err(DecodeError(format!(
@@ -455,6 +481,10 @@ impl<'a> Dec<'a> {
             writes_blocked_transfer: self.u64()?,
             writes_rejected_gate: self.u64()?,
             elections_won: self.u64()?,
+            snapshots_taken: self.u64()?,
+            snapshots_installed: self.u64()?,
+            snapshots_rejected: self.u64()?,
+            last_snapshot_index: self.u64()?,
             ..GroupSnapshot::default()
         };
         for st in g.stages.iter_mut() {
@@ -556,6 +586,41 @@ pub fn decode(b: &[u8]) -> R<Frame> {
                     match_index: d.u64()?,
                     seq: d.u64()?,
                 },
+                4 => {
+                    let term = d.u64()?;
+                    let leader = d.u32()? as NodeId;
+                    let last_index = d.u64()?;
+                    let last_term = d.u64()?;
+                    let offset = d.u64()?;
+                    let done = d.u8()? != 0;
+                    let seq = d.u64()?;
+                    let data = d.bytes()?;
+                    // Anti-DoS: a sender never produces chunks above
+                    // SNAP_CHUNK_BYTES, and offset+chunk must stay under
+                    // the whole-snapshot cap the receiver will buffer.
+                    if data.len() > crate::snap::SNAP_CHUNK_BYTES {
+                        return Err(DecodeError(format!(
+                            "snapshot chunk of {} bytes exceeds cap",
+                            data.len()
+                        )));
+                    }
+                    if (offset as usize).saturating_add(data.len())
+                        > crate::snap::MAX_SNAPSHOT_BYTES
+                    {
+                        return Err(DecodeError(format!(
+                            "snapshot transfer past {offset} exceeds size cap"
+                        )));
+                    }
+                    Message::SnapInstall { term, leader, last_index, last_term, offset, data, done, seq }
+                }
+                5 => Message::SnapAck {
+                    term: d.u64()?,
+                    from: d.u32()? as NodeId,
+                    last_index: d.u64()?,
+                    offset: d.u64()?,
+                    installed: d.u8()? != 0,
+                    seq: d.u64()?,
+                },
                 t => return Err(DecodeError(format!("bad raft tag {t}"))),
             };
             Frame::Raft { from, group, msg }
@@ -576,10 +641,10 @@ pub fn decode(b: &[u8]) -> R<Frame> {
         }
         FRAME_STATUS_REQ => Frame::StatusReq { tail: d.u32()? },
         FRAME_STATUS_RESP => {
-            // 449 = fixed group header: u32 group + u8 is_leader +
-            // 13 u64 gauges/counters + 6 stage summaries of 7x8 bytes +
+            // 481 = fixed group header: u32 group + u8 is_leader +
+            // 17 u64 gauges/counters + 6 stage summaries of 7x8 bytes +
             // u32 event count.
-            let n = d.count(449)?;
+            let n = d.count(481)?;
             let mut groups = Vec::with_capacity(n);
             for _ in 0..n {
                 groups.push(d.group_snapshot()?);
@@ -650,6 +715,47 @@ mod tests {
             from: 2,
             group: 1,
             msg: Message::AppendReply { term: 4, from: 2, success: false, match_index: 0, seq: 42 },
+        });
+        roundtrip(Frame::Raft {
+            from: 0,
+            group: 9,
+            msg: Message::SnapInstall {
+                term: 6,
+                leader: 0,
+                last_index: 120,
+                last_term: 5,
+                offset: 16384,
+                data: vec![0xEE; 700],
+                done: true,
+                seq: 51,
+            },
+        });
+        roundtrip(Frame::Raft {
+            from: 2,
+            group: 9,
+            msg: Message::SnapAck {
+                term: 6,
+                from: 2,
+                last_index: 120,
+                offset: 17084,
+                installed: true,
+                seq: 51,
+            },
+        });
+        // Empty chunk (offset probe) is legal on the wire.
+        roundtrip(Frame::Raft {
+            from: 1,
+            group: 0,
+            msg: Message::SnapInstall {
+                term: 1,
+                leader: 1,
+                last_index: 3,
+                last_term: 1,
+                offset: 0,
+                data: vec![],
+                done: false,
+                seq: 2,
+            },
         });
         // Empty entry batch (heartbeat frame).
         roundtrip(Frame::Raft {
@@ -734,6 +840,46 @@ mod tests {
     }
 
     #[test]
+    fn oversize_snapshot_chunk_rejected() {
+        // A chunk above SNAP_CHUNK_BYTES is a protocol violation even if
+        // the frame really carries the bytes: reject by name.
+        let f = Frame::Raft {
+            from: 0,
+            group: 0,
+            msg: Message::SnapInstall {
+                term: 1,
+                leader: 0,
+                last_index: 5,
+                last_term: 1,
+                offset: 0,
+                data: vec![0; crate::snap::SNAP_CHUNK_BYTES + 1],
+                done: true,
+                seq: 1,
+            },
+        };
+        let err = decode(&encode(&f)).unwrap_err();
+        assert!(err.0.contains("chunk"), "{err:?}");
+        // An offset that would walk the reassembly buffer past the
+        // whole-snapshot cap is rejected before any buffering.
+        let f = Frame::Raft {
+            from: 0,
+            group: 0,
+            msg: Message::SnapInstall {
+                term: 1,
+                leader: 0,
+                last_index: 5,
+                last_term: 1,
+                offset: crate::snap::MAX_SNAPSHOT_BYTES as u64,
+                data: vec![7],
+                done: false,
+                seq: 1,
+            },
+        };
+        let err = decode(&encode(&f)).unwrap_err();
+        assert!(err.0.contains("size cap"), "{err:?}");
+    }
+
+    #[test]
     fn every_truncated_prefix_rejected_without_panic() {
         // Every strict prefix of a valid frame must come back as a
         // decode ERROR — never a panic, never a silent partial parse.
@@ -768,6 +914,25 @@ mod tests {
                 result: OpResult::ReadOk(vec![1, 2, 3].into()),
             }),
             Frame::StatusReq { tail: 16 },
+            Frame::Raft {
+                from: 0,
+                group: 2,
+                msg: Message::SnapInstall {
+                    term: 3,
+                    leader: 0,
+                    last_index: 40,
+                    last_term: 2,
+                    offset: 0,
+                    data: vec![0x5A; 96],
+                    done: false,
+                    seq: 9,
+                },
+            },
+            Frame::Raft {
+                from: 1,
+                group: 2,
+                msg: Message::SnapAck { term: 3, from: 1, last_index: 40, offset: 96, installed: false, seq: 9 },
+            },
         ];
         for f in &frames {
             let enc = encode(f);
@@ -836,6 +1001,10 @@ mod tests {
         g0.reads_lease_inherited = 33;
         g0.reads_rejected_limbo = 2;
         g0.writes_accepted = 120;
+        g0.snapshots_taken = 4;
+        g0.snapshots_installed = 1;
+        g0.snapshots_rejected = 2;
+        g0.last_snapshot_index = 130;
         g0.stages[1] =
             StageSummary { count: 5, sum_us: 900, min_us: 80, p50_us: 150, p90_us: 300, p99_us: 400, max_us: 410 };
         g0.events.push(FlightEvent {

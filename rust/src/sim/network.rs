@@ -65,6 +65,12 @@ impl NetConfig {
     }
 }
 
+/// Wire throughput for sized sends (≈1 Gbit/s): a sized message adds
+/// `bytes / BYTES_PER_US` µs of serialization delay on top of the
+/// sampled propagation delay. Only snapshot-chunk transfers are sized;
+/// ordinary RPCs stay payload-agnostic (see module docs).
+pub const BYTES_PER_US: usize = 125;
+
 /// Verdict for one message send.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Delivery {
@@ -114,6 +120,23 @@ impl SimNetwork {
             dup_prob: 0.0,
             extra_loss: 0.0,
             reorder_extra_us: 0,
+        }
+    }
+
+    /// Decide the fate of one *sized* message (snapshot chunks): same
+    /// policy as [`Self::send`] plus a serialization delay of
+    /// `bytes / BYTES_PER_US` µs on each copy, so a multi-chunk
+    /// transfer occupies simulated time proportional to its size and a
+    /// Nemesis fault can land mid-transfer. Draws exactly the RNG
+    /// sequence [`Self::send`] draws — the extra delay is arithmetic —
+    /// so runs that never send sized messages (compaction off) replay
+    /// byte-identically.
+    pub fn send_sized(&mut self, from: NodeId, to: NodeId, bytes: usize) -> Delivery {
+        let ser = (bytes / BYTES_PER_US) as Micros;
+        match self.send(from, to) {
+            Delivery::After(d) => Delivery::After(d + ser),
+            Delivery::Twice(a, b) => Delivery::Twice(a + ser, b + ser),
+            Delivery::Dropped => Delivery::Dropped,
         }
     }
 
@@ -236,6 +259,28 @@ mod tests {
         }
         let mean = sum as f64 / k as f64;
         assert!((mean - 191.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn sized_send_adds_serialization_delay_only() {
+        // Two networks, same seed: a sized send must land exactly
+        // bytes/BYTES_PER_US later than the unsized send would have,
+        // consuming the identical RNG stream.
+        let mut a = net(NetConfig::default());
+        let mut b = net(NetConfig::default());
+        for i in 0..1000usize {
+            let bytes = (i % 3) * crate::snap::SNAP_CHUNK_BYTES;
+            let plain = a.send(0, 1);
+            let sized = b.send_sized(0, 1, bytes);
+            match (plain, sized) {
+                (Delivery::After(d), Delivery::After(s)) => {
+                    assert_eq!(s, d + (bytes / BYTES_PER_US) as Micros);
+                }
+                (p, s) => panic!("verdicts diverged: {p:?} vs {s:?}"),
+            }
+        }
+        // A full 16 KiB chunk costs ~131 µs of line time.
+        assert_eq!(crate::snap::SNAP_CHUNK_BYTES / BYTES_PER_US, 131);
     }
 
     #[test]

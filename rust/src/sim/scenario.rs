@@ -128,6 +128,25 @@ pub fn catalog() -> Vec<Scenario> {
             tune: no_tune,
         },
         Scenario {
+            name: "snapshot-catchup-leader-crash",
+            description: "aggressive compaction; a lagging follower rejoins and the leader crashes during snapshot catch-up",
+            schedule: NemesisSchedule::new()
+                // The follower misses ~700ms of writes while the leader
+                // compacts past its log, so its rejoin must go through
+                // the chunked InstallSnapshot path...
+                .at(500_000, Fault::CrashFollower { restart_after_us: Some(700_000) })
+                // ...and the leader dies inside that catch-up window.
+                // The new leader restarts the transfer from offset 0;
+                // the partially-installed follower state must never
+                // become visible.
+                .at(1_260_000, Fault::CrashLeader { restart_after_us: Some(500_000) }),
+            tune: |p| {
+                p.snapshot_threshold = 16;
+                p.interarrival_us = 300.0;
+                p.duration_us = 3_000_000;
+            },
+        },
+        Scenario {
             name: "planned-handover",
             description: "§5.1 drain: leader commits end-lease and steps down",
             schedule: NemesisSchedule::new().at(800_000, Fault::PlannedHandover),

@@ -1,0 +1,297 @@
+//! Snapshot files on disk: CRC framing, atomic writes, torn-file
+//! fallback, and retention pruning.
+//!
+//! Layout inside a node's (per-group) data directory:
+//!
+//! ```text
+//! snap-00000000000000000042        snapshot through log index 42
+//! snap-00000000000000000117        snapshot through log index 117
+//! wal                              base-0 segment (legacy name)
+//! wal-00000000000000000042         segment whose records start above 42
+//! wal-00000000000000000117         live segment
+//! ```
+//!
+//! Indices are zero-padded so lexical order is numeric order. A
+//! snapshot file is `u32 crc32(payload) | u32 payload_len | payload`
+//! where the payload is the canonical [`crate::snap`] encoding; it is
+//! written with the same atomicity discipline as `hardstate.rs`
+//! (tmp + fsync + rename + directory fsync), so a crash leaves either
+//! the old file set or the new one — never a half-written visible file.
+//!
+//! Reads are deliberately forgiving: any framing or payload defect —
+//! short file, bad CRC, bad decode, trailing bytes — makes the file
+//! invisible ([`read`] returns `None`) and recovery falls back to the
+//! next-newest snapshot plus a longer WAL replay. That fallback is why
+//! retention always keeps the previous snapshot alongside the newest.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::raft::types::Index;
+use crate::storage::wal::crc32;
+use crate::storage::FsyncPolicy;
+
+use super::{decode, Snapshot, MAX_SNAPSHOT_BYTES};
+
+/// Canonical file name for a snapshot through `index`.
+pub fn snap_name(index: Index) -> String {
+    format!("snap-{index:020}")
+}
+
+/// Canonical file name for the WAL segment that starts above `base`.
+/// Base 0 keeps the legacy bare name so pre-compaction directories
+/// recover unchanged.
+pub fn segment_name(base: Index) -> String {
+    if base == 0 {
+        "wal".to_string()
+    } else {
+        format!("wal-{base:020}")
+    }
+}
+
+fn parse_index(name: &str, prefix: &str) -> Option<Index> {
+    let digits = name.strip_prefix(prefix)?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Write `snap` atomically into `dir`, returning its final path.
+pub fn write(dir: &Path, snap: &Snapshot, policy: FsyncPolicy) -> io::Result<PathBuf> {
+    let name = snap_name(snap.meta.last_index);
+    let tmp = dir.join(format!("{name}.tmp"));
+    let dst = dir.join(&name);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&crc32(&snap.data).to_le_bytes())?;
+        f.write_all(&(snap.data.len() as u32).to_le_bytes())?;
+        f.write_all(&snap.data)?;
+        if policy.fsyncs() {
+            f.sync_data()?;
+        }
+    }
+    fs::rename(&tmp, &dst)?;
+    if policy.fsyncs() {
+        File::open(dir)?.sync_all()?;
+    }
+    Ok(dst)
+}
+
+/// Read and fully validate one snapshot file. `None` on any defect —
+/// torn write, bit rot, oversize, trailing garbage, undecodable
+/// payload — so callers treat the file as absent and fall back.
+pub fn read(path: &Path) -> Option<Snapshot> {
+    let bytes = fs::read(path).ok()?;
+    let crc = u32::from_le_bytes(bytes.get(0..4)?.try_into().ok()?);
+    let len = u32::from_le_bytes(bytes.get(4..8)?.try_into().ok()?) as usize;
+    if len > MAX_SNAPSHOT_BYTES || bytes.len() != 8 + len {
+        return None;
+    }
+    let payload = bytes.get(8..)?;
+    if crc32(payload) != crc {
+        return None;
+    }
+    let contents = decode(payload).ok()?;
+    Some(Snapshot { meta: contents.meta, data: Arc::new(payload.to_vec()) })
+}
+
+/// All snapshot indices present in `dir`, ascending. Stray `.tmp`
+/// files (crash before rename) are ignored — and cleaned up lazily by
+/// the next [`write`]'s rename.
+pub fn list(dir: &Path) -> io::Result<Vec<Index>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(idx) = entry.file_name().to_str().and_then(|n| parse_index(n, "snap-")) {
+            out.push(idx);
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// All WAL segment bases present in `dir`, ascending (the legacy bare
+/// `wal` file is base 0).
+pub fn list_segments(dir: &Path) -> io::Result<Vec<Index>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        match entry.file_name().to_str() {
+            Some("wal") => out.push(0),
+            Some(n) => {
+                if let Some(base) = parse_index(n, "wal-") {
+                    out.push(base);
+                }
+            }
+            None => {}
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Newest fully-valid snapshot in `dir`, skipping torn/corrupt files.
+/// This *is* the recovery fallback: the newest file is tried first and
+/// each defective candidate silently yields to the one before it.
+pub fn load_newest(dir: &Path) -> io::Result<Option<Snapshot>> {
+    let mut indices = list(dir)?;
+    while let Some(idx) = indices.pop() {
+        if let Some(s) = read(&dir.join(snap_name(idx))) {
+            return Ok(Some(s));
+        }
+    }
+    Ok(None)
+}
+
+/// Retention: keep the newest and previous snapshots (the previous one
+/// is the torn-newest fallback) plus every WAL segment that a recovery
+/// starting from the *previous* snapshot could still need. Everything
+/// older is deleted. `live_segment` is never deleted regardless.
+pub fn prune(dir: &Path, live_segment: Index, policy: FsyncPolicy) -> io::Result<()> {
+    let snaps = list(dir)?;
+    // Keep the last two snapshots; floor is the oldest one retained.
+    let keep_from = match snaps.len().checked_sub(2) {
+        Some(i) => snaps.get(i).copied().unwrap_or(0),
+        None => 0,
+    };
+    let mut removed = false;
+    for idx in &snaps {
+        if *idx < keep_from {
+            fs::remove_file(dir.join(snap_name(*idx)))?;
+            removed = true;
+        }
+    }
+    // A segment with base B holds records for indices > B. Recovery
+    // from snapshot `keep_from` replays every segment whose *successor*
+    // covers indices above keep_from — i.e. drop segment B only if some
+    // retained segment with base B' (B < B' <= keep_from) supersedes it.
+    let segs = list_segments(dir)?;
+    let seg_floor =
+        segs.iter().copied().filter(|b| *b <= keep_from).max().unwrap_or(0);
+    for base in &segs {
+        if *base < seg_floor && *base != live_segment {
+            fs::remove_file(dir.join(segment_name(*base)))?;
+            removed = true;
+        }
+    }
+    if removed && policy.fsyncs() {
+        File::open(dir)?.sync_all()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::clock::TimeInterval;
+    use crate::kv::{Command, Store};
+    use crate::snap::{encode, SnapMeta};
+    use crate::testkit::TempDir;
+
+    fn snap_at(index: Index, keys: u32) -> Snapshot {
+        let mut s = Store::new();
+        for k in 0..keys {
+            s.apply(&Command::Put { key: k, value: k as u64, payload_bytes: 0 });
+        }
+        encode(
+            &s,
+            SnapMeta {
+                group: 0,
+                last_index: index,
+                last_term: 1,
+                last_written_at: TimeInterval::exact(index as i64),
+                applied: keys as u64,
+            },
+        )
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let d = TempDir::new("snapfile-rt");
+        let s = snap_at(9, 5);
+        let p = write(d.path(), &s, FsyncPolicy::Never).unwrap();
+        assert_eq!(p.file_name().unwrap().to_str().unwrap(), snap_name(9));
+        assert_eq!(read(&p).unwrap(), s);
+    }
+
+    #[test]
+    fn newest_valid_wins_and_torn_falls_back() {
+        let d = TempDir::new("snapfile-newest");
+        let old = snap_at(5, 3);
+        let new = snap_at(12, 7);
+        write(d.path(), &old, FsyncPolicy::Never).unwrap();
+        let newest_path = write(d.path(), &new, FsyncPolicy::Never).unwrap();
+        assert_eq!(load_newest(d.path()).unwrap().unwrap().meta.last_index, 12);
+        // Tear the newest file: recovery silently falls back to index 5.
+        let full = fs::read(&newest_path).unwrap();
+        fs::write(&newest_path, &full[..full.len() / 2]).unwrap();
+        assert_eq!(load_newest(d.path()).unwrap().unwrap().meta.last_index, 5);
+    }
+
+    #[test]
+    fn corrupt_crc_is_invisible() {
+        let d = TempDir::new("snapfile-crc");
+        let p = write(d.path(), &snap_at(3, 2), FsyncPolicy::Never).unwrap();
+        let mut b = fs::read(&p).unwrap();
+        let last = b.len() - 1;
+        b[last] ^= 0x40;
+        fs::write(&p, &b).unwrap();
+        assert!(read(&p).is_none());
+        assert!(load_newest(d.path()).unwrap().is_none());
+    }
+
+    #[test]
+    fn listing_ignores_tmp_and_foreign_files() {
+        let d = TempDir::new("snapfile-list");
+        write(d.path(), &snap_at(7, 1), FsyncPolicy::Never).unwrap();
+        write(d.path(), &snap_at(2, 1), FsyncPolicy::Never).unwrap();
+        fs::write(d.path().join("snap-00000000000000000099.tmp"), b"half").unwrap();
+        fs::write(d.path().join("hard_state"), b"x").unwrap();
+        fs::write(d.path().join("snap-abc"), b"x").unwrap();
+        assert_eq!(list(d.path()).unwrap(), vec![2, 7]);
+    }
+
+    #[test]
+    fn segment_names_roundtrip_through_listing() {
+        let d = TempDir::new("snapfile-segs");
+        fs::write(d.path().join(segment_name(0)), b"").unwrap();
+        fs::write(d.path().join(segment_name(42)), b"").unwrap();
+        fs::write(d.path().join(segment_name(7)), b"").unwrap();
+        assert_eq!(list_segments(d.path()).unwrap(), vec![0, 7, 42]);
+    }
+
+    #[test]
+    fn prune_keeps_two_snapshots_and_needed_segments() {
+        let d = TempDir::new("snapfile-prune");
+        for idx in [5u64, 12, 20] {
+            write(d.path(), &snap_at(idx, 1), FsyncPolicy::Never).unwrap();
+        }
+        for base in [0u64, 5, 12, 20] {
+            fs::write(d.path().join(segment_name(base)), b"").unwrap();
+        }
+        prune(d.path(), 20, FsyncPolicy::Never).unwrap();
+        assert_eq!(list(d.path()).unwrap(), vec![12, 20], "keep newest + previous");
+        // Recovery floor is snapshot 12; segment 12 supersedes 0 and 5.
+        assert_eq!(list_segments(d.path()).unwrap(), vec![12, 20]);
+        // Pruning again is a no-op.
+        prune(d.path(), 20, FsyncPolicy::Never).unwrap();
+        assert_eq!(list_segments(d.path()).unwrap(), vec![12, 20]);
+    }
+
+    #[test]
+    fn prune_with_one_snapshot_keeps_everything_needed() {
+        let d = TempDir::new("snapfile-prune1");
+        write(d.path(), &snap_at(5, 1), FsyncPolicy::Never).unwrap();
+        for base in [0u64, 5] {
+            fs::write(d.path().join(segment_name(base)), b"").unwrap();
+        }
+        prune(d.path(), 5, FsyncPolicy::Never).unwrap();
+        // keep_from = 0 with a single snapshot: nothing is deleted.
+        assert_eq!(list(d.path()).unwrap(), vec![5]);
+        assert_eq!(list_segments(d.path()).unwrap(), vec![0, 5]);
+    }
+}

@@ -8,9 +8,21 @@
 //! * [`wal`] — CRC-framed append-only log of entry appends and
 //!   conflict truncations, recovered by longest-valid-prefix scan;
 //! * [`hardstate`] — tiny atomically-rewritten `(term, voted_for)` file;
+//! * [`crate::snap::file`] — atomically-written state-machine snapshots
+//!   that bound both directory size and recovery time;
 //! * [`Storage`] — the façade the server drives: record mutations as
 //!   they happen, then [`Storage::sync`] as the durability barrier
-//!   before any externalization (vote cast, append acked, entry sent).
+//!   before any externalization (vote cast, append acked, entry sent),
+//!   and [`Storage::install_snapshot`] when the node compacts.
+//!
+//! With compaction the directory holds snapshots plus WAL *segments*
+//! (`wal`, `wal-<base>`, … — see [`crate::snap::file`] for naming), and
+//! recovery is: load the newest fully-valid snapshot, then replay every
+//! segment in ascending base order on top of it (records at or below
+//! the snapshot boundary are skipped), opening the highest-based
+//! segment for appends. A torn newest snapshot is skipped entirely, so
+//! the fallback is automatic: the previous snapshot plus a longer
+//! replay reconstructs the identical state.
 //!
 //! The simulator keeps using the in-memory `DurableState` directly —
 //! virtual time has no disks — so everything here is real-path only.
@@ -22,9 +34,11 @@ use std::io;
 use std::path::{Path, PathBuf};
 use std::str::FromStr;
 
-use crate::raft::log::Entry;
+use crate::raft::log::{Entry, Log};
 use crate::raft::types::{Index, Term};
 use crate::raft::DurableState;
+use crate::snap::file as snapfile;
+use crate::snap::Snapshot;
 use crate::NodeId;
 
 pub mod hardstate;
@@ -67,10 +81,13 @@ impl FromStr for FsyncPolicy {
     }
 }
 
-/// On-disk durable state for one node: `<dir>/wal` + `<dir>/hard_state`.
+/// On-disk durable state for one node: snapshots plus WAL segments plus
+/// `<dir>/hard_state`.
 pub struct Storage {
     dir: PathBuf,
     wal: Wal,
+    /// Base index of the live WAL segment (file `segment_name(seg_base)`).
+    seg_base: Index,
     policy: FsyncPolicy,
     /// Hard state as last durably written — lets us skip rewrites when a
     /// batch leaves `(term, voted_for)` unchanged.
@@ -82,17 +99,88 @@ impl Storage {
     /// [`DurableState`] is what [`crate::raft::Node::recover`] boots
     /// from; its log dirty-tracking is cleared so recovery itself is
     /// never re-persisted.
+    ///
+    /// Recovery order: newest fully-valid snapshot (torn/corrupt files
+    /// silently yield to the one before — [`snapfile::load_newest`]),
+    /// then every WAL segment in ascending base order replayed on top
+    /// (records the snapshot already covers are skipped), the highest
+    /// segment staying open for appends.
     pub fn open(dir: &Path, policy: FsyncPolicy) -> io::Result<(Storage, DurableState)> {
         fs::create_dir_all(dir)?;
-        let (wal, mut log) = Wal::open(&dir.join("wal"), policy)?;
+        let snapshot = snapfile::load_newest(dir)?;
+        let mut log = match &snapshot {
+            Some(s) => Log::with_base(s.meta.last_index, s.meta.last_term, s.meta.last_written_at),
+            None => Log::default(),
+        };
+        let segments = snapfile::list_segments(dir)?;
+        let live = segments.last().copied().unwrap_or(0);
+        for &base in &segments {
+            if base == live {
+                break; // the live segment opens (and self-repairs) below
+            }
+            let bytes = fs::read(dir.join(snapfile::segment_name(base)))?;
+            let (replayed, _) = wal::replay_into(&bytes, log);
+            log = replayed;
+        }
+        let (wal, mut log) =
+            Wal::open_into(&dir.join(snapfile::segment_name(live)), policy, log)?;
         let (hs_term, voted_for) = hardstate::read(dir);
         // The log can be ahead of the hard-state file only in the
         // torn-write window where the entries were never acked, but a
         // term can never exceed what the log proves: take the max.
         let current_term = hs_term.max(log.last_term());
         log.take_dirty(); // replayed entries are already on disk
-        let storage = Storage { dir: dir.to_path_buf(), wal, policy, hs: (current_term, voted_for) };
-        Ok((storage, DurableState { current_term, voted_for, log }))
+        let storage =
+            Storage { dir: dir.to_path_buf(), wal, seg_base: live, policy, hs: (current_term, voted_for) };
+        Ok((storage, DurableState { current_term, voted_for, log, snapshot }))
+    }
+
+    /// Persist a snapshot and rotate the WAL. Called by the driver when
+    /// it drains [`crate::raft::Node::take_pending_snap`], *before* the
+    /// batch's outputs are routed (persist-before-route — externalized
+    /// protocol state must never outlive its durable basis):
+    ///
+    /// 1. write the snapshot file atomically (tmp + fsync + rename +
+    ///    dir fsync, same discipline as [`hardstate`]);
+    /// 2. start a fresh segment at the snapshot boundary seeded with the
+    ///    log's surviving suffix (compaction discarded the old segment's
+    ///    dirty bookkeeping — the rewrite makes the suffix whole again);
+    /// 3. prune snapshots and segments no recovery can need (always
+    ///    keeping the previous snapshot as the torn-newest fallback).
+    pub fn install_snapshot(&mut self, snap: &Snapshot, log: &Log) -> io::Result<()> {
+        snapfile::write(&self.dir, snap, self.policy)?;
+        let base = snap.meta.last_index;
+        if base <= self.seg_base {
+            // Re-delivery of a boundary we already rotated past (e.g. a
+            // follower re-installing after a duplicate transfer):
+            // nothing to rotate, but pruning may still reclaim space.
+            return snapfile::prune(&self.dir, self.seg_base, self.policy);
+        }
+        let path = self.dir.join(snapfile::segment_name(base));
+        // A leftover wal-<base> can only be debris from a rotation that
+        // crashed before completing; the in-memory suffix supersedes it.
+        match fs::remove_file(&path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e),
+        }
+        let (mut wal, _) = Wal::open_into(&path, self.policy, Log::default())?;
+        for (i, e) in log.iter_range(base, log.last_index()) {
+            wal.append(&WalRecord::Append { index: i, entry: *e })?;
+        }
+        wal.sync()?;
+        if self.policy.fsyncs() {
+            fs::File::open(&self.dir)?.sync_all()?;
+        }
+        self.wal = wal;
+        self.seg_base = base;
+        snapfile::prune(&self.dir, base, self.policy)
+    }
+
+    /// Base index of the live WAL segment (== the newest snapshot's
+    /// boundary once a rotation has happened).
+    pub fn segment_base(&self) -> Index {
+        self.seg_base
     }
 
     /// Record a hard-state change. No-op when unchanged since the last
@@ -353,6 +441,128 @@ mod tests {
         m.group(0).append(1, &e(1)).unwrap();
         m.barrier().unwrap();
         assert_eq!(m.syncs(), 0, "per-append fsync leaves nothing for the barrier");
+    }
+
+    // ---------------------------------------------- snapshots & rotation
+
+    fn put_entry(term: u64, i: u64) -> Entry {
+        Entry {
+            term,
+            command: Command::Put { key: i as u32, value: i, payload_bytes: 0 },
+            written_at: TimeInterval::exact(i as i64 * 100),
+        }
+    }
+
+    /// Append entries up to `upto`, then snapshot+rotate at `snap_at`.
+    fn grow_and_snapshot(
+        s: &mut Storage,
+        log: &mut Log,
+        store: &mut crate::kv::Store,
+        upto: u64,
+        snap_at: u64,
+    ) {
+        for i in (log.last_index() + 1)..=upto {
+            let e = put_entry(1, i);
+            log.append(e);
+            s.append(i, &e).unwrap();
+        }
+        s.sync().unwrap();
+        while store.applied() < snap_at {
+            let i = store.applied() + 1;
+            store.apply(&Command::Put { key: i as u32, value: i, payload_bytes: 0 });
+        }
+        log.compact_to(snap_at);
+        let snap = crate::snap::encode(
+            store,
+            crate::snap::SnapMeta {
+                group: 0,
+                last_index: log.base(),
+                last_term: log.base_term(),
+                last_written_at: log.base_written_at(),
+                applied: store.applied(),
+            },
+        );
+        s.install_snapshot(&snap, log).unwrap();
+    }
+
+    #[test]
+    fn snapshot_rotation_bounds_recovery_to_the_suffix() {
+        let d = TempDir::new("storage-snap-rotate");
+        {
+            let (mut s, _) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+            let mut log = Log::default();
+            let mut store = crate::kv::Store::new();
+            grow_and_snapshot(&mut s, &mut log, &mut store, 10, 6);
+            assert_eq!(s.segment_base(), 6);
+        }
+        let (s2, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(s2.segment_base(), 6);
+        let snap = ds.snapshot.expect("snapshot recovered");
+        assert_eq!(snap.meta.last_index, 6);
+        assert_eq!(ds.log.base(), 6);
+        assert_eq!(ds.log.last_index(), 10, "suffix rode the fresh segment");
+        for i in 7..=10u64 {
+            assert_eq!(ds.log.get(i).unwrap().command, put_entry(1, i).command);
+        }
+        let c = crate::snap::decode(&snap.data).unwrap();
+        assert_eq!(c.meta.applied, 6);
+        assert_eq!(c.pairs.len(), 6);
+    }
+
+    #[test]
+    fn torn_newest_snapshot_falls_back_to_previous_plus_longer_replay() {
+        let d = TempDir::new("storage-snap-fallback");
+        {
+            let (mut s, _) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+            let mut log = Log::default();
+            let mut store = crate::kv::Store::new();
+            grow_and_snapshot(&mut s, &mut log, &mut store, 5, 4);
+            grow_and_snapshot(&mut s, &mut log, &mut store, 9, 8);
+            // Retention: two snapshots, and the base-0 segment that only
+            // recovery-from-before-snapshot-4 would need is gone.
+            assert_eq!(snapfile::list(d.path()).unwrap(), vec![4, 8]);
+            assert_eq!(snapfile::list_segments(d.path()).unwrap(), vec![4, 8]);
+        }
+        // Intact: recovery uses the newest snapshot.
+        let (_, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(ds.snapshot.as_ref().unwrap().meta.last_index, 8);
+        assert_eq!(ds.log.base(), 8);
+        assert_eq!(ds.log.last_index(), 9);
+        // Tear the newest snapshot: silent fallback to snapshot 4 plus a
+        // longer replay over both segments — same log tail, older base.
+        let p = d.path().join(snapfile::snap_name(8));
+        let full = fs::read(&p).unwrap();
+        fs::write(&p, &full[..full.len() / 3]).unwrap();
+        let (_, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(ds.snapshot.as_ref().unwrap().meta.last_index, 4);
+        assert_eq!(ds.log.base(), 4);
+        assert_eq!(ds.log.last_index(), 9);
+        for i in 5..=9u64 {
+            assert_eq!(ds.log.get(i).unwrap().command, put_entry(1, i).command);
+        }
+    }
+
+    #[test]
+    fn appends_after_rotation_land_in_the_live_segment() {
+        let d = TempDir::new("storage-snap-append");
+        {
+            let (mut s, _) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+            let mut log = Log::default();
+            let mut store = crate::kv::Store::new();
+            grow_and_snapshot(&mut s, &mut log, &mut store, 6, 6);
+            // Post-rotation appends go to wal-6.
+            for i in 7..=8u64 {
+                let e = put_entry(2, i);
+                log.append(e);
+                s.append(i, &e).unwrap();
+            }
+            s.sync().unwrap();
+        }
+        let (_, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(ds.log.base(), 6);
+        assert_eq!(ds.log.last_index(), 8);
+        assert_eq!(ds.log.get(8).unwrap().term, 2);
+        assert_eq!(ds.current_term, 2, "term refloored from the recovered suffix");
     }
 
     #[test]

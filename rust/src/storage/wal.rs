@@ -90,10 +90,17 @@ impl Wal {
     /// the longest-valid-prefix [`Log`]. The file is truncated back to
     /// that prefix so a torn tail can never corrupt later appends.
     pub fn open(path: &Path, policy: FsyncPolicy) -> io::Result<(Wal, Log)> {
+        Wal::open_into(path, policy, Log::new())
+    }
+
+    /// As [`Wal::open`], but replay on top of `log` — a log already
+    /// positioned at this segment's snapshot base (or further along,
+    /// when chaining frozen segments after a torn-snapshot fallback).
+    pub fn open_into(path: &Path, policy: FsyncPolicy, log: Log) -> io::Result<(Wal, Log)> {
         let mut file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
         let mut bytes = Vec::new();
         file.read_to_end(&mut bytes)?;
-        let (log, valid_len) = replay(&bytes);
+        let (log, valid_len) = replay_into(&bytes, log);
         if valid_len < bytes.len() as u64 {
             file.set_len(valid_len)?;
             if policy.fsyncs() {
@@ -190,12 +197,16 @@ fn decode_record(payload: &[u8]) -> Option<WalRecord> {
     Some(rec)
 }
 
-/// Scan `bytes`, applying every valid record in order; returns the
-/// recovered log and the byte length of the valid prefix. Never panics:
-/// any malformed suffix — torn tail, bad CRC, bad payload, index gap —
+/// Scan `bytes`, applying every valid record in order on top of `log`;
+/// returns the recovered log and the byte length of the valid prefix.
+/// Never panics: any malformed suffix — torn tail, bad CRC, bad
+/// payload, index gap, or a truncate pointing past the recovered tip —
 /// simply ends the scan.
-fn replay(bytes: &[u8]) -> (Log, u64) {
-    let mut log = Log::new();
+///
+/// Snapshot chaining: records at or below `log.base()` describe state
+/// the snapshot already captures and are skipped (not errors — a frozen
+/// pre-snapshot segment legitimately overlaps the snapshot prefix).
+pub fn replay_into(bytes: &[u8], mut log: Log) -> (Log, u64) {
     let mut pos = 0usize;
     loop {
         let Some(hdr) = bytes.get(pos..pos + 8) else { break };
@@ -214,12 +225,19 @@ fn replay(bytes: &[u8]) -> (Log, u64) {
                 if index == 0 || index > log.last_index() + 1 {
                     break; // gap: cannot have been written by a correct node
                 }
-                if index <= log.last_index() {
-                    log.truncate_after(index - 1); // conflict overwrite
+                if index > log.base() {
+                    if index <= log.last_index() {
+                        log.truncate_after(index - 1); // conflict overwrite
+                    }
+                    log.append(entry);
                 }
-                log.append(entry);
             }
-            WalRecord::Truncate { after } => log.truncate_after(after),
+            WalRecord::Truncate { after } => {
+                if after > log.last_index() {
+                    break; // forward truncate: cannot have been written by a correct node
+                }
+                log.truncate_after(after);
+            }
         }
         pos += 8 + len;
     }
@@ -333,6 +351,65 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let (_, log) = Wal::open(&p, FsyncPolicy::Group).unwrap();
         assert!(log.last_index() < 5, "corrupted record and successors dropped");
+    }
+
+    #[test]
+    fn forward_truncate_record_is_rejected_at_prefix_boundary() {
+        // Regression: a corrupt-but-CRC-valid Truncate whose `after`
+        // points PAST the recovered prefix cannot have been written by a
+        // correct node (truncations only ever rewind). It must end the
+        // scan — not be applied blindly — and everything after it must
+        // be dropped with the file truncated back to the valid prefix.
+        let d = tmp("wal-fwd-trunc");
+        let p = d.path().join("wal");
+        {
+            let (mut w, _) = Wal::open(&p, FsyncPolicy::Group).unwrap();
+            for i in 1..=3u64 {
+                w.append(&WalRecord::Append { index: i, entry: e(1, i as i64) }).unwrap();
+            }
+            // The poison pill: truncate "after 9" on a 3-entry log.
+            w.append(&WalRecord::Truncate { after: 9 }).unwrap();
+            // A record behind the pill: must NOT survive recovery.
+            w.append(&WalRecord::Append { index: 4, entry: e(2, 44) }).unwrap();
+            w.sync().unwrap();
+        }
+        let (_, log) = Wal::open(&p, FsyncPolicy::Group).unwrap();
+        assert_eq!(log.last_index(), 3, "forward truncate must stop the scan");
+        assert_eq!(log.get(3).unwrap().term, 1);
+        // The file was rewound to the 3-record valid prefix.
+        let (_, log) = Wal::open(&p, FsyncPolicy::Group).unwrap();
+        assert_eq!(log.last_index(), 3);
+    }
+
+    #[test]
+    fn replay_into_skips_snapshot_covered_prefix() {
+        // A frozen pre-snapshot segment overlaps the snapshot prefix;
+        // chained replay must skip the covered records and apply the
+        // tail on top of the snapshot base.
+        let d = tmp("wal-chain");
+        let p = d.path().join("wal");
+        {
+            let (mut w, _) = Wal::open(&p, FsyncPolicy::Group).unwrap();
+            for i in 1..=6u64 {
+                w.append(&WalRecord::Append { index: i, entry: e(1, i as i64) }).unwrap();
+            }
+            // An old conflict entirely below the future snapshot point.
+            w.append(&WalRecord::Truncate { after: 4 }).unwrap();
+            w.append(&WalRecord::Append { index: 5, entry: e(2, 55) }).unwrap();
+            w.sync().unwrap();
+        }
+        let bytes = std::fs::read(&p).unwrap();
+        // Snapshot at index 5 (term 2): replay the same segment on top.
+        let base = Log::with_base(5, 2, TimeInterval::exact(55));
+        let (log, _) = replay_into(&bytes, base);
+        assert_eq!(log.base(), 5);
+        assert_eq!(log.last_index(), 5, "post-truncate tip, prefix from snapshot");
+        // And a base further back replays the suffix normally.
+        let base = Log::with_base(3, 1, TimeInterval::exact(3));
+        let (log, _) = replay_into(&bytes, base);
+        assert_eq!(log.last_index(), 5);
+        assert_eq!(log.get(5).unwrap().term, 2);
+        assert_eq!(log.get(4).unwrap().term, 1);
     }
 
     #[test]

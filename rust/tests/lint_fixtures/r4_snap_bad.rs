@@ -1,0 +1,14 @@
+// Lint fixture (never compiled): R4 must flag panic paths in the
+// snapshot codec too — InstallSnapshot chunks are untrusted wire
+// bytes, exactly like server/wire.rs frames. Linted under
+// `snap/mod.rs`.
+
+pub fn decode_snapshot_header(b: &[u8]) -> (u32, u64) {
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    if magic != 0x4E53_474C {
+        panic!("bad snapshot magic {magic:#x}");
+    }
+    let last_index = b.get(5..13).expect("boundary index");
+    let _ = last_index;
+    (magic, 0)
+}

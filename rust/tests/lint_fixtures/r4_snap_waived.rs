@@ -1,0 +1,10 @@
+// Lint fixture (never compiled): the waivered twin of r4_snap_bad.rs.
+// (Real snap/mod.rs has zero waivers: the codec is fully panic-free
+// via the Dec cursor. The waiver form exists for hypothetical
+// fixed-size trusted prefixes.)
+
+pub fn decode_magic(b: &[u8; 4]) -> u8 {
+    // lint:allow(R4): fixed-size array ref, bound checked by the type, fixture only
+    let first = b[0];
+    first
+}

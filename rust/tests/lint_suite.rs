@@ -30,12 +30,15 @@ fn lint_fixture(fixture: &str, logical_path: &str) -> Vec<Finding> {
     lint_source(logical_path, &src)
 }
 
-/// (bad fixture, waived twin, logical path, rule) — one row per rule.
-const MATRIX: [(&str, &str, &str, &str); 5] = [
+/// (bad fixture, waived twin, logical path, rule) — one row per rule,
+/// plus one per extra path a rule is scoped to (R4 covers both
+/// untrusted-byte decoders).
+const MATRIX: [(&str, &str, &str, &str); 6] = [
     ("r1_bad.rs", "r1_waived.rs", "raft/tick.rs", "R1"),
     ("r2_bad.rs", "r2_waived.rs", "sim/tally.rs", "R2"),
     ("r3_bad.rs", "r3_waived.rs", "metrics.rs", "R3"),
     ("r4_bad.rs", "r4_waived.rs", "server/wire.rs", "R4"),
+    ("r4_snap_bad.rs", "r4_snap_waived.rs", "snap/mod.rs", "R4"),
     ("r5_bad.rs", "r5_waived.rs", "server/server.rs", "R5"),
 ];
 

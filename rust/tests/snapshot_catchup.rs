@@ -1,0 +1,117 @@
+//! Lagging-follower catch-up over the real TCP cluster: with an
+//! aggressive compaction threshold, a follower that misses enough of
+//! the log can only rejoin through the chunked InstallSnapshot path —
+//! and the whole run must still linearize.
+//!
+//! The drill: 3 durable nodes under open-loop client load, kill one
+//! follower, let the leader compact past its log, respawn it from its
+//! data dir, and require (a) the leader actually took snapshots, (b)
+//! the follower actually installed one (observed via the live metrics
+//! registry, i.e. exactly what `leaseguard stat` reports), (c) one
+//! linearizable history across the outage, and (d) the follower's data
+//! dir recovers offline as snapshot + WAL suffix with its hard state
+//! intact — the lease is re-derived from the timestamped log, never
+//! resurrected from a snapshot (a resurrected lease would surface here
+//! as a stale read the checker flags).
+
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use leaseguard::client::run_open_loop;
+use leaseguard::config::{ConsistencyMode, Params};
+use leaseguard::figures::realcluster::RealCluster;
+use leaseguard::linearizability;
+use leaseguard::storage::{FsyncPolicy, Storage};
+use leaseguard::testkit::TempDir;
+
+#[test]
+fn lagging_follower_catches_up_via_snapshot_install() {
+    let seed: u64 =
+        std::env::var("CRASHTEST_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7);
+    let mut p = Params::default();
+    p.consistency = ConsistencyMode::LeaseGuard;
+    p.nodes = 3;
+    p.election_timeout_us = 200_000;
+    p.election_jitter_us = 150_000;
+    p.heartbeat_us = 50_000;
+    p.lease_duration_us = 400_000;
+    p.duration_us = 2_200_000;
+    p.interarrival_us = 700.0;
+    p.value_bytes = 64;
+    p.seed = seed;
+    // Aggressive on purpose: the outage below spans hundreds of writes,
+    // so the leader's log base is guaranteed to move past the victim.
+    p.snapshot_threshold = 32;
+
+    let dirs: Vec<TempDir> =
+        (0..p.nodes).map(|i| TempDir::new(&format!("snap-catchup-{seed}-{i}"))).collect();
+    let paths: Vec<PathBuf> = dirs.iter().map(|d| d.path().to_path_buf()).collect();
+    let mut cluster =
+        RealCluster::spawn_durable(&p, Duration::ZERO, None, &paths, FsyncPolicy::Group)
+            .expect("spawn");
+    let leader = cluster.wait_for_leader(Duration::from_secs(10)).expect("leader");
+    let victim = (leader + 1) % p.nodes;
+
+    let addrs = cluster.addrs.clone();
+    let applies = cluster.applies.clone();
+    let pc = p.clone();
+    let client = thread::spawn(move || run_open_loop(&addrs, &pc, Some(applies)));
+
+    // Let the workload build some log, then take the follower down for
+    // long enough that compaction passes it by.
+    thread::sleep(Duration::from_millis(300));
+    cluster.kill(victim);
+    thread::sleep(Duration::from_millis(700));
+    cluster.respawn(victim).expect("respawn");
+
+    // The respawned follower must report an installed snapshot — the
+    // same counter `leaseguard stat --json` exposes. Polling the live
+    // registry (rather than the final report) pins the wire path: a
+    // follower that silently caught up via plain AppendEntries would
+    // hang here.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let installed =
+            cluster.handles[victim].as_ref().unwrap().status.group(0).snapshots_installed.get();
+        if installed > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "follower never installed a snapshot");
+        thread::sleep(Duration::from_millis(25));
+    }
+
+    let rep = client.join().unwrap().expect("client");
+    let taken: u64 = cluster
+        .handles
+        .iter()
+        .flatten()
+        .map(|h| h.status.group(0).snapshots_taken.get())
+        .sum();
+    assert!(taken > 0, "threshold 32 under this load must trigger compaction");
+    let base_seen =
+        cluster.handles[victim].as_ref().unwrap().status.group(0).last_snapshot_index.get();
+    assert!(base_seen > 0, "victim's log base never advanced past zero");
+    cluster.shutdown();
+
+    // One linearizable history across kill, catch-up, and rejoin.
+    let viol = linearizability::check(&rep.history);
+    assert!(viol.is_empty(), "history not linearizable: {:?}", viol.first());
+
+    // Offline recovery of the victim's dir: snapshot + WAL suffix, hard
+    // state preserved. This is the "compacted node reboots" half of the
+    // drill, without spinning the server back up.
+    let (_, ds) = Storage::open(&paths[victim], FsyncPolicy::Group).unwrap();
+    let snap = ds.snapshot.expect("victim dir holds a snapshot after catch-up");
+    assert!(snap.meta.last_index > 0);
+    assert_eq!(ds.log.base(), snap.meta.last_index, "log base must match the snapshot");
+    assert!(
+        ds.log.last_index() >= ds.log.base(),
+        "suffix never behind the base: {} < {}",
+        ds.log.last_index(),
+        ds.log.base()
+    );
+    assert!(ds.current_term > 0, "hard state (term) lost by snapshot recovery");
+}

@@ -1,0 +1,161 @@
+//! Snapshot + segmented-WAL recovery under corruption: tearing the
+//! newest snapshot at EVERY byte offset must silently fall back to the
+//! previous snapshot plus a longer segment replay — never panic, never
+//! lose the log suffix, never block subsequent appends.
+//!
+//! Deterministic rotation/recovery cases live next to the
+//! implementation (`rust/src/storage/`, `rust/src/snap/`); this suite
+//! drives the public `Storage` API the way a rebooting server does.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)] // see Cargo.toml [lints]: unwraps here are test/driver/startup paths, not untrusted input
+
+use std::path::Path;
+
+use leaseguard::clock::TimeInterval;
+use leaseguard::kv::{Command, Store};
+use leaseguard::prob::Rng;
+use leaseguard::raft::{Entry, Log};
+use leaseguard::snap::{self, file as snapfile};
+use leaseguard::storage::{FsyncPolicy, Storage};
+use leaseguard::testkit::TempDir;
+
+fn put_entry(term: u64, i: u64) -> Entry {
+    Entry {
+        term,
+        command: Command::Put { key: i as u32, value: i, payload_bytes: 0 },
+        written_at: TimeInterval::exact(i as i64 * 100),
+    }
+}
+
+/// Append entries up to `upto`, then snapshot + rotate at `snap_at`
+/// (the same sequence a running node performs when its compaction
+/// threshold fires).
+fn grow_and_snapshot(s: &mut Storage, log: &mut Log, store: &mut Store, upto: u64, snap_at: u64) {
+    for i in (log.last_index() + 1)..=upto {
+        let e = put_entry(1, i);
+        log.append(e);
+        s.append(i, &e).unwrap();
+    }
+    s.sync().unwrap();
+    while store.applied() < snap_at {
+        let i = store.applied() + 1;
+        store.apply(&Command::Put { key: i as u32, value: i, payload_bytes: 0 });
+    }
+    log.compact_to(snap_at);
+    let snap = snap::encode(
+        store,
+        snap::SnapMeta {
+            group: 0,
+            last_index: log.base(),
+            last_term: log.base_term(),
+            last_written_at: log.base_written_at(),
+            applied: store.applied(),
+        },
+    );
+    s.install_snapshot(&snap, log).unwrap();
+}
+
+/// Build the canonical two-snapshot directory: entries 1..=12 with
+/// snapshots at 4 and 8. After retention pruning the directory holds
+/// `snap-4, snap-8, wal-4 (5..=8), wal-8 (9..=12, live)`.
+fn build_two_snapshot_dir(dir: &Path) {
+    let (mut s, _) = Storage::open(dir, FsyncPolicy::Never).unwrap();
+    let mut log = Log::default();
+    let mut store = Store::new();
+    grow_and_snapshot(&mut s, &mut log, &mut store, 8, 4);
+    grow_and_snapshot(&mut s, &mut log, &mut store, 12, 8);
+    assert_eq!(s.segment_base(), 8);
+    assert_eq!(snapfile::list(dir).unwrap(), vec![4, 8]);
+    assert_eq!(snapfile::list_segments(dir).unwrap(), vec![4, 8]);
+}
+
+/// Open the dir and assert the invariant every recovery must provide:
+/// base at `want_base`, full suffix to 12, entries intact.
+fn assert_recovers(dir: &Path, want_base: u64, ctx: &str) {
+    let (_, ds) = Storage::open(dir, FsyncPolicy::Never).unwrap();
+    assert_eq!(ds.log.base(), want_base, "{ctx}: wrong recovery base");
+    assert_eq!(ds.log.last_index(), 12, "{ctx}: lost the log suffix");
+    for i in (want_base + 1)..=12 {
+        assert_eq!(ds.log.get(i).unwrap(), &put_entry(1, i), "{ctx}: entry {i}");
+    }
+    let snap = ds.snapshot.unwrap_or_else(|| panic!("{ctx}: no snapshot recovered"));
+    assert_eq!(snap.meta.last_index, want_base, "{ctx}: snapshot/base mismatch");
+    let c = snap::decode(&snap.data).unwrap_or_else(|e| panic!("{ctx}: {e:?}"));
+    assert_eq!(c.meta.applied, want_base, "{ctx}: snapshot applied counter");
+    assert_eq!(c.pairs.len(), want_base as usize, "{ctx}: snapshot key count");
+}
+
+#[test]
+fn torn_newest_snapshot_every_cut_point_falls_back() {
+    // Cut the newest snapshot file at EVERY byte offset: recovery must
+    // always yield base 4 (the previous snapshot) with the full suffix
+    // replayed from the retained segments — except the uncut file,
+    // which must recover at base 8. Exhaustive, not sampled — the file
+    // is only a few hundred bytes.
+    let d = TempDir::new("snaprec-cuts");
+    build_two_snapshot_dir(d.path());
+    let newest = d.path().join(snapfile::snap_name(8));
+    let full = std::fs::read(&newest).unwrap();
+    for cut in 0..=full.len() {
+        std::fs::write(&newest, &full[..cut]).unwrap();
+        let want = if cut == full.len() { 8 } else { 4 };
+        assert_recovers(d.path(), want, &format!("cut {cut}/{}", full.len()));
+    }
+}
+
+#[test]
+fn bit_rot_in_newest_snapshot_always_falls_back() {
+    // Any single-bit flip lands in the CRC, the length, or the payload:
+    // all three make the file invisible and recovery must fall back —
+    // returning changed-but-valid data is the one unacceptable outcome.
+    let d = TempDir::new("snaprec-rot");
+    build_two_snapshot_dir(d.path());
+    let newest = d.path().join(snapfile::snap_name(8));
+    let full = std::fs::read(&newest).unwrap();
+    let mut rng = Rng::new(0xB17_207);
+    for case in 0..200 {
+        let mut bad = full.clone();
+        let i = rng.below(bad.len() as u64) as usize;
+        bad[i] ^= 1 << rng.below(8);
+        std::fs::write(&newest, &bad).unwrap();
+        assert_recovers(d.path(), 4, &format!("flip case {case} at byte {i}"));
+    }
+}
+
+#[test]
+fn appends_continue_cleanly_after_fallback_recovery() {
+    // Recovery from a torn newest snapshot leaves a fully writable
+    // store: new appends land in the live segment and survive another
+    // reboot (still under the fallback snapshot).
+    let d = TempDir::new("snaprec-continue");
+    build_two_snapshot_dir(d.path());
+    let newest = d.path().join(snapfile::snap_name(8));
+    let full = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &full[..full.len() / 2]).unwrap();
+    {
+        let (mut s, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+        assert_eq!(ds.log.base(), 4);
+        for i in 13..=16u64 {
+            s.append(i, &put_entry(1, i)).unwrap();
+        }
+        s.sync().unwrap();
+    }
+    let (_, ds) = Storage::open(d.path(), FsyncPolicy::Never).unwrap();
+    assert_eq!(ds.log.base(), 4);
+    assert_eq!(ds.log.last_index(), 16);
+    for i in 5..=16u64 {
+        assert_eq!(ds.log.get(i).unwrap(), &put_entry(1, i));
+    }
+}
+
+#[test]
+fn stray_tmp_snapshot_is_ignored_at_recovery() {
+    // A crash between tmp write and rename leaves `snap-*.tmp` debris;
+    // it must neither be loaded nor shadow the real newest snapshot.
+    let d = TempDir::new("snaprec-tmp");
+    build_two_snapshot_dir(d.path());
+    let tmp = d.path().join(format!("{}.tmp", snapfile::snap_name(20)));
+    std::fs::write(&tmp, b"half-written garbage").unwrap();
+    assert_recovers(d.path(), 8, "tmp debris present");
+    assert_eq!(snapfile::list(d.path()).unwrap(), vec![4, 8], "tmp file listed as a snapshot");
+}

@@ -19,6 +19,11 @@
 #      groups=2; `leaseguard stat --json` against each must return the
 #      per-group lease-accounting counters, and some server must report
 #      leadership of each group.
+#   8. compaction smoke — durable serve trio with a tiny
+#      --snapshot-threshold under open-loop client load; kill -9 one
+#      node and respawn it from its data dir: `stat --json` must show
+#      snapshots taken while serving and a nonzero snapshot base on the
+#      rebooted node (snapshot + WAL-suffix recovery, not full replay).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -76,6 +81,56 @@ if [[ "${1:-}" != "--fast" ]]; then
     cleanup
     trap - EXIT
     echo "stat smoke: ok"
+
+    echo "== compaction smoke (snapshot + kill/respawn recovery) =="
+    # Three durable servers with a tiny compaction threshold, an
+    # open-loop client writing far past it, then a hard kill + respawn
+    # of one server from its data dir: `stat` must show snapshots taken
+    # while serving, and the respawned process must report a nonzero
+    # log base immediately after recovery (snapshot + WAL suffix, not a
+    # full-history replay).
+    CPEERS="127.0.0.1:7461,127.0.0.1:7462,127.0.0.1:7463"
+    CDATA=$(mktemp -d)
+    CPIDS=()
+    ccleanup() { kill "${CPIDS[@]}" 2>/dev/null || true; rm -rf "$CDATA"; }
+    trap ccleanup EXIT
+    for i in 0 1 2; do
+        "$BIN" serve --node "$i" --peers "$CPEERS" \
+            --data-dir "$CDATA/n$i" --fsync group --snapshot-threshold 16 &
+        CPIDS+=($!)
+    done
+    "$BIN" client --peers "$CPEERS" \
+        --param duration_us=1500000 --param interarrival_us=500
+    taken=""
+    for _ in $(seq 1 50); do
+        sleep 0.2
+        if "$BIN" stat --addr 127.0.0.1:7461 --json 2>/dev/null \
+                | grep -Eq '"snapshots_taken": [1-9]'; then
+            taken=yes
+            break
+        fi
+    done
+    [[ -n "$taken" ]] || { echo "compaction smoke: no snapshot taken under load"; exit 1; }
+    # Hard kill node 0 and respawn it from its data dir on the same port.
+    kill -9 "${CPIDS[0]}" 2>/dev/null || true
+    wait "${CPIDS[0]}" 2>/dev/null || true
+    sleep 0.5
+    "$BIN" serve --node 0 --peers "$CPEERS" \
+        --data-dir "$CDATA/n0" --fsync group --snapshot-threshold 16 &
+    CPIDS[0]=$!
+    recovered=""
+    for _ in $(seq 1 50); do
+        sleep 0.2
+        if "$BIN" stat --addr 127.0.0.1:7461 --json 2>/dev/null \
+                | grep -Eq '"last_snapshot_index": [1-9]'; then
+            recovered=yes
+            break
+        fi
+    done
+    [[ -n "$recovered" ]] || { echo "compaction smoke: respawned node shows no snapshot base"; exit 1; }
+    ccleanup
+    trap - EXIT
+    echo "compaction smoke: ok"
 fi
 
 echo "ci: all gates passed"
